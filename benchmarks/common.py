@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: MSE metric, paired stats, timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+from scipy import stats
+
+from repro.core import rsvd, srsvd
+
+
+def pca_mse(X: np.ndarray, U: np.ndarray, mu: np.ndarray) -> float:
+    """Paper metric: mean squared L2 column reconstruction error of the
+    mean-centered matrix projected on U."""
+    Xb = X - mu[:, None]
+    R = Xb - U @ (U.T @ Xb)
+    return float(np.mean(np.sum(R * R, axis=0)))
+
+
+def per_column_errors(X, U, mu):
+    Xb = X - mu[:, None]
+    R = Xb - U @ (U.T @ Xb)
+    return np.sum(R * R, axis=0)
+
+
+def run_pair(X: np.ndarray, k: int, q: int = 0, seed: int = 0,
+             K: int | None = None):
+    """One (S-RSVD, RSVD) pair on the same data with the same key.
+
+    S-RSVD shifts by the column mean (implicit); RSVD factorizes the raw
+    off-center matrix (the paper's comparison, §5)."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    mu = X.mean(axis=1)
+    Xj = jnp.asarray(X)
+    rs = srsvd(Xj, jnp.asarray(mu), k, K=K, q=q, key=key)
+    rr = rsvd(Xj, k, K=K, q=q, key=key)
+    mse_s = pca_mse(X, np.asarray(rs.U), mu)
+    # RSVD of the raw matrix: reconstruction evaluated against the same
+    # centered target (the paper evaluates both on centered data)
+    mse_r = pca_mse(X, np.asarray(rr.U), mu)
+    return mse_s, mse_r, rs, rr
+
+
+def paired_stats(a: list[float], b: list[float]):
+    """Paired t-test (H0: no difference) + win rate of a over b."""
+    a, b = np.asarray(a), np.asarray(b)
+    if np.allclose(a, b):
+        return {"p": 1.0, "wr_a": 0.5, "wr_b": 0.5}
+    t, p = stats.ttest_rel(a, b)
+    wins = float(np.mean(a < b))
+    return {"p": float(p), "wr_a": wins, "wr_b": 1.0 - wins,
+            "mean_a": float(a.mean()), "mean_b": float(b.mean())}
+
+
+def time_call(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)                           # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else None
+    return (time.perf_counter() - t0) / repeats * 1e6   # us

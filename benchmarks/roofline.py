@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run JSON (results/dryrun.json).
+
+Prints the three terms (compute/memory/collective, seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the MFU upper bound for
+every (arch x shape x mesh) baseline cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+DEFAULT = os.path.join(RESULTS, "dryrun.json")
+
+
+def load(path=DEFAULT):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results, mesh="16x16"):
+    rows = []
+    for r in results:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        rows.append((
+            f"{r['arch']}/{r['shape']}",
+            f"{rl['compute_s']:.3f}",
+            f"{rl['memory_s']:.3f}",
+            f"{rl['collective_s']:.3f}",
+            rl["dominant"],
+            f"{r['useful_flops_ratio']:.2f}",
+            f"{rl['mfu_upper_bound']:.3f}",
+        ))
+    return rows
+
+
+def main(rows_out):
+    variants = [("baseline", os.path.join(RESULTS, "dryrun_baseline.json")),
+                ("optimized", os.path.join(RESULTS, "dryrun_opt.json")),
+                ("", DEFAULT)]
+    found = [(n, p) for n, p in variants if os.path.exists(p)]
+    if not found:
+        rows_out.append(("roofline", "SKIPPED",
+                         "run python -m repro.launch.dryrun --all first"))
+        return
+    hdr = ("cell", "compute_s", "memory_s", "collective_s", "dominant",
+           "useful", "mfu_ub")
+    for name, path in found:
+        results = load(path)
+        print(f"# roofline table: {name or os.path.basename(path)}")
+        print(",".join(hdr))
+        for mesh in ("16x16", "2x16x16"):
+            for row in table(results, mesh):
+                print(",".join([f"{mesh}:{row[0]}"] + list(row[1:])))
+        ok = sum(r.get("status") == "ok" for r in results)
+        rows_out.append((f"roofline_cells_ok_{name}", str(ok),
+                         "see table above"))
+
+
+if __name__ == "__main__":
+    rows = []
+    main(rows)

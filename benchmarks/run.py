@@ -1,0 +1,50 @@
+"""Benchmark driver: one section per paper table/figure + framework
+benches.  Prints ``name,value,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,table1_images,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
+                        roofline, table1_images, table1_words)
+
+SECTIONS = {
+    "fig1": fig1_random.main,
+    "table1_images": table1_images.main,
+    "table1_words": table1_words.main,
+    "compress": compress_bench.main,
+    "dist_svd": dist_svd_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SECTIONS))
+
+    print("name,value,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        rows: list[tuple] = []
+        try:
+            SECTIONS[name](rows)
+        except Exception as e:  # report loudly, keep going
+            failures += 1
+            rows.append((f"{name}_ERROR", type(e).__name__, str(e)[:120]))
+        for row in rows:
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"{name}_wall_s,{time.time() - t0:.1f},", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

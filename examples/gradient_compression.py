@@ -1,0 +1,75 @@
+"""Cross-pod S-RSVD gradient compression, end to end on 8 fake devices.
+
+Trains the same tiny model twice across a (pod=2, data=2, model=2) mesh —
+once with plain gradient all-reduce, once with rank-8 shifted-randomized-
+SVD factor exchange + error feedback — and reports the loss trajectories
+and the DCN byte ratio.
+
+    python examples/gradient_compression.py        # sets XLA_FLAGS itself
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeCfg, get_config
+from repro.data import DataPipeline
+from repro.launch.steps import make_step
+from repro.models import init_params
+from repro.optim import AdamWConfig, CompressConfig, adamw_init
+from repro.optim.compress import comm_bytes
+
+
+def run(compress: bool, steps=25):
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    cfg = get_config("yi_6b", smoke=True)
+    cfg = dataclasses.replace(cfg, d_model=128, d_ff=256, num_layers=2)
+    shape = ShapeCfg("t", 32, 8, "train")
+    ccfg = CompressConfig(rank=8, min_dim=64, min_numel=4096) \
+        if compress else None
+    bundle = make_step(cfg, mesh, shape,
+                       adamw=AdamWConfig(lr=1e-2, warmup_steps=5),
+                       compress=ccfg, donate=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    err = (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        bundle.arg_sds[2]) if compress else None)
+    pipe = DataPipeline(cfg, batch=8, seq=32, seed=0)
+    losses = []
+    for step in range(steps):
+        batch = pipe.batch_at(step)
+        if compress:
+            params, opt, err, m = bundle.fn(params, opt, err, batch)
+        else:
+            params, opt, m = bundle.fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    if compress:
+        acct = comm_bytes(ccfg, params)
+        print(f"  DCN bytes/step: {acct['compressed_bytes']:,} vs "
+              f"{acct['plain_bytes']:,} plain "
+              f"({acct['ratio']:.1f}x reduction)")
+    return losses
+
+
+def main():
+    print("plain cross-pod all-reduce:")
+    base = run(False)
+    print(f"  loss: {base[0]:.4f} -> {base[-1]:.4f}")
+    print("S-RSVD rank-8 factor exchange + error feedback:")
+    comp = run(True)
+    print(f"  loss: {comp[0]:.4f} -> {comp[-1]:.4f}")
+    gap = abs(comp[-1] - base[-1])
+    print(f"final-loss gap: {gap:.4f} "
+          f"({'OK — compression tracks plain training' if gap < 0.5 else 'diverged'})")
+
+
+if __name__ == "__main__":
+    main()

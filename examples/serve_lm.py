@@ -1,0 +1,24 @@
+"""Serve a small LM with batched requests (continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch yi_6b]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--smoke",
+                "--requests", "6", "--batch", "3",
+                "--prompt-len", "12", "--max-new", "8",
+                "--max-len", "48"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Checkpointing: atomic, resharding-on-restore, keep-last-N, async.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * atomic — a checkpoint directory appears only fully written (tmp dir +
+    fsync'd manifest + os.rename), so a crash mid-save never corrupts the
+    restore target;
+  * elastic — arrays are stored with their *logical* tree paths; restore
+    device_puts them onto whatever shardings the (possibly different-
+    shaped) new mesh dictates, so training resumes after losing a pod;
+  * async — ``CheckpointManager.save(..., blocking=False)`` snapshots to
+    host memory on the caller's thread (cheap) and writes on a background
+    thread, overlapping I/O with the next train steps;
+  * keep-last-N garbage collection.
+
+Storage is one ``.npy`` per leaf under ``step_XXXXXXXX/`` plus a JSON
+manifest (step, tree paths, shapes, dtypes).  On a real multi-host fleet
+each host writes only its addressable shards; that refinement is a local
+change inside ``_gather_to_host``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _gather_to_host(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def save_checkpoint(root: str, step: int, tree, *, keep: int = 3,
+                    extra_meta: dict | None = None) -> str:
+    """Blocking atomic save.  Returns the checkpoint directory."""
+    os.makedirs(root, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=root)
+    try:
+        names = []
+        for i, (path, leaf) in enumerate(flat):
+            name = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, name), np.asarray(leaf),
+                    allow_pickle=False)
+            names.append({"name": name, "path": _path_str(path),
+                          "shape": list(np.shape(leaf)),
+                          "dtype": str(np.asarray(leaf).dtype)})
+        manifest = {"step": step, "leaves": names,
+                    "meta": extra_meta or {}}
+        mpath = os.path.join(tmp, MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(root, keep)
+    return final
+
+
+def _gc(root: str, keep: int):
+    steps = sorted(d for d in os.listdir(root) if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(root)
+             if d.startswith("step_") and os.path.exists(
+                 os.path.join(root, d, MANIFEST))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: str, step: int, tree_like, *,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    ``shardings``: optional matching pytree of NamedShardings (or None
+    leaves) — this is the elastic-resharding path: the stored full arrays
+    are device_put onto the *new* mesh's shardings regardless of the mesh
+    they were saved under."""
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(tree_like)
+    if len(manifest["leaves"]) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, template "
+            f"has {len(leaves_like)}")
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for rec, like, sh in zip(manifest["leaves"], leaves_like, shard_leaves):
+        arr = np.load(os.path.join(d, rec["name"]), allow_pickle=False)
+        if tuple(arr.shape) != tuple(np.shape(like)):
+            raise ValueError(
+                f"leaf {rec['path']}: stored {arr.shape} != template "
+                f"{np.shape(like)}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), manifest
+
+
+class CheckpointManager:
+    """Async wrapper: snapshot on caller thread, write on background
+    thread; ``wait()`` joins the in-flight save (call before exit and
+    before restoring the same step)."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: BaseException | None = None
+
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra_meta: dict | None = None):
+        self.wait()
+        host_leaves, treedef = _gather_to_host(tree)
+        host_tree = jax.tree.unflatten(treedef, host_leaves)
+        if blocking:
+            return save_checkpoint(self.root, step, host_tree,
+                                   keep=self.keep, extra_meta=extra_meta)
+
+        def _run():
+            try:
+                save_checkpoint(self.root, step, host_tree, keep=self.keep,
+                                extra_meta=extra_meta)
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def restore_latest(self, tree_like, *, shardings=None):
+        step = latest_step(self.root)
+        if step is None:
+            return None
+        self.wait()
+        tree, manifest = restore_checkpoint(self.root, step, tree_like,
+                                            shardings=shardings)
+        return step, tree, manifest

@@ -1,0 +1,100 @@
+"""Architecture registry, input-shape table, and dry-run input specs.
+
+Each assigned architecture lives in ``configs/<id>.py`` as ``FULL`` (the
+exact published config) plus ``SMOKE`` (a reduced same-family config for
+CPU tests).  The shape table and skip rules follow the assignment
+(DESIGN.md §4): ``decode_*``/``long_*`` lower ``serve_step``; ``long_500k``
+requires a sub-quadratic stack; encoders have no decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+
+ARCHS = [
+    "granite_moe_3b_a800m",
+    "grok_1_314b",
+    "stablelm_12b",
+    "minicpm3_4b",
+    "yi_6b",
+    "starcoder2_3b",
+    "hubert_xlarge",
+    "recurrentgemma_9b",
+    "falcon_mamba_7b",
+    "chameleon_34b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    arch = arch.replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCfg) -> str | None:
+    """None if the (arch x shape) cell runs; else the documented skip."""
+    if shape.kind == "decode" and not cfg.supports_decode():
+        return "encoder-only: no decode step"
+    if (shape.name == "long_500k" and not cfg.supports_long_context()):
+        return "full quadratic attention: 500k context skipped (DESIGN.md §4)"
+    return None
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if cell_skip_reason(cfg, shape) is None:
+                out.append((arch, sname))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every step input — no allocation.
+
+    train/prefill: {"batch": {tokens|features, positions[, labels]}}
+    decode:        additionally {"cache": <stacked cache tree>}.
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        if cfg.input_mode == "tokens":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"features": jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.dtype))}
+
+    if shape.kind in ("train", "prefill"):
+        batch = tok(B, S)
+        batch["positions"] = jax.ShapeDtypeStruct((B, S), i32)
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return {"batch": batch}
+
+    batch = tok(B, 1)
+    batch["positions"] = jax.ShapeDtypeStruct((B, 1), i32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"batch": batch, "cache": cache}

@@ -1,0 +1,17 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion VLM; VQ image tokens live in the shared vocab,
+so the backbone is a token decoder and the image tokenizer is a stub.
+[arXiv:2405.09818; unverified]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    num_layers=48, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=65536,
+)
+
+SMOKE = ModelConfig(
+    name="chameleon-smoke", family="vlm",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=128, dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attention-free) vocab=65024,
+Mamba-1 blocks with ssm_state=16, expand 2, conv 4.
+[arXiv:2410.05355; unverified]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke", family="ssm",
+    num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=128,
+    ssm_state=4, ssm_conv=4, ssm_expand=2, dtype="float32",
+)

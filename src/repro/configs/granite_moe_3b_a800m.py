@@ -1,0 +1,20 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+per expert, vocab=49155, MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]  (The bracketed HF source
+lists 32 experts; we follow the assignment's explicit "40e top-8" field —
+see DESIGN.md §4.)"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    num_experts=40, experts_per_token=8,
+)
+
+SMOKE = ModelConfig(
+    name="granite-moe-smoke", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=32, vocab_size=128,
+    num_experts=8, experts_per_token=2, dtype="float32",
+)

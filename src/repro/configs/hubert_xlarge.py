@@ -1,0 +1,21 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H d_ff=5120 vocab=504 —
+encoder-only transformer backbone (w2v2-style); the conv frontend is a
+STUB: input_specs() provides precomputed frame embeddings.  Non-gated
+GELU MLP.  [arXiv:2106.07447; unverified]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    causal=False, input_mode="features",
+    mlp_act="gelu", mlp_gated=False,
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke", family="audio",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=32,
+    causal=False, input_mode="features",
+    mlp_act="gelu", mlp_gated=False, dtype="float32",
+)

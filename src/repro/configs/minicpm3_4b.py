@@ -1,0 +1,20 @@
+"""minicpm3-4b [dense]: 62L d_model=2560 40H d_ff=6400 vocab=73448 — MLA
+(multi-head latent attention: q_lora=768, kv_lora=256, rope 32 + nope 64
+per head, v_head 64).  [hf:openbmb/MiniCPM3-4B; hf]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    num_layers=62, d_model=2560, num_heads=40, num_kv_heads=40,
+    d_ff=6400, vocab_size=73448,
+    use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+    qk_rope_dim=32, qk_nope_dim=64, v_head_dim=64,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=128,
+    use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+    qk_rope_dim=8, qk_nope_dim=16, v_head_dim=16, dtype="float32",
+)

@@ -1,0 +1,20 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention (window 2048), pattern 2 recurrent
+: 1 attention.  GeGLU MLP.  [arXiv:2402.19427; unverified]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+    head_dim=256, d_ff=12288, vocab_size=256000,
+    pattern=("rglru", "rglru", "la"), local_window=2048, lru_width=4096,
+    mlp_act="gelu",
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke", family="hybrid",
+    num_layers=5, d_model=64, num_heads=4, num_kv_heads=1,
+    head_dim=16, d_ff=128, vocab_size=128,
+    pattern=("rglru", "rglru", "la"), local_window=8, lru_width=64,
+    mlp_act="gelu", dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE.  [arXiv:2402.19173; hf]"""
+from repro.models import ModelConfig
+
+FULL = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2,
+    d_ff=12288, vocab_size=49152,
+    mlp_act="gelu", mlp_gated=False,   # GPTBigCode-heritage plain FFN
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=128,
+    mlp_act="gelu", mlp_gated=False, dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""repro.core — Shifted Randomized SVD (Basirat 2019) and its applications.
+
+Public API:
+  srsvd / rsvd            single-device (Algorithm 1 / Halko baseline)
+  dist_srsvd / dist_pca_fit  shard_map multi-device versions
+  PCA                     implicit-centering principal component analysis
+  qr_rank1_update         Golub & Van Loan rank-1 thin-QR update
+  as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
+"""
+from repro.core.linop import CallableOp, DenseOp, LinOp, SparseOp, as_linop
+from repro.core.qr_update import qr_rank1_update
+from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
+                              svd_jit)
+from repro.core.pca import PCA
+from repro.core.distributed import (dist_col_mean, dist_pca_fit, dist_srsvd,
+                                    tsqr)
+
+__all__ = [
+    "CallableOp", "DenseOp", "LinOp", "SparseOp", "as_linop",
+    "qr_rank1_update", "SVDResult", "expected_error_bound", "rsvd", "srsvd",
+    "svd_jit", "PCA", "dist_col_mean", "dist_pca_fit", "dist_srsvd", "tsqr",
+]

@@ -1,0 +1,163 @@
+"""Multi-device S-RSVD: the paper's algorithm sharded over the production
+mesh with ``shard_map``.
+
+Layout (DESIGN.md §5):
+  X   : (m, n)  rows sharded over ``row_axis`` ('model'),
+                cols sharded over ``col_axis`` ('data' or ('pod','data')).
+  mu  : (m,)    row-sharded like X's rows.
+  U   : (m, k)  row-sharded;  S replicated;  Vt: (k, n) col-sharded.
+
+Every contact with X is a *local* block matmul followed by one ``psum``;
+the shift enters either as a per-block rank-1 epilogue (sample matrix,
+line 6) or as a K-vector correction that rides the same psum as the main
+product (power iteration / projection) — so implicit centering adds
+O(K) bytes to each collective, not O(m n).
+
+Tall-skinny QR (TSQR) replaces the dense QR of row-sharded m x K factors:
+local QR -> all_gather of the P (K x K) R-factors -> one replicated
+(PK x K) QR -> local recombination.  Communication: P*K*K floats, compute:
+O(m_loc K^2) — the standard scalable choice at 1000+ nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.srsvd import SVDResult
+
+
+def _axis_size(axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        return int(jnp.prod(jnp.array([lax.axis_size(a) for a in axis])))
+    return lax.axis_size(axis)
+
+
+def _axis_index(axis):
+    return lax.axis_index(axis)
+
+
+def tsqr(A_loc: jax.Array, axis) -> tuple[jax.Array, jax.Array]:
+    """Thin QR of a row-sharded tall matrix, inside shard_map.
+
+    A_loc: (m_loc, K) local block.  Returns (Q_loc, R) with Q_loc the local
+    block of the row-sharded orthonormal factor and R (K, K) replicated.
+    """
+    K = A_loc.shape[1]
+    Q1, R1 = jnp.linalg.qr(A_loc, mode="reduced")        # local O(m_loc K^2)
+    R_all = lax.all_gather(R1, axis, tiled=False)        # (P, K, K)
+    P_ = R_all.shape[0]
+    Q2, R = jnp.linalg.qr(R_all.reshape(P_ * K, K), mode="reduced")
+    blk = lax.dynamic_slice_in_dim(
+        Q2.reshape(P_, K, K), _axis_index(axis), 1, axis=0)[0]
+    return Q1 @ blk, R
+
+
+def _small_svd_from_cols(Y_loc: jax.Array, col_axis):
+    """SVD of the K x n col-sharded projection Y via TSQR of Y^T.
+
+    Y^T = Qv R  =>  Y = R^T Qv^T;  SVD(R^T) = U1 S W^T  =>  Vt = W^T Qv^T.
+    Numerically clean (no Gram squaring).  Returns (U1, S, Vt_loc).
+    """
+    Qv_loc, R = tsqr(Y_loc.T, col_axis)                  # (n_loc, K), (K, K)
+    U1, S, Wt = jnp.linalg.svd(R.T, full_matrices=False)
+    Vt_loc = Wt @ Qv_loc.T                               # (K, n_loc)
+    return U1, S, Vt_loc
+
+
+def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted,
+                     row_axis, col_axis):
+    """The full Algorithm 1, executed per-device inside shard_map."""
+    m_loc, n_loc = X_loc.shape
+    dt = X_loc.dtype
+    ones_loc = jnp.ones((n_loc,), dt)
+
+    # line 3: sample matrix.  Local partial + one psum over the col axis.
+    X1 = lax.psum(X_loc @ omega_loc, col_axis)           # (m_loc, K)
+    if shifted:
+        # line 6 (distributed form): fold the rank-1 shift into the local
+        # sample block before TSQR — v = Omega^T 1 needs its own psum of K
+        # numbers, which we fuse with the X1 psum above in spirit (same
+        # collective phase; see DESIGN.md §5).
+        v = lax.psum(omega_loc.T @ ones_loc, col_axis)   # (K,)
+        X1 = X1 - jnp.outer(mu_loc, v)
+    Q_loc, _ = tsqr(X1, row_axis)                        # basis of Xbar
+
+    for _ in range(q):                                   # lines 8-11
+        # Zt = X^T Q - 1 (mu^T Q): ride the K-vector on the same psum.
+        A, b = lax.psum(
+            (X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
+        Zt = A - (ones_loc[:, None] * b[None, :] if shifted else 0.0)
+        Qp_loc, _ = tsqr(Zt, col_axis)                   # (n_loc, K)
+        Z, s = lax.psum(
+            (X_loc @ Qp_loc, ones_loc @ Qp_loc), col_axis)
+        if shifted:
+            Z = Z - jnp.outer(mu_loc, s)
+        Q_loc, _ = tsqr(Z, row_axis)
+
+    # line 12: Y = Q^T X - (Q^T mu) 1^T,  (K, n_loc) col-sharded.
+    YT, b = lax.psum((X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
+    Y_loc = YT.T
+    if shifted:
+        Y_loc = Y_loc - b[:, None] * ones_loc[None, :]
+
+    U1, S, Vt_loc = _small_svd_from_cols(Y_loc, col_axis)  # line 13
+    U_loc = Q_loc @ U1                                     # line 14
+    return U_loc[:, :k], S[:k], Vt_loc[:k, :]
+
+
+def dist_col_mean(X, mesh: Mesh, row_axis="model", col_axis="data"):
+    """Column mean of a sharded X — one psum of an (m_loc,) vector."""
+    n = X.shape[1]
+
+    def body(X_loc):
+        return lax.psum(X_loc.sum(axis=1), col_axis) / n
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, col_axis),),
+        out_specs=P(row_axis))(X)
+
+
+def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
+               mesh: Mesh, key: jax.Array,
+               row_axis="model", col_axis="data") -> SVDResult:
+    """Distributed shifted randomized SVD of ``X - mu 1^T``.
+
+    X: (m, n) global array sharded P(row_axis, col_axis).
+    mu: (m,) sharded P(row_axis), or None (plain distributed RSVD).
+    """
+    m, n = X.shape
+    dt = X.dtype
+    K = 2 * k if K is None else K
+    shifted = mu is not None
+    if mu is None:
+        mu = jnp.zeros((m,), dt)
+    omega = jax.random.normal(key, (n, K), dtype=dt)
+
+    body = functools.partial(
+        _dist_srsvd_body, k=k, K=K, q=q, shifted=shifted,
+        row_axis=row_axis, col_axis=col_axis)
+
+    U, S, Vt = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, col_axis), P(row_axis), P(col_axis, None)),
+        out_specs=(P(row_axis, None), P(None), P(None, col_axis)),
+        check_vma=False,
+    )(X, mu, omega)
+    return SVDResult(U, S, Vt)
+
+
+def dist_pca_fit(X, k, *, mesh, key, q: int = 0,
+                 row_axis="model", col_axis="data"):
+    """Distributed PCA: column mean + shifted factorization, one pass."""
+    mu = dist_col_mean(X, mesh, row_axis, col_axis)
+    res = dist_srsvd(X, mu, k, q=q, mesh=mesh, key=key,
+                     row_axis=row_axis, col_axis=col_axis)
+    return res, mu

@@ -1,0 +1,154 @@
+"""Linear-operator abstraction over the data matrix X.
+
+The whole point of the paper is that the algorithm only ever touches X
+through products (``X @ B``, ``X.T @ B``) and a column mean — so the data
+matrix can stay sparse / implicit / sharded while the *shifted* matrix
+``X - mu 1^T`` is never formed.  Every S-RSVD entry point accepts anything
+satisfying this protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import sparse as jsparse
+
+
+class LinOp:
+    """Protocol: an (m, n) operator touched only via products."""
+
+    shape: tuple[int, int]
+    dtype: jnp.dtype
+
+    def matmat(self, B: jax.Array) -> jax.Array:      # X @ B    (n,K)->(m,K)
+        raise NotImplementedError
+
+    def rmatmat(self, B: jax.Array) -> jax.Array:     # X.T @ B  (m,K)->(n,K)
+        raise NotImplementedError
+
+    def col_mean(self) -> jax.Array:                  # mean over columns (m,)
+        raise NotImplementedError
+
+    def fro_norm2(self) -> jax.Array:                 # ||X||_F^2
+        raise NotImplementedError
+
+    # -- shifted contact points: (X - mu 1^T) products, never materialized.
+    def shifted_matmat(self, B: jax.Array, mu: jax.Array) -> jax.Array:
+        return self.matmat(B) - jnp.outer(mu, B.sum(axis=0))
+
+    def shifted_rmatmat(self, B: jax.Array, mu: jax.Array) -> jax.Array:
+        n = self.shape[1]
+        return self.rmatmat(B) - jnp.outer(jnp.ones((n,), self.dtype),
+                                           mu @ B)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseOp(LinOp):
+    X: jax.Array
+
+    @property
+    def shape(self):
+        return self.X.shape
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmat(self, B):
+        return self.X @ B
+
+    def rmatmat(self, B):
+        return self.X.T @ B
+
+    def col_mean(self):
+        return jnp.mean(self.X, axis=1)
+
+    def fro_norm2(self):
+        return jnp.sum(jnp.square(self.X))
+
+    def shifted_matmat(self, B, mu):
+        # Fused rank-1-epilogue Pallas matmul on TPU, XLA elsewhere.
+        from repro.kernels import ops
+        return ops.shifted_matmat(self.X, B, mu)
+
+    def shifted_rmatmat(self, B, mu):
+        from repro.kernels import ops
+        return ops.shifted_rmatmat(self.X, B, mu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseOp(LinOp):
+    """BCOO-backed operator — the paper's sparse co-occurrence case.
+
+    ``X`` stays sparse end to end; the dense shifted matrix never exists.
+    """
+
+    X: jsparse.BCOO
+
+    @property
+    def shape(self):
+        return self.X.shape
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmat(self, B):
+        return self.X @ B
+
+    def rmatmat(self, B):
+        # (X.T @ B) == (B.T @ X).T keeps the sparse operand on the left-ish
+        # path BCOO supports best.
+        return (B.T @ self.X).T
+
+    def col_mean(self):
+        n = self.shape[1]
+        return (self.X @ jnp.ones((n,), self.dtype)) / n
+
+    def fro_norm2(self):
+        # Frobenius norm over stored values only — never densify.
+        return jnp.sum(jnp.square(self.X.data))
+
+
+@dataclasses.dataclass(frozen=True)
+class CallableOp(LinOp):
+    """Matmul-closure operator (e.g. a sharded or streamed matrix)."""
+
+    _shape: tuple[int, int]
+    _dtype: jnp.dtype
+    _matmat: Callable[[jax.Array], jax.Array]
+    _rmatmat: Callable[[jax.Array], jax.Array]
+    _col_mean: Callable[[], jax.Array]
+    _fro_norm2: Callable[[], jax.Array] | None = None
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    def matmat(self, B):
+        return self._matmat(B)
+
+    def rmatmat(self, B):
+        return self._rmatmat(B)
+
+    def col_mean(self):
+        return self._col_mean()
+
+    def fro_norm2(self):
+        if self._fro_norm2 is None:
+            raise NotImplementedError("fro_norm2 not provided")
+        return self._fro_norm2()
+
+
+def as_linop(X) -> LinOp:
+    if isinstance(X, LinOp):
+        return X
+    if isinstance(X, jsparse.BCOO):
+        return SparseOp(X)
+    return DenseOp(jnp.asarray(X))

@@ -1,0 +1,96 @@
+"""Rank-1 thin-QR update (Golub & Van Loan, Matrix Computations §12.5).
+
+Given a thin factorization ``A = Q R`` (Q: m x K, R: K x K) and vectors
+``u`` (m,), ``v`` (K,), compute a thin QR of ``A + u v^T`` in O(mK + K^2)
+— this is the paper's line 6, the step that folds the shift ``-mu 1^T``
+into the sample-matrix basis without re-touching X.
+
+TPU adaptation note: the classical formulation is a sequence of scalar
+Givens rotations.  We keep the rotation *sequence* (it is inherently
+sequential along K) but each rotation is applied to whole rows/columns as
+vector ops (VPU-friendly), driven by ``lax.fori_loop``.  K is small
+(K = 2k <= a few hundred) so this is never a bottleneck; see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _givens(a, b):
+    """Return (c, s) with [[c, s], [-s, c]] @ [a, b] = [r, 0]."""
+    r = jnp.hypot(a, b)
+    safe = r > jnp.finfo(a.dtype).tiny
+    c = jnp.where(safe, a / jnp.where(safe, r, 1.0), 1.0)
+    s = jnp.where(safe, b / jnp.where(safe, r, 1.0), 0.0)
+    return c, s
+
+
+def _rot_rows(M, i, c, s):
+    """Left-apply a Givens rotation to rows (i, i+1) of M."""
+    two = lax.dynamic_slice_in_dim(M, i, 2, axis=0)
+    hi = c * two[0] + s * two[1]
+    lo = -s * two[0] + c * two[1]
+    return lax.dynamic_update_slice_in_dim(M, jnp.stack([hi, lo]), i, axis=0)
+
+
+def _rot_cols(M, i, c, s):
+    """Right-apply the transpose rotation to columns (i, i+1) of M."""
+    two = lax.dynamic_slice_in_dim(M, i, 2, axis=1)
+    hi = c * two[:, 0] + s * two[:, 1]
+    lo = -s * two[:, 0] + c * two[:, 1]
+    return lax.dynamic_update_slice_in_dim(
+        M, jnp.stack([hi, lo], axis=1), i, axis=1)
+
+
+def qr_rank1_update(Q: jax.Array, R: jax.Array, u: jax.Array, v: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Thin QR of ``Q @ R + u v^T``.
+
+    Returns (Q', R') with Q': m x K orthonormal, R': K x K upper triangular.
+    """
+    m, K = Q.shape
+    dt = Q.dtype
+    u = u.astype(dt)
+    v = v.astype(dt)
+
+    # Project u into / out of range(Q):  u = Q w + rho * q_ext.
+    w = Q.T @ u                                   # (K,)
+    r = u - Q @ w
+    rho = jnp.linalg.norm(r)
+    tiny = jnp.asarray(jnp.finfo(dt).tiny, dt)
+    q_ext = r / jnp.maximum(rho, tiny)
+
+    Qe = jnp.concatenate([Q, q_ext[:, None]], axis=1)        # m x (K+1)
+    we = jnp.concatenate([w, rho[None]])                     # (K+1,)
+    Re = jnp.concatenate([R, jnp.zeros((1, K), dt)], axis=0) # (K+1) x K
+
+    # Sweep 1 (bottom-up): rotate w to ||w|| e1; R becomes upper Hessenberg.
+    def body1(t, carry):
+        Qe, Re, we = carry
+        i = K - 1 - t
+        c, s = _givens(we[i], we[i + 1])
+        wi = c * we[i] + s * we[i + 1]
+        we = lax.dynamic_update_slice_in_dim(
+            we, jnp.stack([wi, jnp.zeros((), dt)]), i, axis=0)
+        Re = _rot_rows(Re, i, c, s)
+        Qe = _rot_cols(Qe, i, c, s)
+        return Qe, Re, we
+
+    Qe, Re, we = lax.fori_loop(0, K, body1, (Qe, Re, we))
+
+    # Rank-1 add now touches only the first row.
+    Re = Re.at[0].add(we[0] * v)
+
+    # Sweep 2 (top-down): restore upper-triangular from upper Hessenberg.
+    def body2(i, carry):
+        Qe, Re = carry
+        c, s = _givens(Re[i, i], Re[i + 1, i])
+        Re = _rot_rows(Re, i, c, s)
+        Qe = _rot_cols(Qe, i, c, s)
+        return Qe, Re
+
+    Qe, Re = lax.fori_loop(0, K, body2, (Qe, Re))
+
+    return Qe[:, :K], Re[:K, :]

@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataPipeline
+from repro.data.cooccurrence import zipf_cooccurrence, zipf_tokens
+
+__all__ = ["DataPipeline", "zipf_cooccurrence", "zipf_tokens"]

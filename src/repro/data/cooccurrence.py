@@ -1,0 +1,50 @@
+"""Synthetic word co-occurrence matrices (paper §5.3 regime).
+
+The paper's word data are sparse probability co-occurrence matrices
+``p(w_i | w_j)`` over Zipf-distributed vocabularies.  No corpus ships with
+this container, so we generate a corpus-free equivalent: draw target and
+context words from a Zipf law, accumulate co-occurrence counts through a
+latent low-dimensional topic model (so the matrix has genuine low-rank
+structure for PCA to find), and normalize columns to probabilities.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import sparse as jsparse
+
+
+def zipf_tokens(n_tokens: int, vocab: int, a: float = 1.2, seed: int = 0
+                ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return ((rng.zipf(a, size=n_tokens) - 1) % vocab).astype(np.int64)
+
+
+def zipf_cooccurrence(m: int, n: int, *, n_pairs: int = 2_000_000,
+                      rank: int = 20, a: float = 1.2, seed: int = 0,
+                      dtype=np.float32):
+    """(m context-words x n target-words) probability co-occurrence matrix.
+
+    Returns (dense ndarray, BCOO sparse copy, density).
+    """
+    rng = np.random.default_rng(seed)
+    # latent topics give the matrix low-rank structure
+    topic_ctx = rng.dirichlet(np.ones(m) * 0.05, size=rank)     # (r, m)
+    topic_tgt = rng.dirichlet(np.ones(n) * 0.05, size=rank)     # (r, n)
+    zipf_w = 1.0 / np.arange(1, rank + 1) ** a
+    zipf_w /= zipf_w.sum()
+    counts = np.zeros((m, n), dtype=np.float64)
+    topics = rng.choice(rank, size=n_pairs, p=zipf_w)
+    for r in range(rank):
+        k = int((topics == r).sum())
+        if k == 0:
+            continue
+        ci = rng.choice(m, size=k, p=topic_ctx[r])
+        ti = rng.choice(n, size=k, p=topic_tgt[r])
+        np.add.at(counts, (ci, ti), 1.0)
+    col_tot = counts.sum(axis=0, keepdims=True)
+    probs = counts / np.maximum(col_tot, 1.0)
+    X = probs.astype(dtype)
+    density = float((X != 0).mean())
+    X_sp = jsparse.BCOO.fromdense(jnp.asarray(X))
+    return X, X_sp, density

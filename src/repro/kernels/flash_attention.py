@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: fused (flash) attention forward.
+
+Motivation (EXPERIMENTS.md §Perf C): after the sharding hillclimbs the
+dense train/prefill cells are **memory-bound**, dominated by the
+materialized (B, H, S, S) score tensors — ~17 GB per layer per device at
+the 32k prefill shapes.  This kernel computes softmax(q kᵀ / √d) v with
+the online-softmax recurrence, keeping the score block, the running max
+``m``, normalizer ``l`` and output accumulator in VMEM — scores never
+touch HBM.
+
+Supports causal masking, GQA (kv heads broadcast over query-head
+groups) and an optional local-attention window (RecurrentGemma).
+
+TPU-target kernel; correctness is validated with ``interpret=True``
+against ``ref.flash_attention_ref`` (tests/test_flash_attention.py).
+The CPU dry-run cannot lower Pallas TPU kernels, so the serving path
+enables it only on a TPU backend (``kernels.ops.flash_attention``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only helpers; interpret mode works without them.
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            bq: int, bk: int, nk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    q_start = qb * bq
+    k_start = kb * bk
+
+    # skip k-blocks entirely above the diagonal (causal) or outside the
+    # local window
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _pad_seq(x, block):
+    s = x.shape[1]
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Fused attention forward.
+
+    q: (B, S, H, d);  k, v: (B, T, G, d) with H a multiple of G (GQA).
+    Positions are assumed to be [0, S) and [0, T) with the causal
+    diagonal aligned at the END (standard prefill: S == T).
+    Returns (B, S, H, d) in q's dtype.
+    """
+    B, S, H, d = q.shape
+    T, G = k.shape[1], k.shape[2]
+    assert H % G == 0 and S == T, "prefill layout"
+    scale = 1.0 / math.sqrt(d)
+
+    # layout: fold batch x head into the grid's first dim
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    rep = H // G
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1) \
+        .reshape(B * H, T, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1) \
+        .reshape(B * H, T, d)
+
+    bq = min(bq, _round_up(S, 8))
+    bk = min(bk, _round_up(T, 128))
+    qf = _pad_seq(qf, bq)
+    kf = _pad_seq(kf, bk)
+    vf = _pad_seq(vf, bk)
+    Sp, Tp = qf.shape[1], kf.shape[1]
+    nq, nk = Sp // bq, Tp // bk
+
+    grid = (B * H, nq, nk)
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, d), q.dtype),
+        scratch_shapes=[
+            _VMEM((bq, 1), jnp.float32) if _VMEM is not None
+            else pl.MemorySpace.ANY,
+            _VMEM((bq, 1), jnp.float32) if _VMEM is not None
+            else pl.MemorySpace.ANY,
+            _VMEM((bq, d), jnp.float32) if _VMEM is not None
+            else pl.MemorySpace.ANY,
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(qf, kf, vf)
+    out = out[:, :S].reshape(B, H, S, d).transpose(0, 2, 1, 3)
+    return out
+
+
+def _round_up(x: int, t: int) -> int:
+    return -(-x // t) * t
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, XLA recompute backward.
+#
+# The backward recomputes attention with the plain-XLA oracle and takes
+# its VJP — scores materialize during the bwd pass only (standard
+# recompute-bwd trade: fwd HBM traffic drops, bwd unchanged).  Good
+# enough to use the kernel in TRAIN steps; a fused bwd kernel is the
+# next step beyond this.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_trainable(q, k, v, causal=True, window=None):
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _fa_ref(q, k, v, causal, window):
+    from repro.kernels.ref import flash_attention_ref
+    return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal=causal, window=window), \
+        (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _fa_ref(q, k, v, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention_trainable.defvjp(_fa_fwd, _fa_bwd)

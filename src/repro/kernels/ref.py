@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_rank1_ref(A, B, u, w, *, transpose_a: bool = False):
+    """op(A) @ B - u w^T, plain XLA."""
+    a = A.T if transpose_a else A
+    out_dtype = jnp.promote_types(A.dtype, B.dtype)
+    return (jnp.dot(a, B, preferred_element_type=jnp.float32)
+            - jnp.outer(u, w)).astype(out_dtype)
+
+
+def shifted_matmat_ref(X, B, mu):
+    """(X - mu 1^T) @ B."""
+    return matmul_rank1_ref(X, B, mu, B.sum(axis=0))
+
+
+def shifted_rmatmat_ref(X, B, mu):
+    """(X - mu 1^T)^T @ B."""
+    n = X.shape[1]
+    return matmul_rank1_ref(X, B, jnp.ones((n,), X.dtype), mu @ B,
+                            transpose_a=True)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Plain-XLA oracle for the flash-attention kernel.
+
+    q: (B,S,H,d);  k,v: (B,T,G,d) GQA.  Returns (B,S,H,d)."""
+    import math
+    B, S, H, d = q.shape
+    T, G = k.shape[1], k.shape[2]
+    rep = H // G
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def selective_scan_ref(x, delta, A, B, C, D):
+    """Oracle for the fused Mamba-1 selective scan.
+
+    x, delta: (Bt,S,di);  A: (di,N);  B,C: (Bt,S,N);  D: (di,).
+    Returns (y (Bt,S,di) f32, h_last (Bt,di,N) f32)."""
+    x32 = x.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    dA = jnp.exp(delta[..., None] * A)                      # (Bt,S,di,N)
+    dBu = (delta * x32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+    _, hs = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32) * x32
+    return y, hs[:, -1]

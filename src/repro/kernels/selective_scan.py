@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused Mamba-1 selective-scan forward.
+
+Motivation (EXPERIMENTS.md §Roofline): falcon-mamba train/prefill are
+the most memory-bound cells — the XLA lowering materializes the
+(B, S, d_inner, N) tensors ``dA = exp(Δ⊗A)`` and ``dBu = (Δ·x)⊗B`` plus
+the associative-scan intermediates in HBM (~28 TB/step per device at
+train_4k).  This kernel recomputes dA/dBu per (sequence-chunk ×
+channel-block) tile in VMEM, carries the (bd, N) recurrent state
+across chunks, and writes back only the (B, S, d_inner) output:
+HBM traffic drops from O(B·S·d_inner·N) to O(B·S·d_inner).
+
+    h_t = dA_t * h_{t-1} + dBu_t          (diagonal recurrence, per N)
+    y_t = <h_t, C_t> + D * x_t
+
+Grid: (B, d_inner/bd, S/bs) — the chunk dim is innermost/"arbitrary" so
+the VMEM state carry is legal; channel blocks are independent.
+
+TPU-target kernel; validated with ``interpret=True`` against
+``ref.selective_scan_ref`` (tests/test_selective_scan.py).  Serving
+paths use it on TPU backends via ``kernels.ops.selective_scan``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(x_ref, delta_ref, B_ref, C_ref, A_ref, D_ref, y_ref,
+            hout_ref, h_ref, *, ns: int, bs: int, N: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (bs, bd)
+    delta = delta_ref[0].astype(jnp.float32)  # (bs, bd)
+    Bs = B_ref[0].astype(jnp.float32)         # (bs, N)
+    Cs = C_ref[0].astype(jnp.float32)         # (bs, N)
+    A = A_ref[...].astype(jnp.float32)        # (bd, N)
+
+    h = h_ref[...]                            # (bd, N) carried state
+
+    def step(t, carry):
+        h, y = carry
+        dA_t = jnp.exp(delta[t][:, None] * A)             # (bd, N)
+        dBu_t = (delta[t] * x[t])[:, None] * Bs[t][None]  # (bd, N)
+        h = dA_t * h + dBu_t
+        y = y.at[t].set(h @ Cs[t])                        # (bd,)
+        return h, y
+
+    y0 = jnp.zeros((bs, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, bs, step, (h, y0))
+    h_ref[...] = h
+    y = y + D_ref[0].astype(jnp.float32)[None, :] * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(sb == ns - 1)
+    def _final_state():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bd", "bs", "interpret"))
+def selective_scan(x: jax.Array, delta: jax.Array, A: jax.Array,
+                   B: jax.Array, C: jax.Array, D: jax.Array, *,
+                   bd: int = 512, bs: int = 256,
+                   interpret: bool = False):
+    """Fused Mamba-1 scan.
+
+    x, delta: (Bt, S, di);  A: (di, N);  B, C: (Bt, S, N);  D: (di,).
+    Returns (y: (Bt, S, di) float32, h_last: (Bt, di, N) float32).
+    S must be padded to a multiple of ``bs`` by the caller (the scan
+    carry is order-sensitive, so we do not silently pad time).
+    """
+    Bt, S, di = x.shape
+    N = A.shape[1]
+    bd = min(bd, di)
+    bs = min(bs, S)
+    if S % bs or di % bd:
+        raise ValueError(f"S ({S}) % bs ({bs}) and di ({di}) % bd ({bd}) "
+                         "must be 0")
+    nd, ns = di // bd, S // bs
+
+    grid = (Bt, nd, ns)
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, ns=ns, bs=bs, N=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),  # x
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),  # delta
+            pl.BlockSpec((1, bs, N), lambda b, d, s: (b, s, 0)),   # B
+            pl.BlockSpec((1, bs, N), lambda b, d, s: (b, s, 0)),   # C
+            pl.BlockSpec((bd, N), lambda b, d, s: (d, 0)),         # A
+            pl.BlockSpec((1, bd), lambda b, d, s: (0, d)),          # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, di, N), jnp.float32),
+        ],
+        scratch_shapes=[
+            _VMEM((bd, N), jnp.float32) if _VMEM is not None
+            else pl.MemorySpace.ANY,
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(x, delta, B, C, A, D.reshape(1, di))
+    return y, h_last

@@ -1,0 +1,206 @@
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, SPMD-partitions, and compiles on the production meshes, and
+extract the roofline terms from the compiled artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+
+The first two executable lines below force 512 CPU placeholder devices
+BEFORE any jax import — required for jax.make_mesh((2,16,16)).  Never copy
+them into conftest.py: smoke tests must see one device.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, cell_skip_reason, get_config,
+                           input_specs)
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+from repro.models import init_params
+from repro.optim import CompressConfig
+
+# --- TPU v5e target constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (collective term: per-device wire
+                             # bytes / ICI_BW — single-link ring model)
+
+
+def model_flops(cfg, shape) -> float:
+    """Napkin MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (serve)."""
+    p = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p)[0]:
+        n = leaf.size
+        total += n
+        keys = [getattr(q, "key", None) for q in path]
+        # MoE expert banks are (E, D, F) — (L, E, D, F) once scan-stacked
+        if "ffn" in keys and leaf.ndim >= 3 and cfg.num_experts:
+            n = n * cfg.experts_per_token / cfg.num_experts
+        active += n
+    D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * D
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             compress: bool = False, seq_parallel: bool = False,
+             remat_off: bool = False, remat_policy: str = "full",
+             profile: str = "megatron", grad_dtype: str | None = None,
+             verbose: bool = True) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if remat_off:
+        cfg = _dc.replace(cfg, remat=False)
+    if remat_policy != "full":
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        bundle = make_step(
+            cfg, mesh, shape,
+            compress=CompressConfig() if compress else None,
+            seq_parallel=seq_parallel, profile=profile)
+        lowered = bundle.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # loop-corrected per-device costs (cost_analysis counts while
+        # bodies once — see hlo_analysis module docstring)
+        hc = analyze(compiled.as_text(), num_partitions=chips)
+        coll = {"bytes_by_op": hc["collective_by_op"],
+                "counts": hc["collective_counts"],
+                "total_bytes": hc["collective_bytes"]}
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes_accessed"]
+        mf = model_flops(cfg, shape)
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = bytes_dev / HBM_BW
+        coll_s = coll["total_bytes"] / ICI_BW
+        dom = max((compute_s, "compute"), (memory_s, "memory"),
+                  (coll_s, "collective"))[1]
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "raw_cost_analysis": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "collective": coll,
+            "mem": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "model_flops_total": mf,
+            "model_flops_per_device": mf / chips,
+            "useful_flops_ratio": (mf / chips) / max(flops_dev, 1.0),
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": coll_s,
+                "dominant": dom,
+                "bound_s": max(compute_s, memory_s, coll_s),
+                "mfu_upper_bound":
+                    (mf / chips / PEAK_FLOPS)
+                    / max(compute_s, memory_s, coll_s, 1e-30),
+            },
+        })
+        if verbose:
+            r = rec["roofline"]
+            print(f"[{rec['mesh']}] {arch} {shape_name}: OK "
+                  f"compile={rec['compile_s']}s "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"mem={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"dom={dom} mfu_ub={r['mfu_upper_bound']:.3f} "
+                  f"useful={rec['useful_flops_ratio']:.3f}", flush=True)
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} {shape_name}: FAIL {rec['error']}",
+                  flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="S-RSVD cross-pod gradient compression (train)")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--profile", default="megatron",
+                    choices=("megatron", "fsdp"))
+    ap.add_argument("--remat-policy", default="full",
+                    choices=("full", "dots"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape_name, multi_pod=mp,
+                           compress=args.compress,
+                           seq_parallel=args.seq_parallel,
+                           profile=args.profile,
+                           remat_policy=args.remat_policy)
+            results.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in results)
+    fail = sum(r["status"] == "fail" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    print(f"\ndry-run: {ok} ok, {fail} fail, {skip} skip")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

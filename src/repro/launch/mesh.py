@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single pod: (data=16, model=16) = 256 chips of
+TPU v5e.  Multi-pod: (pod=2, data=16, model=16) = 512 chips, the 'pod'
+axis crossing the DCN.  The dry-run (launch/dryrun.py) must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import to build these meshes on CPU.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(n_devices: int | None = None, model: int = 1):
+    """Elastic helper: best mesh for whatever devices are alive (used by
+    CPU smoke runs and elastic restarts)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,206 @@
+"""Step functions (train / prefill / decode) with full sharding binding.
+
+``make_step`` returns (jitted_fn, arg_shardings_tree, arg_sds_tree) so the
+same machinery serves the real train loop, the serving loop, and the
+no-allocation multi-pod dry-run (ShapeDtypeStruct lowering).
+
+Sharding-rule binding happens *inside* each step body (``use_rules`` is a
+trace-time context: ``constrain`` calls consult it while jit traces), so a
+StepBundle can be lowered or executed at any later time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs import ShapeCfg, input_specs
+from repro.models import (ModelConfig, cache_logical_specs, forward,
+                          init_cache, init_params, loss_fn,
+                          param_logical_specs)
+from repro.optim import (AdamWConfig, CompressConfig, adamw_init,
+                         adamw_update, compress_state_init,
+                         compressed_pod_mean)
+
+
+def _bind(tree_shapes, tree_specs):
+    """Map matching (ShapeDtypeStruct, logical-spec) trees to shardings."""
+    return jax.tree.map(
+        lambda sds, sp: shd.spec_sharding(tuple(sp), sds.shape),
+        tree_shapes, tree_specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules):
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    with shd.use_rules(mesh, rules):
+        return _bind(shapes, param_logical_specs(cfg))
+
+
+def batch_shardings(batch_sds, mesh, rules=None):
+    axes = (rules or {}).get("batch") or (
+        ("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+
+    def one(sds):
+        # largest prefix of the batch axes that divides the batch dim
+        use = axes
+        while use:
+            size = 1
+            for a in use:
+                size *= mesh.shape[a]
+            if sds.shape[0] % size == 0:
+                break
+            use = use[:-1]
+        spec = (P(use, *([None] * (sds.ndim - 1))) if use else P())
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_sds)
+
+
+def cache_shardings(cfg, mesh, rules, batch, seq_len):
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+    with shd.use_rules(mesh, rules):
+        return _bind(shapes, cache_logical_specs(cfg, batch, seq_len))
+
+
+def _with_sh(sds_tree, sh_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, sh_tree)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                  # jitted step
+    arg_sds: tuple           # ShapeDtypeStructs (with shardings) per arg
+    rules: dict
+    mesh: Mesh
+
+    def lower(self):
+        return self.fn.lower(*self.arg_sds)
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg, *,
+              adamw: AdamWConfig | None = None,
+              compress: CompressConfig | None = None,
+              seq_parallel: bool = False,
+              profile: str = "megatron",
+              donate: bool = True) -> StepBundle:
+    """Build the jitted step for one (arch x input-shape) cell."""
+    kv_small = (cfg.num_kv_heads or 0) < mesh.shape["model"]
+    rules = shd.default_rules(
+        mesh, fsdp=cfg.fsdp, seq_parallel=seq_parallel,
+        seq_shard_kv=(shape.kind == "decode" and cfg.seq_shard_decode
+                      and kv_small),
+        profile=profile)
+    p_sh = param_shardings(cfg, mesh, rules)
+    p_sds = _with_sh(
+        jax.eval_shape(functools.partial(init_params, cfg),
+                       jax.random.PRNGKey(0)), p_sh)
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(specs["batch"], mesh, rules)
+    b_sds = _with_sh(specs["batch"], b_sh)
+
+    if shape.kind == "train":
+        acfg = adamw or AdamWConfig()
+        opt_sds_raw = jax.eval_shape(adamw_init, p_sds)
+        opt_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+        opt_sds = _with_sh(opt_sds_raw, opt_sh)
+
+        if compress is not None:
+            npods = mesh.shape.get("pod", 1)
+            err_raw = jax.eval_shape(
+                lambda p: compress_state_init(compress, p), p_sds)
+            err_raw = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((npods,) + s.shape, s.dtype),
+                err_raw)
+            err_sh = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P("pod", *([None] * (s.ndim - 1)))), err_raw)
+            err_sds = _with_sh(err_raw, err_sh)
+
+            def train_step_c(params, opt_state, err_state, batch):
+                with shd.use_rules(mesh, rules):
+                    step_no = opt_state["step"]
+
+                    def per_pod(params, err, batch):
+                        err = jax.tree.map(lambda e: e[0], err)
+                        (loss, _), grads = jax.value_and_grad(
+                            loss_fn, has_aux=True)(params, cfg, batch)
+                        grads, new_err = compressed_pod_mean(
+                            compress, grads, err, step_no)
+                        loss = lax.pmean(loss, "pod")
+                        new_err = jax.tree.map(lambda e: e[None], new_err)
+                        return loss, grads, new_err
+
+                    loss, grads, new_err = jax.shard_map(
+                        per_pod, mesh=mesh,
+                        in_specs=(P(),
+                                  jax.tree.map(lambda _: P("pod"),
+                                               err_state),
+                                  jax.tree.map(lambda _: P("pod"), batch)),
+                        out_specs=(P(), P(),
+                                   jax.tree.map(lambda _: P("pod"),
+                                                err_state)),
+                        axis_names={"pod"},
+                        check_vma=False,
+                    )(params, err_state, batch)
+                    new_p, new_opt, om = adamw_update(
+                        acfg, grads, opt_state, params)
+                    return new_p, new_opt, new_err, {"loss": loss, **om}
+
+            fn = jax.jit(
+                train_step_c,
+                in_shardings=(p_sh, opt_sh, err_sh, b_sh),
+                out_shardings=(p_sh, opt_sh, err_sh, None),
+                donate_argnums=(0, 1, 2) if donate else ())
+            return StepBundle(fn, (p_sds, opt_sds, err_sds, b_sds),
+                              rules, mesh)
+
+        def train_step(params, opt_state, batch):
+            with shd.use_rules(mesh, rules):
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg, batch)
+                new_p, new_opt, om = adamw_update(acfg, grads, opt_state,
+                                                  params)
+                return new_p, new_opt, {"loss": loss, **om}
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        return StepBundle(fn, (p_sds, opt_sds, b_sds), rules, mesh)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with shd.use_rules(mesh, rules):
+                logits, cache, _ = forward(params, cfg, batch,
+                                           mode="prefill")
+                return logits[:, -1], cache
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        return StepBundle(fn, (p_sds, b_sds), rules, mesh)
+
+    # decode
+    c_sh = cache_shardings(cfg, mesh, rules, shape.global_batch,
+                           shape.seq_len)
+    c_sds = _with_sh(specs["cache"], c_sh)
+
+    def serve_step(params, cache, batch):
+        with shd.use_rules(mesh, rules):
+            logits, new_cache, _ = forward(params, cfg, batch,
+                                           mode="decode", cache=cache)
+            return logits[:, 0], new_cache
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, c_sh, b_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(1,) if donate else ())
+    return StepBundle(fn, (p_sds, c_sds, b_sds), rules, mesh)

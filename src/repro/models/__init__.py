@@ -1,0 +1,8 @@
+from repro.models.config import ModelConfig, LayerSpec
+from repro.models.model import (init_params, forward, init_cache,
+                                param_logical_specs, cache_logical_specs,
+                                loss_fn, count_params)
+
+__all__ = ["ModelConfig", "LayerSpec", "init_params", "forward",
+           "init_cache", "param_logical_specs", "cache_logical_specs",
+           "loss_fn", "count_params"]

@@ -1,0 +1,124 @@
+"""Model configuration for the unified LM stack.
+
+One ``ModelConfig`` drives every assigned architecture: dense / GQA / MLA
+attention, SwiGLU or MoE channel mixers, Mamba-1 SSM blocks, RG-LRU +
+local-attention hybrids, causal decoders and bidirectional encoders, and
+token or precomputed-feature ("stub frontend") inputs.
+
+The layer stack is described by ``stages``: an ordered list of
+(unit, repeat) pairs, where a unit is a tuple of ``LayerSpec``s scanned
+``repeat`` times with stacked parameters (compile-time friendly at 64
+layers; remat applied per layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+Mixer = Literal["ga", "la", "mla", "mamba", "rglru", "none"]
+Ffn = Literal["swiglu", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer
+    ffn: Ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|encoder|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 => attention-free
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # MLA (MiniCPM3 / DeepSeek-style)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (Mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                 # 0 => ceil(d_model / 16)
+    # Hybrid (RecurrentGemma): pattern unit of mixers, e.g. 2x rglru + 1 la
+    pattern: tuple[str, ...] = ()
+    local_window: int = 2048
+    lru_width: int | None = None
+    # Structure
+    causal: bool = True              # False => encoder (bidirectional)
+    mlp_act: str = "silu"            # "silu" | "gelu"
+    mlp_gated: bool = True           # SwiGLU/GeGLU vs plain MLP
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    input_mode: str = "tokens"       # "tokens" | "features" (frontend stub)
+    # Runtime / parallelism knobs (see launch/sharding.py)
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True
+    remat_policy: str = "full"       # "full" | "dots" (save dot outputs:
+                                     # bwd never re-runs matmuls or their
+                                     # TP psums; costs activation memory)
+    fsdp: bool = True                # shard params/opt-state over 'data'
+    seq_shard_decode: bool = True    # shard KV-cache seq when kv_heads small
+
+    # ----- derived -----
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def d_inner(self) -> int:        # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def rnn_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded up so embedding tables shard evenly over 16-way TP."""
+        return -(-self.vocab_size // 256) * 256
+
+    def stages(self) -> list[tuple[tuple[LayerSpec, ...], int]]:
+        """Layer stack as (unit, repeat) stages with stacked params."""
+        L = self.num_layers
+        if self.family == "ssm":
+            return [((LayerSpec("mamba", "none"),), L)]
+        if self.family == "hybrid":
+            unit = tuple(LayerSpec(m, "swiglu") for m in self.pattern)
+            reps, rem = divmod(L, len(unit))
+            out = [(unit, reps)] if reps else []
+            if rem:
+                out.append((unit[:rem], 1))
+            return out
+        mixer = "mla" if self.use_mla else "ga"
+        ffn = "moe" if self.num_experts else "swiglu"
+        return [((LayerSpec(mixer, ffn),), L)]
+
+    def supports_decode(self) -> bool:
+        return self.causal
+
+    def supports_long_context(self) -> bool:
+        """True iff no full-attention mixer (sub-quadratic in seq)."""
+        return all(spec.mixer in ("mamba", "rglru", "la", "none")
+                   for unit, _ in self.stages() for spec in unit)

@@ -1,0 +1,642 @@
+"""Functional layer library for the unified LM stack.
+
+Every block is three functions: ``init_*`` (params pytree), ``specs_*``
+(matching pytree of *logical* sharding axes, see repro/sharding.py), and
+``apply_*``.  Blocks support three modes:
+
+  train   — full-sequence forward, no cache
+  prefill — full-sequence forward, returns a decode cache
+  decode  — single-token step against a preallocated cache
+
+Mixers: ga (full GQA/MQA attention), la (banded local attention),
+mla (MiniCPM3/DeepSeek multi-head latent attention with the absorbed
+decode path), mamba (Mamba-1 selective SSM), rglru (RecurrentGemma
+RG-LRU).  Channel mixers: swiglu, moe (token-choice top-k with per-expert
+capacity), none.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import LayerSpec, ModelConfig
+from repro.sharding import constrain
+
+Params = dict
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fan_in))
+
+
+def _zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def rms_norm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta):
+    """Half-rotation RoPE.  x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (...,S,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def _softmax_f32(scores, mask):
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p
+
+
+# --------------------------------------------------------------------------
+# GQA / local attention
+# --------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key) -> Params:
+    D, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (D, H * hd)),
+        "wk": _init(ks[1], (D, G * hd)),
+        "wv": _init(ks[2], (D, G * hd)),
+        "wo": _init(ks[3], (H * hd, D)),
+    }
+
+
+def specs_attn(cfg) -> Params:
+    return {"wq": ("embed", "qkv"), "wk": ("embed", "kv_proj"),
+            "wv": ("embed", "kv_proj"), "wo": ("qkv", "embed")}
+
+
+def init_attn_cache(cfg, batch, seq_len, local=False):
+    G, hd = cfg.num_kv_heads, cfg.hd
+    T = min(seq_len, cfg.local_window) if local else seq_len
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": _zeros((batch, T, G, hd), dt),
+        "v": _zeros((batch, T, G, hd), dt),
+        "pos": jnp.full((T,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def _attend(q, k, v, q_pos, k_pos, *, causal, window, cfg):
+    """q: (B,S,H,hd)  k/v: (B,T,G,hd)  q_pos: (B,S)  k_pos: (B,T) or (T,)."""
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    q = q.reshape(B, S, G, H // G, hd)
+    scores = jnp.einsum("bsghd,btgd->bghst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    qp = q_pos[:, None, None, :, None]                  # (B,1,1,S,1)
+    kp = k_pos[:, None, None, None, :]                  # (B,1,1,1,T)
+    mask = kp >= 0
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    p = _softmax_f32(scores, mask).astype(v.dtype)
+    ctx = jnp.einsum("bghst,btgd->bsghd", p, v)
+    return ctx.reshape(B, S, H * hd)
+
+
+def apply_attn(p: Params, x, cfg: ModelConfig, *, positions, mode,
+               cache=None, local=False):
+    B, S, D = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = constrain((x @ p["wq"].astype(dt)), "batch", None, "qkv")
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, S, G, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, G, hd)
+    q = constrain(q, "batch", None, "heads", None)
+
+    window = cfg.local_window if local else None
+    causal = cfg.causal
+
+    if mode == "decode":
+        T = cache["k"].shape[1]
+        cur = positions[:, 0]                            # (B,) same step
+        slot = (cur[0] % T) if local else cur[0]
+        k_buf = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        v_buf = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        pos_buf = lax.dynamic_update_slice_in_dim(
+            cache["pos"], cur[:1], slot, axis=0)
+        k_buf = constrain(k_buf, "batch", "kv_seq", None, None)
+        v_buf = constrain(v_buf, "batch", "kv_seq", None, None)
+        ctx = _attend(q, k_buf, v_buf, positions, pos_buf,
+                      causal=causal, window=window, cfg=cfg)
+        new_cache = {"k": k_buf, "v": v_buf, "pos": pos_buf}
+    else:
+        # Prefill on TPU goes through the fused flash-attention Pallas
+        # kernel (forward-only; scores never reach HBM).  Train keeps the
+        # XLA path (differentiable); CPU keeps it too (Pallas TPU kernels
+        # don't lower on the CPU dry-run backend).
+        if (mode == "prefill" and jax.default_backend() == "tpu"
+                and positions.shape[1] == k.shape[1]):
+            from repro.kernels import ops as kops
+            ctx = kops.flash_attention(q, k, v, causal=causal,
+                                       window=window).reshape(B, S, H * hd)
+        else:
+            ctx = _attend(q, k, v, positions, positions, causal=causal,
+                          window=window, cfg=cfg)
+        new_cache = None
+        if mode == "prefill":
+            if cache is not None:
+                # Write into the preallocated decode cache (prefill is
+                # assumed to start at position 0).  Ring invariant for
+                # local attention: slot p % T holds position p.
+                T = cache["k"].shape[1]
+                W = min(S, T)
+                kw, vw = k[:, -W:], v[:, -W:]
+                pw = positions[0, -W:].astype(jnp.int32)
+                if local and S > T:
+                    r = S % T
+                    kw = jnp.roll(kw, r, axis=1)
+                    vw = jnp.roll(vw, r, axis=1)
+                    pw = jnp.roll(pw, r, axis=0)
+                k_buf = lax.dynamic_update_slice_in_dim(
+                    cache["k"], kw.astype(cache["k"].dtype), 0, axis=1)
+                v_buf = lax.dynamic_update_slice_in_dim(
+                    cache["v"], vw.astype(cache["v"].dtype), 0, axis=1)
+                pos_buf = lax.dynamic_update_slice_in_dim(
+                    cache["pos"], pw, 0, axis=0)
+                new_cache = {"k": k_buf, "v": v_buf, "pos": pos_buf}
+            else:
+                W = min(S, cfg.local_window) if local else S
+                new_cache = {"k": k[:, -W:], "v": v[:, -W:],
+                             "pos": positions[0, -W:].astype(jnp.int32)}
+    out = constrain(ctx @ p["wo"].astype(dt), "batch", None, None)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    D, H = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": _init(ks[0], (D, qr)),
+        "q_norm": jnp.ones((qr,), jnp.float32),
+        "wq_b": _init(ks[1], (qr, H * (dn + dr))),
+        "wkv_a": _init(ks[2], (D, kr + dr)),
+        "kv_norm": jnp.ones((kr,), jnp.float32),
+        "wkv_b": _init(ks[3], (kr, H * (dn + dv))),
+        "wo": _init(ks[4], (H * dv, D)),
+    }
+
+
+def specs_mla(cfg) -> Params:
+    return {"wq_a": ("embed", "lora"), "q_norm": ("lora",),
+            "wq_b": ("lora", "qkv"), "wkv_a": ("embed", "lora"),
+            "kv_norm": ("lora",), "wkv_b": ("lora", "qkv"),
+            "wo": ("qkv", "embed")}
+
+
+def init_mla_cache(cfg, batch, seq_len):
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ckv": _zeros((batch, seq_len, cfg.kv_lora_rank), dt),
+        "kr": _zeros((batch, seq_len, cfg.qk_rope_dim), dt),
+        "pos": jnp.full((seq_len,), -1, jnp.int32),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    dt = x.dtype
+    q = rms_norm(x @ p["wq_a"].astype(dt), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(dt)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(p: Params, x, cfg: ModelConfig, *, positions, mode,
+              cache=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    kr_rank = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+
+    kv_a = x @ p["wkv_a"].astype(dt)                       # (B,S,kr+dr)
+    ckv = rms_norm(kv_a[..., :kr_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, kr_rank:], positions,
+                  cfg.rope_theta)[:, :, 0]                 # (B,S,dr) shared
+
+    wkv_b = p["wkv_b"].astype(dt).reshape(kr_rank, H, dn + dv)
+
+    if mode == "decode":
+        T = cache["ckv"].shape[1]
+        cur = positions[:, 0]
+        slot = cur[0]
+        ckv_buf = lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, slot, 1)
+        kr_buf = lax.dynamic_update_slice_in_dim(cache["kr"], k_rope, slot, 1)
+        pos_buf = lax.dynamic_update_slice_in_dim(cache["pos"], cur[:1],
+                                                  slot, 0)
+        ckv_buf = constrain(ckv_buf, "batch", "kv_seq", None)
+        # Absorbed attention: score = (q_nope W_uk) . ckv + q_rope . k_rope
+        w_uk = wkv_b[..., :dn]                             # (kr, H, dn)
+        q_abs = jnp.einsum("bshn,khn->bshk", q_nope, w_uk) # (B,1,H,kr)
+        s_c = jnp.einsum("bshk,btk->bhst", q_abs, ckv_buf,
+                         preferred_element_type=jnp.float32)
+        s_r = jnp.einsum("bshr,btr->bhst", q_rope, kr_buf,
+                         preferred_element_type=jnp.float32)
+        mask = ((pos_buf[None, None, None, :] >= 0)
+                & (pos_buf[None, None, None, :] <= cur[:, None, None, None]))
+        pr = _softmax_f32((s_c + s_r) * scale, mask).astype(dt)
+        ctx_c = jnp.einsum("bhst,btk->bshk", pr, ckv_buf)  # (B,1,H,kr)
+        w_uv = wkv_b[..., dn:]                             # (kr, H, dv)
+        ctx = jnp.einsum("bshk,khv->bshv", ctx_c, w_uv)
+        new_cache = {"ckv": ckv_buf, "kr": kr_buf, "pos": pos_buf}
+    else:
+        kv = jnp.einsum("bsk,khd->bshd", ckv, wkv_b)       # expand
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        qp = positions[:, None, :, None]
+        kp = positions[:, None, None, :]
+        mask = kp <= qp if cfg.causal else jnp.bool_(True)
+        pr = _softmax_f32(scores, mask).astype(dt)
+        ctx = jnp.einsum("bhst,bthv->bshv", pr, v)
+        new_cache = None
+        if mode == "prefill":
+            if cache is not None:   # write into preallocated decode cache
+                new_cache = {
+                    "ckv": lax.dynamic_update_slice_in_dim(
+                        cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, 1),
+                    "kr": lax.dynamic_update_slice_in_dim(
+                        cache["kr"], k_rope.astype(cache["kr"].dtype), 0, 1),
+                    "pos": lax.dynamic_update_slice_in_dim(
+                        cache["pos"], positions[0].astype(jnp.int32), 0, 0),
+                }
+            else:
+                new_cache = {"ckv": ckv, "kr": k_rope,
+                             "pos": positions[0].astype(jnp.int32)}
+    out = ctx.reshape(B, S, H * dv) @ p["wo"].astype(dt)
+    return constrain(out, "batch", None, None), new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff=None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": _init(ks[0], (D, F)), "wo": _init(ks[2], (F, D))}
+    if cfg.mlp_gated:
+        p["wg"] = _init(ks[1], (D, F))
+    return p
+
+
+def specs_mlp(cfg) -> Params:
+    p = {"wi": ("embed", "ff"), "wo": ("ff", "embed")}
+    if cfg.mlp_gated:
+        p["wg"] = ("embed", "ff")
+    return p
+
+
+def apply_mlp(p: Params, x, cfg: ModelConfig):
+    dt = x.dtype
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    if cfg.mlp_gated:
+        h = act(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    else:
+        h = act(x @ p["wi"].astype(dt))
+    h = constrain(h, "batch", None, "ff")
+    return constrain(h @ p["wo"].astype(dt), "batch", None, None)
+
+
+# --------------------------------------------------------------------------
+# MoE (token-choice top-k, per-expert capacity, TP over expert d_ff)
+# --------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (D, E)),
+        "wi": _init(ks[1], (E, D, F), in_axis=1),
+        "wg": _init(ks[2], (E, D, F), in_axis=1),
+        "wo": _init(ks[3], (E, F, D), in_axis=1),
+    }
+
+
+def specs_moe(cfg) -> Params:
+    return {"router": ("embed", None),
+            "wi": ("experts", "embed", "ff"),
+            "wg": ("experts", "embed", "ff"),
+            "wo": ("experts", "ff", "embed")}
+
+
+def apply_moe(p: Params, x, cfg: ModelConfig, *, drop: bool = True):
+    """Token-choice top-k routing with GROUP-LOCAL capacity (GShard /
+    Switch style): tokens are split into G groups aligned with the data
+    shards, and each group routes its own tokens into per-expert
+    capacity slots.  The dispatch gather and combine scatter then never
+    cross a shard boundary — without grouping, GSPMD lowers them to
+    all-reduces of the full (E, C, D) dispatch tensor (measured 8 TB per
+    granite step; EXPERIMENTS.md §Perf iterations A.3/A.4).
+
+    Tokens beyond a group's per-expert capacity are dropped during
+    training (standard).  At inference (``drop=False``) capacity is the
+    full group so nothing is dropped — keeps decode consistent with
+    prefill regardless of batch size.  Returns (out, aux_loss)."""
+    from repro import sharding as shd
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    dt = x.dtype
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, k)                           # (T,k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    # dense (T,E) combine weights
+    weights = jnp.zeros((T, E), jnp.float32)
+    weights = weights.at[jnp.arange(T)[:, None], top_i].set(top_p)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    f = jnp.mean((weights > 0).astype(jnp.float32), axis=0)
+    pm = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pm)
+
+    # group count = size of the mesh axes the token dim is sharded over;
+    # grouping only pays when groups are big (decode steps have T ~ B:
+    # per-group routing there multiplies compute/reshards for nothing)
+    G = shd.logical_axis_size("moe_grp")
+    if T % G or (T // G) < max(E, 256):
+        G = 1
+    Tg = T // G
+    Cg = (min(Tg, int(cfg.capacity_factor * k * Tg / E) + 1) if drop
+          else Tg)
+    if Cg >= 64:
+        Cg = min(Tg, -(-Cg // 8) * 8)
+
+    gate_g = weights.reshape(G, Tg, E).transpose(0, 2, 1)        # (G,E,Tg)
+    w_gec, idx = lax.top_k(gate_g, Cg)                           # (G,E,Cg)
+    idx = constrain(idx, "moe_grp", None, None)
+    w_gec = constrain(w_gec, "moe_grp", None, None)
+    xg = constrain(xf.reshape(G, Tg, D), "moe_grp", None, None)
+
+    def experts_ffn(xg, idx, w_gec, wi, wg, wo, *, psum_axis=None):
+        """Dispatch -> expert FFN -> combine.  wi/wg/wo may be sliced on
+        the F dim (manual TP): ys is then a partial sum and the psum
+        runs AFTER the combine scatter — (T, D) bytes instead of
+        (E, C, D) bytes on the wire (EXPERIMENTS §Perf A.6)."""
+        xs = jnp.take_along_axis(xg[:, None], idx[..., None], axis=2)
+        xs = constrain(xs, "moe_grp", None, None, None)          # (G,E,Cg,D)
+        h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, wg))
+             * jnp.einsum("gecd,edf->gecf", xs, wi))
+        h = constrain(h, "moe_grp", None, None, "ff")
+        ys = jnp.einsum("gecf,efd->gecd", h, wo)
+        ys = constrain(ys, "moe_grp", None, None, None)
+        ys = ys * w_gec[..., None].astype(ys.dtype)
+        out = jnp.zeros(xg.shape, ys.dtype)
+        out = out.at[jnp.arange(xg.shape[0])[:, None, None], idx].add(ys)
+        if psum_axis is not None:
+            out = lax.psum(out, psum_axis)                        # (G,Tg,D)
+        return out
+
+    manual_axis = shd.manual_moe_axis(cfg.d_ff)
+    if manual_axis is not None:
+        import jax as _jax
+        mesh, _ = shd.active()
+        F_loc = cfg.d_ff // mesh.shape[manual_axis]
+        from jax.sharding import PartitionSpec as P
+        out = _jax.shard_map(
+            functools.partial(experts_ffn, psum_axis=manual_axis),
+            mesh=mesh,
+            in_specs=(P(), P(), P(),
+                      P(None, None, manual_axis),
+                      P(None, None, manual_axis),
+                      P(None, manual_axis, None)),
+            out_specs=P(),
+            axis_names={manual_axis},
+            check_vma=False,
+        )(xg, idx, w_gec, p["wi"].astype(dt), p["wg"].astype(dt),
+          p["wo"].astype(dt))
+    else:
+        out = experts_ffn(xg, idx, w_gec, p["wi"].astype(dt),
+                          p["wg"].astype(dt), p["wo"].astype(dt))
+    return constrain(out.reshape(B, S, D), "batch", None, None), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 selective SSM
+# --------------------------------------------------------------------------
+
+def init_mamba(cfg: ModelConfig, key) -> Params:
+    D, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, cw = cfg.dt_rank_, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _init(ks[0], (D, 2 * di)),
+        "conv_w": _init(ks[1], (cw, di)),
+        "conv_b": _zeros((di,)),
+        "x_proj": _init(ks[2], (di, dtr + 2 * st)),
+        "dt_w": _init(ks[3], (dtr, di)),
+        "dt_b": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))),
+        "D": jnp.ones((di,)),
+        "out_proj": _init(ks[5], (di, D)),
+    }
+
+
+def specs_mamba(cfg) -> Params:
+    return {"in_proj": ("embed", "inner"), "conv_w": (None, "inner"),
+            "conv_b": ("inner",), "x_proj": ("inner", None),
+            "dt_w": (None, "inner"), "dt_b": ("inner",),
+            "A_log": ("inner", "state"), "D": ("inner",),
+            "out_proj": ("inner", "embed")}
+
+
+def init_mamba_cache(cfg, batch):
+    di, st, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"conv": _zeros((batch, cw - 1, di), jnp.dtype(cfg.dtype)),
+            "h": _zeros((batch, di, st), jnp.float32)}
+
+
+def _causal_conv(xi, w, b, conv_state=None):
+    """Depthwise causal conv along seq.  xi: (B,S,di), w: (cw,di)."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xi.shape[0], cw - 1, xi.shape[2]), xi.dtype)
+    else:
+        pad = conv_state.astype(xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)            # (B, S+cw-1, di)
+    out = sum(xp[:, j:j + xi.shape[1]] * w[j].astype(xi.dtype)
+              for j in range(cw))
+    return out + b.astype(xi.dtype), xp[:, -(cw - 1):]
+
+
+def _ssm_scan(dA, dBu):
+    """h_t = dA_t * h_{t-1} + dBu_t along axis 1 via associative scan."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+    _, h = lax.associative_scan(combine, (dA, dBu), axis=1)
+    return h
+
+
+def apply_mamba(p: Params, x, cfg: ModelConfig, *, mode, cache=None):
+    B, S, D = x.shape
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, "batch", None, "inner")
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    dbc = xi @ p["x_proj"].astype(dt_)
+    dt_un = dbc[..., :dtr] @ p["dt_w"].astype(dt_) + p["dt_b"].astype(dt_)
+    delta = jax.nn.softplus(dt_un.astype(jnp.float32))          # (B,S,di)
+    Bs = dbc[..., dtr:dtr + st].astype(jnp.float32)
+    Cs = dbc[..., dtr + st:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                     # (di,st)
+
+    dA = jnp.exp(delta[..., None] * A)                           # (B,S,di,st)
+    dBu = (delta * xi.astype(jnp.float32))[..., None] * Bs[:, :, None, :]
+
+    if mode == "decode":
+        h = cache["h"] * dA[:, 0] + dBu[:, 0]                    # (B,di,st)
+        y = jnp.einsum("bds,bs->bd", h, Cs[:, 0])[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    elif (mode == "prefill" and jax.default_backend() == "tpu"
+          and S % 256 == 0 and di % 512 == 0):
+        # fused Pallas selective scan on TPU: dA/dBu never reach HBM
+        # (kernels/selective_scan.py; forward-only, hence prefill-only)
+        from repro.kernels import ops as kops
+        y, h_last = kops.selective_scan(
+            xi, delta.astype(xi.dtype), A, Bs.astype(xi.dtype),
+            Cs.astype(xi.dtype), jnp.zeros_like(p["D"]))  # D-term added below
+        new_cache = {"conv": new_conv.astype(jnp.dtype(cfg.dtype)),
+                     "h": h_last}
+    else:
+        hs = _ssm_scan(dA, dBu)                                  # (B,S,di,st)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cs)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv.astype(jnp.dtype(cfg.dtype)),
+                         "h": hs[:, -1]}
+    y = (y + p["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+         ).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    return constrain(out, "batch", None, None), new_cache
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block)
+# --------------------------------------------------------------------------
+
+_RG_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key) -> Params:
+    D, W = cfg.d_model, cfg.rnn_width
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _init(ks[0], (D, W)),
+        "wy": _init(ks[1], (D, W)),
+        "conv_w": _init(ks[2], (cw, W)),
+        "conv_b": _zeros((W,)),
+        "wi": _init(ks[3], (W, W)),
+        "wr": _init(ks[4], (W, W)),
+        "a_param": jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, W) ** (-1.0 / _RG_C) - 1.0)),
+        "wo": _init(ks[5], (W, D)),
+    }
+
+
+def specs_rglru(cfg) -> Params:
+    return {"wx": ("embed", "rnn"), "wy": ("embed", "rnn"),
+            "conv_w": (None, "rnn"), "conv_b": ("rnn",),
+            "wi": ("rnn_in", "rnn"), "wr": ("rnn_in", "rnn"),
+            "a_param": ("rnn",), "wo": ("rnn", "embed")}
+
+
+def init_rglru_cache(cfg, batch):
+    W, cw = cfg.rnn_width, cfg.ssm_conv
+    return {"conv": _zeros((batch, cw - 1, W), jnp.dtype(cfg.dtype)),
+            "h": _zeros((batch, W), jnp.float32)}
+
+
+def apply_rglru(p: Params, x, cfg: ModelConfig, *, mode, cache=None):
+    B, S, D = x.shape
+    dt_ = x.dtype
+    xb = constrain(x @ p["wx"].astype(dt_), "batch", None, "rnn")
+    yb = jax.nn.gelu(x @ p["wy"].astype(dt_))
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+
+    i_g = jax.nn.sigmoid(xb @ p["wi"].astype(dt_)).astype(jnp.float32)
+    r_g = jax.nn.sigmoid(xb @ p["wr"].astype(dt_)).astype(jnp.float32)
+    log_a0 = -_RG_C * jax.nn.softplus(p["a_param"])          # (W,) <= 0
+    a = jnp.exp(log_a0 * r_g)                                 # (B,S,W)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i_g * xb.astype(jnp.float32))
+
+    if mode == "decode":
+        h = cache["h"] * a[:, 0] + gated[:, 0]
+        y = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        y = _ssm_scan(a, gated)                               # (B,S,W)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv.astype(jnp.dtype(cfg.dtype)),
+                         "h": y[:, -1]}
+    out = (y.astype(dt_) * yb) @ p["wo"].astype(dt_)
+    return constrain(out, "batch", None, None), new_cache

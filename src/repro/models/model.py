@@ -1,0 +1,283 @@
+"""Unified model assembly: embedding -> staged scan-over-layers -> head.
+
+Parameters are plain pytrees; ``param_logical_specs`` returns an identical
+tree of *logical* sharding-axis tuples (bound to the mesh by
+repro/sharding.py rules).  Layers within a stage are stacked on a leading
+axis and driven by ``lax.scan`` (small HLO at 64 layers) with optional
+remat of the layer body.
+
+Modes: train (full-seq logits), prefill (logits + decode cache),
+decode (single-token step against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import LayerSpec, ModelConfig
+from repro.sharding import constrain
+
+MIXER_INIT = {"ga": L.init_attn, "la": L.init_attn, "mla": L.init_mla,
+              "mamba": L.init_mamba, "rglru": L.init_rglru}
+MIXER_SPECS = {"ga": L.specs_attn, "la": L.specs_attn, "mla": L.specs_mla,
+               "mamba": L.specs_mamba, "rglru": L.specs_rglru}
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(spec: LayerSpec, cfg: ModelConfig, key):
+    km, kf = jax.random.split(key)
+    p = {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+         "mixer": MIXER_INIT[spec.mixer](cfg, km)}
+    if spec.ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ffn"] = (L.init_moe(cfg, kf) if spec.ffn == "moe"
+                    else L.init_mlp(cfg, kf))
+    return p
+
+
+def _layer_specs(spec: LayerSpec, cfg: ModelConfig):
+    p = {"norm1": ("embed",), "mixer": MIXER_SPECS[spec.mixer](cfg)}
+    if spec.ffn != "none":
+        p["norm2"] = ("embed",)
+        p["ffn"] = (L.specs_moe(cfg) if spec.ffn == "moe"
+                    else L.specs_mlp(cfg))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 4)
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = L._init(keys[0], (Vp, D), in_axis=1)
+    else:  # precomputed frontend features (audio/vision stubs)
+        params["in_proj"] = L._init(keys[0], (D, D))
+    stages = []
+    kstage = jax.random.split(keys[1], 64)
+    for si, (unit, repeat) in enumerate(cfg.stages()):
+        per_pos = []
+        for ui, spec in enumerate(unit):
+            ks = jax.random.split(kstage[si * 8 + ui], repeat)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_layer(spec, cfg, ks[r]) for r in range(repeat)])
+            per_pos.append(stacked)
+        stages.append(list(per_pos))
+    params["stages"] = stages
+    params["final_norm"] = jnp.ones((D,), jnp.float32)
+    if not cfg.tie_embeddings and cfg.input_mode == "tokens":
+        params["head"] = L._init(keys[2], (D, Vp))
+    elif cfg.input_mode != "tokens":
+        params["head"] = L._init(keys[2], (D, Vp))
+    return params
+
+
+def param_logical_specs(cfg: ModelConfig) -> dict:
+    specs: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        # column dim intentionally unsharded ("embed_col" -> None): a
+        # token gather whose operand is sharded on BOTH dims crashes the
+        # XLA SPMD partitioner under partial-manual meshes (see
+        # EXPERIMENTS.md §Dry-run notes); vocab-sharded-only gathers are
+        # the well-trodden path.
+        specs["embed"] = ("vocab", "embed_col")
+    else:
+        specs["in_proj"] = ("embed", None)
+    stages = []
+    for unit, repeat in cfg.stages():
+        per_pos = []
+        for spec in unit:
+            tree = _layer_specs(spec, cfg)
+            per_pos.append(jax.tree.map(
+                lambda ax: (None,) + tuple(ax), tree,
+                is_leaf=lambda x: isinstance(x, tuple)))
+        stages.append(list(per_pos))
+    specs["stages"] = stages
+    specs["final_norm"] = ("embed",)
+    if "head" in _head_keys(cfg):
+        specs["head"] = ("embed", "vocab")
+    return specs
+
+
+def _head_keys(cfg):
+    return ({"head"} if (not cfg.tie_embeddings or cfg.input_mode != "tokens")
+            else set())
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# cache
+# --------------------------------------------------------------------------
+
+def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                 seq_len: int):
+    m = spec.mixer
+    if m == "ga":
+        return L.init_attn_cache(cfg, batch, seq_len, local=False)
+    if m == "la":
+        return L.init_attn_cache(cfg, batch, seq_len, local=True)
+    if m == "mla":
+        return L.init_mla_cache(cfg, batch, seq_len)
+    if m == "mamba":
+        return L.init_mamba_cache(cfg, batch)
+    if m == "rglru":
+        return L.init_rglru_cache(cfg, batch)
+    return None
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Decode cache pytree, stacked (repeat, ...) per stage position."""
+    out = []
+    for unit, repeat in cfg.stages():
+        per_pos = []
+        for spec in unit:
+            single = _layer_cache(spec, cfg, batch, seq_len)
+            per_pos.append(jax.tree.map(
+                lambda a: jnp.zeros((repeat,) + a.shape, a.dtype)
+                if a.dtype != jnp.int32
+                else jnp.full((repeat,) + a.shape, -1, a.dtype), single))
+        out.append(list(per_pos))
+    return out
+
+
+_CACHE_SPECS = {
+    # leaf-name -> logical axes (leading layer-stack dim prepended below)
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+    "pos": (None,),
+    "ckv": ("batch", "kv_seq", None),
+    "kr": ("batch", "kv_seq", None),
+    "conv": ("batch", None, "inner"),
+    "h": None,  # mamba (batch, inner, state) vs rglru (batch, rnn): by ndim
+}
+
+
+def cache_logical_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """Logical sharding specs matching ``init_cache``'s tree."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+    def spec_for(path, leaf):
+        name = None
+        for p in path:
+            if hasattr(p, "key"):
+                name = p.key
+        if name == "h":
+            base = (("batch", "inner", "state") if leaf.ndim == 4
+                    else ("batch", "rnn"))
+        else:
+            base = _CACHE_SPECS[name]
+        return (None,) + tuple(base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _apply_layer(pp, x, spec: LayerSpec, cfg, positions, mode, cache):
+    h = L.rms_norm(x, pp["norm1"], cfg.norm_eps)
+    m = spec.mixer
+    if m in ("ga", "la"):
+        out, nc = L.apply_attn(pp["mixer"], h, cfg, positions=positions,
+                               mode=mode, cache=cache, local=(m == "la"))
+    elif m == "mla":
+        out, nc = L.apply_mla(pp["mixer"], h, cfg, positions=positions,
+                              mode=mode, cache=cache)
+    elif m == "mamba":
+        out, nc = L.apply_mamba(pp["mixer"], h, cfg, mode=mode, cache=cache)
+    elif m == "rglru":
+        out, nc = L.apply_rglru(pp["mixer"], h, cfg, mode=mode, cache=cache)
+    else:
+        raise ValueError(m)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h2 = L.rms_norm(x, pp["norm2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            out2, aux = L.apply_moe(pp["ffn"], h2, cfg,
+                                    drop=(mode == "train"))
+        else:
+            out2 = L.apply_mlp(pp["ffn"], h2, cfg)
+        x = x + out2
+    return x, nc, aux
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
+            cache=None):
+    """batch: {"tokens": (B,S) int32} or {"features": (B,S,D)}, plus
+    "positions": (B,S) int32.  Returns (logits, new_cache, aux)."""
+    dt = jnp.dtype(cfg.dtype)
+    positions = batch["positions"]
+    if cfg.input_mode == "tokens":
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    else:
+        x = batch["features"].astype(dt) @ params["in_proj"].astype(dt)
+    x = constrain(x, "batch", None, None)
+
+    new_cache_out = []
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (unit, repeat) in enumerate(cfg.stages()):
+        stage_params = params["stages"][si]
+        stage_cache = (cache[si] if cache is not None
+                       else [None for _ in unit])
+
+        def body(carry, xs, unit=unit):
+            x, aux = carry
+            layer_params, layer_cache = xs
+            ncs = []
+            for spec, pp, cc in zip(unit, layer_params, layer_cache):
+                x, nc, a = _apply_layer(pp, x, spec, cfg, positions,
+                                        mode, cc)
+                aux = aux + a
+                ncs.append(nc)
+            return (x, aux), list(ncs)
+
+        if cfg.remat and cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), stage_nc = lax.scan(
+            body, (x, aux_total), (stage_params, stage_cache))
+        new_cache_out.append(stage_nc)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = x @ params["embed"].astype(dt).T
+    else:
+        logits = x @ params["head"].astype(dt)
+    logits = constrain(logits, "batch", None, "vocab")
+
+    has_cache = mode in ("prefill", "decode")
+    return logits, (new_cache_out if has_cache else None), aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, aux_weight=0.01):
+    """Causal (or frame-wise) cross entropy over the *real* vocab."""
+    logits, _, aux = forward(params, cfg, batch, mode="train")
+    V = cfg.vocab_size
+    Vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if Vp > V:  # mask padded vocab out of the partition function
+        pad_mask = jnp.arange(Vp) < V
+        logits = jnp.where(pad_mask, logits, L.NEG_INF)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}

@@ -1,0 +1,149 @@
+"""S-RSVD gradient compression across the pod axis (DESIGN.md §1).
+
+At 2+ pods the cross-pod gradient all-reduce rides the slow DCN links, and
+it is the dominant collective for FSDP+TP training.  We replace it, for
+every large 2-D parameter, with an all-reduce of *shifted randomized SVD
+factors*:
+
+  1. All pods draw the SAME Gaussian test matrix (seeded by step), so the
+     sample ``S_i = (G_i - mu_i 1^T) Omega`` is LINEAR in the local
+     gradient — ``psum(S_i)`` is exactly the sample of the mean shifted
+     gradient.  (This linearity is what makes randomized sketching
+     all-reduce-compatible; deterministic SVD is not.)
+  2. Every pod computes the same basis ``Q = qr(psum(S_i))`` locally.
+  3. The projection ``Y_i = Q^T G_i - (Q^T mu_i) 1^T`` is also linear ->
+     one more psum.  Decompressed mean gradient:
+     ``G_hat = Q psum(Y_i)/P + psum(mu_i)/P 1^T``.
+  4. Error feedback: each pod keeps ``e_i = G_i - Dec(Comp(G_i))`` and
+     adds it to the next step's gradient, so compression error
+     accumulates boundedly instead of biasing the trajectory (PowerSGD).
+
+Why the *shift*: gradient matrices are off-center (row means are far from
+0 whenever a unit's fan-in co-adapts), and the paper shows shifted
+factorization dominates plain RSVD exactly for off-center matrices at
+small rank.  Rank-k factors cost (m + n + 1) k floats on DCN instead of
+m n — e.g. a 6144 x 32768 grok expert slab at rank 16 is 323x smaller.
+
+Communication accounting per 2-D leaf: psum bytes = K(m + n) + m
+(vs m*n uncompressed); all compute (QR, small matmuls) is pod-local.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    rank: int = 16
+    min_dim: int = 256          # only compress leaves with min(shape) >= this
+    min_numel: int = 1 << 20    # ... and at least this many elements
+    shift: bool = True          # S-RSVD (paper) vs plain RSVD baseline
+    axis: str = "pod"
+
+
+def _compressible(leaf) -> bool:
+    return leaf.ndim == 2
+
+
+def leaf_eligible(cfg: CompressConfig, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    m, n = leaf.shape[-2], leaf.shape[-1]
+    return (min(m, n) >= cfg.min_dim and leaf.size >= cfg.min_numel
+            and min(m, n) > 4 * cfg.rank)
+
+
+def compress_state_init(cfg: CompressConfig, grads_like):
+    """Error-feedback buffers for every eligible leaf (zeros elsewhere
+    would waste memory — ineligible leaves get a scalar placeholder)."""
+    def init(leaf):
+        if leaf_eligible(cfg, leaf):
+            return jnp.zeros(leaf.shape, jnp.float32)
+        return jnp.zeros((), jnp.float32)
+    return jax.tree.map(init, grads_like)
+
+
+def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
+    """One eligible leaf: returns (mean_gradient_hat, new_err).
+
+    ``g`` may be (m, n) or (..., m, n) — leading dims are folded into m.
+    All psums are over ``axis`` (the pod axis)."""
+    shape = g.shape
+    g2 = g.reshape(-1, shape[-1]).astype(jnp.float32) + err.reshape(
+        -1, shape[-1])
+    m, n = g2.shape
+    K = cfg.rank
+    P_ = lax.axis_size(axis)
+
+    if cfg.shift:
+        mu = jnp.mean(g2, axis=1)                        # local col mean
+        sample = g2 @ omega - jnp.outer(mu, omega.sum(0))
+    else:
+        mu = jnp.zeros((m,), jnp.float32)
+        sample = g2 @ omega
+    # --- collective 1: K(m) + m floats over DCN
+    sample, mu_sum = lax.psum((sample, mu), axis)
+    Q, _ = jnp.linalg.qr(sample, mode="reduced")         # identical per pod
+
+    Y = Q.T @ g2 - jnp.outer(Q.T @ mu, jnp.ones((n,), jnp.float32))
+    # --- collective 2: K*n floats over DCN
+    Y_sum = lax.psum(Y, axis)
+
+    g_hat_mean = (Q @ Y_sum + jnp.outer(mu_sum,
+                                        jnp.ones((n,), jnp.float32))) / P_
+    # error feedback vs the *local* contribution this pod actually sent
+    local_dec = Q @ Y + jnp.outer(mu, jnp.ones((n,), jnp.float32))
+    new_err = g2 - local_dec
+    return g_hat_mean.reshape(shape).astype(g.dtype), new_err.reshape(shape)
+
+
+def compressed_pod_mean(cfg: CompressConfig, grads, err_state, step,
+                        axis: str | None = None):
+    """Mean the per-pod gradient pytree over the pod axis, compressing
+    eligible 2-D leaves with S-RSVD factors + error feedback; small and
+    >2-D-structured leaves take the plain psum path.
+
+    Must run inside shard_map (manual over the pod axis).  Returns
+    (mean_grads, new_err_state).
+    """
+    axis = axis or cfg.axis
+    P_ = lax.axis_size(axis)
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = treedef.flatten_up_to(err_state)
+
+    out, new_errs = [], []
+    for i, (g, e) in enumerate(zip(leaves, errs)):
+        if leaf_eligible(cfg, g):
+            n = g.shape[-1]
+            key = jax.random.fold_in(jax.random.PRNGKey(0x5B5D),
+                                     step * 10_007 + i)
+            omega = jax.random.normal(key, (n, cfg.rank), jnp.float32)
+            gh, ne = srsvd_compress_leaf(cfg, g, e, omega, axis)
+            out.append(gh)
+            new_errs.append(ne)
+        else:
+            out.append(lax.psum(g, axis) / P_)
+            new_errs.append(e)
+    return treedef.unflatten(out), treedef.unflatten(new_errs)
+
+
+def comm_bytes(cfg: CompressConfig, grads_like) -> dict:
+    """Static accounting: DCN bytes per step, compressed vs plain."""
+    plain = comp = 0
+    for g in jax.tree.leaves(grads_like):
+        nbytes = g.size * 4
+        plain += nbytes
+        if leaf_eligible(cfg, g):
+            m = int(jnp.prod(jnp.array(g.shape[:-1])))
+            n = g.shape[-1]
+            comp += 4 * (cfg.rank * (m + n) + m)
+        else:
+            comp += nbytes
+    return {"plain_bytes": plain, "compressed_bytes": comp,
+            "ratio": plain / max(comp, 1)}

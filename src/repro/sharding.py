@@ -1,0 +1,219 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+the launcher binds logical names to mesh axes.
+
+Inside model code:      x = constrain(x, "batch", "seq", "qkv")
+Inside the launcher:    with use_rules(mesh, RULES): ...
+
+When no rules are active (unit tests, single-CPU smoke runs) ``constrain``
+is the identity, so model code never depends on a mesh being present.
+
+Default rule set (DESIGN.md §5) for the (pod, data, model) production mesh:
+  batch   -> ('pod', 'data')     DP across pods + data axis
+  vocab/qkv/heads/kv/ff/inner/rnn -> 'model'   TP / EP
+  embed   -> 'data' when FSDP    (2-D weights become FSDP x TP sharded)
+  seq     -> None  (train)  /  'model' (sequence-parallel regions)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True,
+                  seq_parallel: bool = False,
+                  seq_shard_kv: bool = False,
+                  profile: str = "megatron") -> dict[str, object]:
+    """Logical-axis binding profiles for the fixed production mesh.
+
+    megatron — TP over 'model' for every wide layer dim + FSDP over
+        'data' for 2-D params.  The faithful large-model baseline; costs
+        two activation all-reduces per layer.
+    fsdp     — no layer TP: params ZeRO-3-sharded over 'data' and
+        gathered per layer; only the vocab head stays TP ('model') so
+        logits never need a huge psum.  Kills the per-layer activation
+        all-reduces; wins whenever layer_params << batch*seq*d_model
+        (see EXPERIMENTS.md §Perf).
+    """
+    pods = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if profile == "fsdp":
+        return {
+            # pure DP: batch over EVERY mesh axis (256/512-way); params
+            # ZeRO-3 over 'data'; per-layer all-gather is the only big
+            # collective
+            "batch": pods + ("model",),
+            "seq": "model" if seq_parallel else None,
+            "embed": ("data" if fsdp else None),
+            "vocab": "model",
+            "qkv": None, "heads": None, "kv": None,
+            "kv_seq": "model" if seq_shard_kv else None,
+            "ff": None, "kv_proj": None, "rnn_in": None,
+            "experts": None, "inner": None, "rnn": None,
+            "lora": None, "state": None, "embed_col": None,
+            "moe_grp": ("pod", "data", "model") if "pod" in mesh.axis_names else ("data", "model"),
+        }
+    if profile != "megatron":
+        raise ValueError(f"unknown sharding profile: {profile}")
+    return {
+        "batch": pods,
+        "seq": "model" if seq_parallel else None,
+        "embed": ("data" if fsdp else None),
+        "vocab": "model",
+        "qkv": "model",
+        "heads": "model",
+        "kv": None,                 # kv heads are few; never sharded
+        "kv_seq": "model" if seq_shard_kv else None,  # flash-decoding style
+        "ff": "model",
+        "kv_proj": "model",         # flattened G*hd kv projection dim
+        "rnn_in": None,
+        "experts": None,            # expert weights TP-sharded on 'ff'
+        "inner": "model",           # mamba d_inner
+        "rnn": "model",             # RG-LRU width
+        "lora": None,               # MLA compression ranks (small)
+        "state": None,              # SSM state dim (16)
+        "embed_col": None,          # embed-table cols (see model.py note)
+        "moe_grp": pods,            # MoE group-local dispatch (layers.py)
+        "moe_ffn_manual": None,     # manual-TP expert FFN (psum after combine):
+                                    # BLOCKED by an XLA crash when the
+                                    # shard_map nests inside lax.scan — see
+                                    # EXPERIMENTS §Perf A.6
+    }
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Mapping[str, object]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active() -> tuple[Mesh, dict] | None:
+    return getattr(_state, "ctx", None)
+
+
+def logical_axis_size(name: str) -> int:
+    """Product of mesh-axis sizes bound to logical axis ``name`` (1 when
+    no rules are active).  Used by group-local MoE routing to pick the
+    number of dispatch groups."""
+    ctx = active()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    ax = rules.get(name)
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def manual_moe_axis(d_ff: int) -> str | None:
+    """Mesh axis for the manual-TP MoE expert FFN (layers.apply_moe), or
+    None to use the auto-GSPMD path.
+
+    Enabled when rules bind "moe_ffn_manual" to an axis that (a) is not
+    already Manual (we may be inside another shard_map, e.g. the pod
+    compression region) and (b) divides d_ff."""
+    ctx = active()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    axis = rules.get("moe_ffn_manual")
+    if not axis or d_ff == 0 or d_ff % mesh.shape[axis]:
+        return None
+    try:
+        amesh = jax.sharding.get_abstract_mesh()
+        for a, t in zip(amesh.axis_names, amesh.axis_types):
+            if a == axis and "Manual" in str(t):
+                return None
+    except Exception:
+        pass
+    return axis
+
+
+def logical_to_spec(logical: tuple[str | None, ...],
+                    rules: Mapping[str, object]) -> P:
+    axes = []
+    used: set[str] = set()
+    for name in logical:
+        mesh_axes = rules.get(name) if name is not None else None
+        # an axis may appear in a spec only once; later dims fall back
+        if isinstance(mesh_axes, (tuple, list)):
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            used.update(mesh_axes)
+            axes.append(mesh_axes if mesh_axes else None)
+        elif mesh_axes is None or mesh_axes in used:
+            axes.append(None)
+        else:
+            used.add(mesh_axes)
+            axes.append(mesh_axes)
+    return P(*axes)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active.
+
+    Dims whose mapped mesh-axis size does not divide the dim are left
+    unconstrained (GSPMD propagation decides — e.g. 24 heads on a 16-way
+    model axis)."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(logical, rules)
+    # axes already manual (inside shard_map over e.g. 'pod') must not
+    # appear in the constraint — the context mesh owns them
+    try:
+        amesh = jax.sharding.get_abstract_mesh()
+        manual = {a for a, t in zip(amesh.axis_names, amesh.axis_types)
+                  if "Manual" in str(t)}
+    except Exception:
+        manual = set()
+    fixed = []
+    for dim, ax in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+        axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        axes = tuple(a for a in axes if a not in manual)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        ok = size and dim % size == 0
+        if not ok:
+            fixed.append(None)
+        elif len(axes) == 0:
+            fixed.append(None)
+        else:
+            fixed.append(axes if len(axes) > 1 else axes[0])
+    if manual:
+        # context mesh differs from the bound mesh: constrain via spec
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def spec_sharding(logical: tuple[str | None, ...], shape: tuple[int, ...]
+                  ) -> object | None:
+    """NamedSharding for a parameter with the active rules (divisibility-
+    checked like ``constrain``); None when no rules are active."""
+    ctx = active()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    spec = logical_to_spec(logical, rules)
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if size and dim % size == 0 else None)
+    return NamedSharding(mesh, P(*fixed))

@@ -1,0 +1,18 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests run on
+the single real CPU device.  Multi-device tests (tests/test_distributed.py)
+spawn subprocesses with their own XLA_FLAGS.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_close(a, b, *, atol=1e-5, rtol=1e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol, err_msg=msg)

@@ -1,0 +1,115 @@
+"""Checkpointing: atomicity, keep-N GC, async, restore and resharding."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
+                        save_checkpoint)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+            "opt": {"m": jnp.zeros((8, 4)),
+                    "step": jnp.asarray(3, jnp.int32)},
+            "list": [jnp.ones((2,)), jnp.zeros((3,))]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    root = str(tmp_path / "ckpt")
+    tree = _tree()
+    save_checkpoint(root, 10, tree, extra_meta={"mesh": "16x16"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out, manifest = restore_checkpoint(root, 10, like)
+    assert manifest["step"] == 10
+    assert manifest["meta"]["mesh"] == "16x16"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    root = str(tmp_path / "ckpt")
+    save_checkpoint(root, 1, _tree())
+    entries = os.listdir(root)
+    assert entries == ["step_00000001"]          # no .tmp_ leftovers
+    assert os.path.exists(os.path.join(root, "step_00000001",
+                                       "manifest.json"))
+
+
+def test_keep_last_n(tmp_path):
+    root = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(root, s, _tree(), keep=2)
+    steps = sorted(os.listdir(root))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert latest_step(root) == 5
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    root = str(tmp_path / "ckpt")
+    save_checkpoint(root, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(root, 1, {"w": jnp.zeros((5, 4))})
+
+
+def test_restore_leaf_count_mismatch_raises(tmp_path):
+    root = str(tmp_path / "ckpt")
+    save_checkpoint(root, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(root, 1, {"w": jnp.zeros((4, 4)),
+                                     "b": jnp.zeros((4,))})
+
+
+def test_manager_async_save_and_restore(tmp_path):
+    root = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(root, keep=3)
+    tree = _tree(1)
+    mgr.save(5, tree, blocking=False)
+    mgr.wait()
+    got = mgr.restore_latest(jax.tree.map(jnp.zeros_like, tree))
+    assert got is not None
+    step, out, manifest = got
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_manager_restore_empty_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "nothing"))
+    assert mgr.restore_latest({"w": jnp.zeros((2,))}) is None
+
+
+def test_manager_overlapping_saves_serialize(tmp_path):
+    root = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(root, keep=10)
+    for s in range(1, 6):
+        mgr.save(s, _tree(s), blocking=False)   # each wait()s the previous
+    mgr.wait()
+    assert latest_step(root) == 5
+
+
+def test_corrupt_manifest_ignored_for_latest(tmp_path):
+    root = str(tmp_path / "ckpt")
+    save_checkpoint(root, 1, _tree())
+    # a crashed save: directory without manifest must not count
+    os.makedirs(os.path.join(root, "step_00000099"))
+    assert latest_step(root) == 1
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Restore device_puts onto provided shardings (1-device 'new mesh')."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    root = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(root, 2, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out, _ = restore_checkpoint(root, 2, tree, shardings=sh)
+    assert out["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))

@@ -1,0 +1,87 @@
+"""Architecture registry: exact published configs + shape/skip table."""
+import pytest
+
+from repro.configs import (ARCHS, SHAPES, cell_skip_reason, get_config,
+                           runnable_cells)
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+EXPECTED = {
+    "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+    "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+    "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+    "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+    "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+    "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+    "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+    "falcon_mamba_7b": (64, 4096, 0, 0, 0, 65024),
+    "chameleon_34b": (48, 8192, 64, 8, 22016, 65536),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, D, H, G, F, V = EXPECTED[arch]
+    assert cfg.num_layers == L and cfg.d_model == D
+    assert cfg.num_heads == H and cfg.num_kv_heads == G
+    assert cfg.d_ff == F and cfg.vocab_size == V
+
+
+def test_moe_configs():
+    g = get_config("granite_moe_3b_a800m")
+    assert g.num_experts == 40 and g.experts_per_token == 8
+    k = get_config("grok_1_314b")
+    assert k.num_experts == 8 and k.experts_per_token == 2
+
+
+def test_special_families():
+    assert get_config("minicpm3_4b").use_mla
+    assert get_config("falcon_mamba_7b").ssm_state == 16
+    assert get_config("falcon_mamba_7b").num_heads == 0
+    assert not get_config("hubert_xlarge").causal
+    assert get_config("hubert_xlarge").input_mode == "features"
+    assert get_config("chameleon_34b").input_mode == "tokens"  # VQ in-vocab
+    rg = get_config("recurrentgemma_9b")
+    assert rg.pattern and "rglru" in rg.pattern and "la" in rg.pattern
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_skip_rules_31_runnable_cells():
+    cells = runnable_cells()
+    assert len(cells) == 31
+    # long_500k only for the sub-quadratic archs
+    longs = [a for a, s in cells if s == "long_500k"]
+    assert sorted(longs) == ["falcon_mamba_7b", "recurrentgemma_9b"]
+    # hubert has no decode cells
+    hubert = [s for a, s in cells if a == "hubert_xlarge"]
+    assert sorted(hubert) == ["prefill_32k", "train_4k"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_same_family(arch):
+    full, smoke = get_config(arch), get_config(arch, smoke=True)
+    assert smoke.family == full.family
+    assert smoke.num_layers <= 6   # hybrids need >= one full 3-layer unit
+    assert smoke.d_model <= 128
+    assert bool(smoke.num_experts) == bool(full.num_experts)
+    assert smoke.use_mla == full.use_mla
+    assert smoke.causal == full.causal
+    assert smoke.input_mode == full.input_mode
+
+
+def test_skip_reasons_documented():
+    hubert = get_config("hubert_xlarge")
+    assert "encoder" in cell_skip_reason(hubert, SHAPES["decode_32k"])
+    yi = get_config("yi_6b")
+    assert "quadratic" in cell_skip_reason(yi, SHAPES["long_500k"])
+    mamba = get_config("falcon_mamba_7b")
+    assert cell_skip_reason(mamba, SHAPES["long_500k"]) is None

@@ -1,0 +1,67 @@
+"""Data pipeline determinism (failover contract) + co-occurrence gen."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataPipeline, zipf_cooccurrence, zipf_tokens
+
+
+def test_batches_deterministic_in_step():
+    cfg = get_config("yi_6b", smoke=True)
+    p1 = DataPipeline(cfg, batch=4, seq=16, seed=7)
+    p2 = DataPipeline(cfg, batch=4, seq=16, seed=7)
+    b1, b2 = p1.batch_at(3), p2.batch_at(3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = p1.batch_at(4)
+    assert np.any(np.asarray(b1["tokens"]) != np.asarray(b3["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_config("yi_6b", smoke=True)
+    p = DataPipeline(cfg, batch=2, seq=12, seed=0)
+    b = p.batch_at(0)
+    # tokens[t+1] == labels[t] by construction (same underlying stream)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+    assert b["tokens"].dtype == jnp.int32
+    assert int(b["tokens"].max()) < cfg.vocab_size
+
+
+def test_feature_mode_for_stub_frontends():
+    cfg = get_config("hubert_xlarge", smoke=True)
+    p = DataPipeline(cfg, batch=2, seq=10, seed=0)
+    b = p.batch_at(0)
+    assert "features" in b and b["features"].shape == (2, 10, cfg.d_model)
+
+
+def test_partial_regeneration_matches_full():
+    """Any host must be able to regenerate any row range bit-exactly."""
+    cfg = get_config("yi_6b", smoke=True)
+    p = DataPipeline(cfg, batch=8, seq=16, seed=5)
+    full = p._host_tokens(2, 0, 8)
+    part = p._host_tokens(2, 0, 8)[3:6]
+    np.testing.assert_array_equal(full[3:6], part)
+
+
+def test_zipf_tokens_distribution():
+    toks = zipf_tokens(200_000, vocab=1000, a=1.3, seed=0)
+    assert toks.min() >= 0 and toks.max() < 1000
+    counts = np.bincount(toks, minlength=1000)
+    # Zipf: token 0 much more frequent than token 99
+    assert counts[0] > 20 * max(counts[99], 1)
+
+
+def test_zipf_cooccurrence_properties():
+    X, X_sp, density = zipf_cooccurrence(64, 256, n_pairs=100_000,
+                                         rank=8, seed=0)
+    assert X.shape == (64, 256)
+    assert 0 < density < 0.9                      # genuinely sparse
+    col = X.sum(axis=0)
+    ok = col[col > 0]
+    np.testing.assert_allclose(ok, 1.0, atol=1e-5)  # columns = probabilities
+    # the BCOO copy matches the dense matrix
+    np.testing.assert_allclose(np.asarray(X_sp.todense()), X, atol=1e-6)
+    # latent low-rank structure: top-8 SVD captures most of the energy
+    s = np.linalg.svd(X - X.mean(1, keepdims=True), compute_uv=False)
+    assert s[:8].sum() / s.sum() > 0.5

@@ -1,0 +1,37 @@
+"""End-to-end driver tests: train with checkpoint/restart, serve with
+continuous batching.  Run in-process (single CPU device)."""
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step
+from repro.launch import serve, train
+
+
+def test_train_driver_runs_and_resumes(tmp_path, capsys):
+    ckpt = str(tmp_path / "ck")
+    train.main(["--arch", "yi_6b", "--smoke", "--steps", "6",
+                "--batch", "2", "--seq", "16", "--ckpt-dir", ckpt,
+                "--ckpt-every", "3", "--log-every", "2",
+                "--warmup", "1"])
+    assert latest_step(ckpt) == 6
+    # restart: must resume from step 6, not recompute it
+    train.main(["--arch", "yi_6b", "--smoke", "--steps", "8",
+                "--batch", "2", "--seq", "16", "--ckpt-dir", ckpt,
+                "--ckpt-every", "3", "--warmup", "1"])
+    out = capsys.readouterr().out
+    assert "resumed from step 6" in out
+    assert latest_step(ckpt) == 8
+
+
+def test_serve_driver_continuous_batching(capsys):
+    serve.main(["--arch", "yi_6b", "--smoke", "--requests", "3",
+                "--batch", "2", "--prompt-len", "6", "--max-new", "4",
+                "--max-len", "24"])
+    out = capsys.readouterr().out
+    assert out.count("done req=") == 3
+    assert "served 3 requests" in out
+
+
+def test_serve_rejects_encoder():
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "hubert_xlarge", "--smoke"])

@@ -1,0 +1,103 @@
+"""Pallas fused rank-1-epilogue matmul vs the pure-jnp oracle.
+
+The kernel is TPU-targeted; ``interpret=True`` executes the kernel body
+in Python on CPU, which is how correctness is validated here (shape /
+dtype / transpose sweeps, non-128-aligned edges included).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.shifted_matmul import matmul_rank1
+
+
+@pytest.mark.parametrize("m,n,K", [
+    (128, 256, 128),        # aligned
+    (64, 100, 24),          # all unaligned
+    (300, 513, 70),         # odd everything
+    (8, 1024, 8),           # skinny
+])
+@pytest.mark.parametrize("transpose_a", [False, True])
+def test_matmul_rank1_sweep(m, n, K, transpose_a, rng):
+    A = rng.standard_normal((n, m) if transpose_a else (m, n)) \
+        .astype(np.float32)
+    B = rng.standard_normal((n, K)).astype(np.float32)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(K).astype(np.float32)
+    out = matmul_rank1(jnp.asarray(A), jnp.asarray(B), jnp.asarray(u),
+                       jnp.asarray(w), transpose_a=transpose_a,
+                       interpret=True)
+    ref = kref.matmul_rank1_ref(jnp.asarray(A), jnp.asarray(B),
+                                jnp.asarray(u), jnp.asarray(w),
+                                transpose_a=transpose_a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_rank1_dtypes(dtype, rng):
+    m, n, K = 64, 128, 32
+    A = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    B = jnp.asarray(rng.standard_normal((n, K)), dtype)
+    u = jnp.asarray(rng.standard_normal(m), dtype)
+    w = jnp.asarray(rng.standard_normal(K), dtype)
+    out = matmul_rank1(A, B, u, w, interpret=True)
+    ref = kref.matmul_rank1_ref(A, B, u, w)
+    assert out.dtype == ref.dtype
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_block_size_invariance(rng):
+    """Result must not depend on the tile decomposition."""
+    m, n, K = 200, 300, 64
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n, K)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    base = matmul_rank1(A, B, u, w, interpret=True)
+    for bm, bn, bk in [(64, 128, 128), (128, 128, 256), (256, 256, 512)]:
+        out = matmul_rank1(A, B, u, w, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_ops_shifted_matmat_equals_explicit(rng):
+    """(X - mu 1^T) @ B computed by the fused op == explicit densified."""
+    m, n, K = 48, 80, 16
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    B = rng.standard_normal((n, K)).astype(np.float32)
+    mu = X.mean(axis=1)
+    expl = (X - mu[:, None]) @ B
+    for interpret in (False, True):   # XLA fallback and Pallas interpret
+        out = ops.shifted_matmat(jnp.asarray(X), jnp.asarray(B),
+                                 jnp.asarray(mu), interpret=interpret)
+        np.testing.assert_allclose(np.asarray(out), expl, atol=2e-4,
+                                   rtol=2e-4)
+
+
+def test_ops_shifted_rmatmat_equals_explicit(rng):
+    m, n, K = 48, 80, 16
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    B = rng.standard_normal((m, K)).astype(np.float32)
+    mu = X.mean(axis=1)
+    expl = (X - mu[:, None]).T @ B
+    for interpret in (False, True):
+        out = ops.shifted_rmatmat(jnp.asarray(X), jnp.asarray(B),
+                                  jnp.asarray(mu), interpret=interpret)
+        np.testing.assert_allclose(np.asarray(out), expl, atol=2e-4,
+                                   rtol=2e-4)
+
+
+def test_kernel_zero_shift_is_plain_matmul(rng):
+    m, n, K = 32, 64, 16
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n, K)), jnp.float32)
+    out = matmul_rank1(A, B, jnp.zeros(m), jnp.zeros(K), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(A @ B),
+                               atol=2e-4, rtol=2e-4)

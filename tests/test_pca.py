@@ -1,0 +1,80 @@
+"""PCA via S-RSVD: the paper's primary application (§2, §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro.core import PCA
+from repro.core.ref import pca_mse_ref
+
+
+def _data(rng, m=40, n=300):
+    # genuine low-rank structure + offset + noise
+    U = rng.standard_normal((m, 5))
+    V = rng.standard_normal((5, n))
+    return (U @ V + 4.0 + 0.1 * rng.standard_normal((m, n))) \
+        .astype(np.float32)
+
+
+def test_fit_transform_roundtrip(rng):
+    X = _data(rng)
+    p = PCA(k=5, q=1).fit(X, key=jax.random.PRNGKey(0))
+    Y = p.transform(X)
+    assert Y.shape == (5, 300)
+    Xr = p.inverse_transform(Y)
+    # rank-5 + mean captures everything but the injected 0.1-sigma noise
+    # (noise floor ~2% relative)
+    rel = np.linalg.norm(np.asarray(Xr) - X) / np.linalg.norm(X)
+    assert rel < 0.03
+
+
+def test_mse_identity_matches_explicit(rng):
+    """The sparse-safe MSE identity == the explicit residual norm."""
+    X = _data(rng)
+    p = PCA(k=5, q=1).fit(X, key=jax.random.PRNGKey(1))
+    mse_fast = float(p.mse(X))
+    mse_expl = pca_mse_ref(X, np.asarray(p.components_.T),
+                           np.asarray(p.mean_))
+    np.testing.assert_allclose(mse_fast, mse_expl, rtol=2e-3, atol=1e-3)
+
+
+def test_mse_decreases_with_k(rng):
+    X = _data(rng, m=30, n=200)
+    mses = []
+    for k in (1, 3, 5, 10):
+        p = PCA(k=k, q=1).fit(X, key=jax.random.PRNGKey(2))
+        mses.append(float(p.mse(X)))
+    assert all(a >= b - 1e-4 for a, b in zip(mses, mses[1:]))
+
+
+def test_centered_beats_uncentered_on_offcenter_data(rng):
+    """The paper's central experimental claim (Fig 1, Table 1)."""
+    X = _data(rng)
+    k = 3
+    key = jax.random.PRNGKey(3)
+    mse_c = float(PCA(k=k, center=True).fit(X, key=key).mse(X))
+    # uncentered PCA, evaluated with the same centered-MSE metric
+    p_u = PCA(k=k, center=False).fit(X, key=key)
+    mse_u = pca_mse_ref(X, np.asarray(p_u.components_.T), X.mean(axis=1))
+    assert mse_c < mse_u
+
+
+def test_sparse_pca_never_densifies(rng):
+    m, n = 32, 128
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    X[rng.random((m, n)) < 0.85] = 0.0
+    Xs = jsparse.BCOO.fromdense(jnp.asarray(X))
+    p = PCA(k=4, q=1).fit(Xs, key=jax.random.PRNGKey(0))
+    mse_sp = float(p.mse(Xs))
+    mse_dn = pca_mse_ref(X, np.asarray(p.components_.T),
+                         np.asarray(p.mean_))
+    np.testing.assert_allclose(mse_sp, mse_dn, rtol=2e-3, atol=1e-3)
+
+
+def test_transform_is_implicitly_centered(rng):
+    X = _data(rng)
+    p = PCA(k=5).fit(X, key=jax.random.PRNGKey(0))
+    Y = np.asarray(p.transform(X))
+    expl = np.asarray(p.components_) @ (X - np.asarray(p.mean_)[:, None])
+    np.testing.assert_allclose(Y, expl, atol=1e-3)

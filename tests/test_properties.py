@@ -1,0 +1,82 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qr_rank1_update, rsvd, srsvd
+from repro.sharding import logical_to_spec
+
+_SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(8, 60), K=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_qr_update_invariants(m, K, seed):
+    """forall Q R u v: Q'R' = QR + uv^T, Q' orthonormal, R' upper-tri."""
+    K = min(K, m)
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    Q2, R2 = np.asarray(Q2), np.asarray(R2)
+    scale = max(1.0, np.abs(A).max(), np.abs(np.outer(u, v)).max())
+    assert np.abs(Q2 @ R2 - (A + np.outer(u, v))).max() < 1e-4 * scale * m
+    assert np.abs(Q2.T @ Q2 - np.eye(K)).max() < 1e-4 * m
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(10, 40), n=st.integers(41, 120),
+       k=st.integers(2, 6), q=st.integers(0, 2),
+       offset=st.floats(-5, 5), seed=st.integers(0, 2**16))
+def test_implicit_shift_identity(m, n, k, q, offset, seed):
+    """forall X, mu: srsvd(X, mu) == rsvd(X - mu 1^T) under the same key
+    (the paper's zero-extra-randomness claim, Eq. 11 / Fig 1d)."""
+    rng = np.random.default_rng(seed)
+    X = (rng.standard_normal((m, n)) + offset).astype(np.float32)
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(seed % 1000)
+    a = srsvd(jnp.asarray(X), jnp.asarray(mu), k, q=q, key=key)
+    b = rsvd(jnp.asarray(X - mu[:, None]), k, q=q, key=key)
+    sa, sb = np.asarray(a.S), np.asarray(b.S)
+    np.testing.assert_allclose(sa, sb, rtol=5e-2, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a.reconstruct()),
+                               np.asarray(b.reconstruct()),
+                               atol=max(2e-2, 2e-2 * np.abs(X).max()))
+
+
+@settings(**_SETTINGS)
+@given(k=st.integers(2, 10), seed=st.integers(0, 2**16))
+def test_reconstruction_error_never_below_optimal(k, seed):
+    """forall k: randomized error >= deterministic rank-k optimum
+    (Eckart-Young)."""
+    rng = np.random.default_rng(seed)
+    X = (rng.standard_normal((30, 90)) + 1.0).astype(np.float32)
+    mu = X.mean(axis=1)
+    Xbar = X - mu[:, None]
+    res = srsvd(jnp.asarray(X), jnp.asarray(mu), k, q=1,
+                key=jax.random.PRNGKey(seed % 997))
+    err = np.linalg.norm(Xbar - np.asarray(res.reconstruct()))
+    U, S, Vt = np.linalg.svd(Xbar, full_matrices=False)
+    opt = np.linalg.norm(Xbar - (U[:, :k] * S[:k]) @ Vt[:k])
+    assert err >= opt - 1e-3
+
+
+@settings(**_SETTINGS)
+@given(st.lists(st.sampled_from(["batch", "embed", "vocab", "ff", "seq",
+                                 None]),
+                min_size=1, max_size=4))
+def test_logical_spec_never_reuses_axis(logical):
+    rules = {"batch": ("pod", "data"), "embed": "data", "vocab": "model",
+             "ff": "model", "seq": None}
+    spec = logical_to_spec(tuple(logical), rules)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        used.extend(axes)
+    assert len(used) == len(set(used))      # each mesh axis at most once

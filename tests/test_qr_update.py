@@ -1,0 +1,65 @@
+"""Rank-1 thin-QR update (paper line 6) vs the exact re-factorization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qr_rank1_update
+
+
+@pytest.mark.parametrize("m,K", [(16, 4), (64, 16), (200, 32), (33, 7)])
+def test_qr_rank1_update_matches_refactorization(m, K, rng):
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    Q2, R2 = np.asarray(Q2), np.asarray(R2)
+
+    target = A + np.outer(u, v)
+    np.testing.assert_allclose(Q2 @ R2, target, atol=2e-5)
+    # orthonormal columns
+    np.testing.assert_allclose(Q2.T @ Q2, np.eye(K), atol=2e-5)
+    # R upper triangular
+    assert np.abs(np.tril(R2, -1)).max() < 2e-5
+
+
+def test_qr_update_zero_vectors(rng):
+    """u=0 or v=0 must leave the factorization unchanged (same subspace)."""
+    m, K = 40, 8
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.zeros(m), jnp.zeros(K))
+    np.testing.assert_allclose(np.asarray(Q2) @ np.asarray(R2), A,
+                               atol=2e-5)
+
+
+def test_qr_update_u_in_range_of_q(rng):
+    """u inside range(Q): the extension column is degenerate — still OK."""
+    m, K = 30, 6
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    u = (Q @ rng.standard_normal(K)).astype(np.float32)   # in range(Q)
+    v = rng.standard_normal(K).astype(np.float32)
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(Q2) @ np.asarray(R2),
+                               A + np.outer(u, v), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(Q2).T @ np.asarray(Q2),
+                               np.eye(K), atol=3e-5)
+
+
+def test_qr_update_jit_compatible(rng):
+    m, K = 32, 8
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+    jitted = jax.jit(qr_rank1_update)
+    Q2, R2 = jitted(jnp.asarray(Q), jnp.asarray(R), jnp.asarray(u),
+                    jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(Q2) @ np.asarray(R2),
+                               A + np.outer(u, v), atol=2e-5)

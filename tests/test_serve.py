@@ -1,0 +1,70 @@
+"""Serving Server unit tests: slot lifecycle, cache isolation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import Server
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def server_setup():
+    cfg = get_config("yi_6b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_slot_lifecycle(server_setup):
+    cfg, params = server_setup
+    srv = Server(cfg, params, batch=2, max_len=32)
+    rng = np.random.default_rng(0)
+    s0 = srv.admit(0, rng.integers(0, cfg.vocab_size, 8), max_new=3)
+    s1 = srv.admit(1, rng.integers(0, cfg.vocab_size, 8), max_new=3)
+    assert {s0, s1} == {0, 1}
+    assert srv.active.all()
+    done = []
+    for _ in range(5):
+        done += srv.step()
+        if len(done) == 2:
+            break
+    assert sorted(r for r, _, _ in done) == [0, 1]
+    assert not srv.active.any()
+    for _, _, toks in done:
+        assert len(toks) == 3
+
+
+def test_slot_reuse_after_retire(server_setup):
+    cfg, params = server_setup
+    srv = Server(cfg, params, batch=1, max_len=32)
+    rng = np.random.default_rng(1)
+    srv.admit(7, rng.integers(0, cfg.vocab_size, 4), max_new=2)
+    while srv.active.any():
+        srv.step()
+    slot = srv.admit(8, rng.integers(0, cfg.vocab_size, 4), max_new=2)
+    assert slot == 0
+    assert srv.req_ids[0] == 8
+
+
+def test_same_prompt_same_output_regardless_of_slot(server_setup):
+    """Cache slots must be isolated: a request's output is independent of
+    which slot it lands in and of its neighbours."""
+    cfg, params = server_setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 8)
+    other = rng.integers(0, cfg.vocab_size, 8)
+
+    def run(admit_other_first):
+        srv = Server(cfg, params, batch=2, max_len=32)
+        if admit_other_first:
+            srv.admit(99, other, max_new=4)
+        srv.admit(1, prompt, max_new=4)
+        outs = {}
+        while srv.active.any():
+            for rid, _, toks in srv.step():
+                outs[rid] = toks
+        return outs[1]
+
+    a = run(False)
+    b = run(True)
+    assert a == b

@@ -1,0 +1,54 @@
+"""Logical-axis sharding rules and the constrain() no-mesh contract."""
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import constrain, default_rules, logical_to_spec
+
+
+RULES = {"batch": ("pod", "data"), "embed": "data", "vocab": "model",
+         "ff": "model", "seq": None}
+
+
+def test_logical_to_spec_basic():
+    assert logical_to_spec(("batch", "seq", "ff"), RULES) \
+        == P(("pod", "data"), None, "model")
+    assert logical_to_spec(("vocab", "embed"), RULES) == P("model", "data")
+
+
+def test_logical_to_spec_no_duplicate_axes():
+    """A mesh axis may appear once per spec: later dims fall back to None."""
+    spec = logical_to_spec(("vocab", "ff"), RULES)     # both -> 'model'
+    assert spec == P("model", None)
+    spec2 = logical_to_spec(("batch", "embed"), RULES)  # data used by batch
+    assert spec2 == P(("pod", "data"), None)
+
+
+def test_constrain_identity_without_rules():
+    x = jnp.ones((4, 8))
+    y = constrain(x, "batch", "ff")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_default_rules_shape():
+    import jax
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    r = default_rules(mesh, fsdp=True)
+    assert r["batch"] == ("data",)
+    assert r["embed"] == "data"
+    r2 = default_rules(mesh, fsdp=False)
+    assert r2["embed"] is None
+
+
+def test_constrain_skips_indivisible_dims():
+    """24 heads on a 16-way axis: constrain leaves the dim unsharded
+    instead of erroring (GSPMD decides)."""
+    import jax
+    from repro.sharding import use_rules
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with use_rules(mesh, {"heads": "model"}):
+        x = jnp.ones((5, 3))          # 3 % 1 == 0 -> fine either way
+        y = constrain(x, None, "heads")
+        assert y.shape == x.shape
