@@ -10,7 +10,7 @@ import sys
 import time
 
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
-                        roofline, table1_images, table1_words)
+                        roofline, stream_bench, table1_images, table1_words)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -19,6 +19,7 @@ SECTIONS = {
     "compress": compress_bench.main,
     "dist_svd": dist_svd_bench.main,
     "roofline": roofline.main,
+    "stream": stream_bench.main,
 }
 
 

@@ -1,0 +1,63 @@
+"""Out-of-core PCA: principal components of a matrix that never fully
+loads — streamed column-block by column-block from disk.
+
+    PYTHONPATH=src python examples/out_of_core_pca.py
+
+The contact-engine refactor makes this free: ``PCA.fit`` only ever
+touches X through engine contact points, so swapping the dense operator
+for a ``BlockedOp`` over an on-disk memmap changes *where* the products
+run, not *what* is computed.  Same PRNG key => identical factorization
+(to fp32 noise), with device residency O(m·block + m·K) instead of
+O(m·n) — the Halko et al. (2011) §6 single-pass-per-contact regime.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PCA, BlockedOp
+from repro.data.pipeline import open_memmap_matrix
+
+
+def main():
+    m, n, k, block = 300, 20_000, 16, 1024
+    rng = np.random.default_rng(0)
+    # An off-center low-rank-plus-noise matrix — the regime where the
+    # paper's shifted factorization beats plain RSVD.
+    U = rng.standard_normal((m, 24)).astype(np.float32)
+    V = rng.standard_normal((24, n)).astype(np.float32)
+    X = U @ V + 0.1 * rng.standard_normal((m, n)).astype(np.float32) + 3.0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "X.f32")
+        X.tofile(path)
+        print(f"matrix on disk: {X.nbytes / 1e6:.0f} MB "
+              f"({m} x {n} f32); streaming in {block}-column blocks "
+              f"-> device working set "
+              f"{(m * block + m * 2 * k) * 4 / 1e6:.1f} MB")
+
+        loader = open_memmap_matrix(path, (m, n), "float32",
+                                    block_size=block)
+        key = jax.random.PRNGKey(0)
+        pca_stream = PCA(k=k, q=1).fit(BlockedOp(loader), key=key)
+        print(f"streamed  S[:5]: "
+              f"{np.asarray(pca_stream.singular_values_[:5]).round(2)}")
+
+        # in-memory reference on the same data, same key
+        pca_dense = PCA(k=k, q=1).fit(jnp.asarray(X), key=key)
+        print(f"in-memory S[:5]: "
+              f"{np.asarray(pca_dense.singular_values_[:5]).round(2)}")
+        gap = np.abs(np.asarray(pca_stream.singular_values_)
+                     - np.asarray(pca_dense.singular_values_)).max()
+        print(f"max |streamed - in-memory| singular value: {gap:.2e}")
+
+        mse = float(pca_stream.mse(BlockedOp(loader)))
+        print(f"reconstruction MSE (computed without loading X): {mse:.4f}")
+
+
+if __name__ == "__main__":
+    main()

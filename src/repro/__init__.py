@@ -1,0 +1,8 @@
+"""repro — Shifted Randomized SVD (Basirat 2019) grown toward production.
+
+Importing the package applies :mod:`repro.compat`, which grafts
+version-compat shims onto the jax namespace (AxisType, shard_map,
+make_mesh axis_types) so the modern API spelling used throughout the
+codebase runs on the older jax pinned in this container.
+"""
+from repro import compat  # noqa: F401  (side effect: compat.install())

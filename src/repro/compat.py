@@ -1,0 +1,207 @@
+"""Version-compat shims over the installed jax.
+
+The codebase is written against the modern jax API surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``shard_map(..., check_vma=...)``).  Older jax
+releases — including the 0.4.x pinned in this container — predate all
+four.  This module provides call-through shims that work on both old
+and new jax, and ``install()`` (run automatically on ``import repro``)
+grafts the missing names onto the jax namespace so that test files,
+benchmarks, and examples written against the modern spelling keep
+working unmodified.
+
+Nothing here changes behaviour on a modern jax: every shim resolves to
+the real API when it exists.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+from jax import lax as _lax
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (added after 0.4.x).
+
+    Pre-AxisType jax treats every mesh axis as what was later named
+    ``Auto``, so a shim that names the variants and is otherwise inert
+    reproduces the old behaviour exactly.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeShim)
+
+#: True when the installed jax natively ships AxisType (the marker of
+#: the modern sharding stack).  Captured before install() grafts the
+#: shim, so it reflects the real jax, not our patch.
+HAS_NATIVE_AXIS_TYPES = AxisType is not _AxisTypeShim
+
+
+def partial_manual_autodiff_works() -> bool:
+    """Whether differentiating through a *partial-manual* shard_map
+    (``axis_names`` a strict subset of mesh axes) is safe.
+
+    Old XLA CHECK-aborts in hlo_sharding_util (``IsManualSubgroup``)
+    when the backward pass of such a region meets jit io shardings —
+    a process-killing crash, not an exception, so callers must gate
+    up front rather than try/except.
+    """
+    return HAS_NATIVE_AXIS_TYPES
+
+_REAL_MAKE_MESH = jax.make_mesh
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(_REAL_MAKE_MESH).parameters)
+
+
+@functools.wraps(_REAL_MAKE_MESH)
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version.
+
+    On jax without ``AxisType`` every axis already behaves as Auto, so
+    dropping the argument is semantics-preserving; requesting Explicit
+    or Manual axes there is an error rather than a silent downgrade.
+    """
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs = {} if axis_types is None else {"axis_types": axis_types}
+        return _REAL_MAKE_MESH(axis_shapes, axis_names, devices=devices,
+                               **kwargs)
+    if axis_types is not None:
+        bad = [t for t in axis_types
+               if getattr(t, "name", str(t)) not in ("Auto", "auto")]
+        if bad:
+            raise NotImplementedError(
+                f"installed jax {jax.__version__} predates AxisType; only "
+                f"Auto axes are supported, got {bad}")
+    return _REAL_MAKE_MESH(axis_shapes, axis_names, devices=devices)
+
+
+def _resolve_shard_map():
+    real = getattr(jax, "shard_map", None)
+    if real is not None:
+        return real, "check_vma" in inspect.signature(real).parameters
+    from jax.experimental.shard_map import shard_map as experimental
+    return experimental, False
+
+
+_REAL_SHARD_MAP, _SHARD_MAP_HAS_CHECK_VMA = _resolve_shard_map()
+
+
+def shard_map(f=None, /, *, mesh=None, in_specs=None, out_specs=None,
+              check_vma=None, check_rep=None, axis_names=None, **kwargs):
+    """``jax.shard_map`` with the modern kwargs mapped onto old jax.
+
+    ``check_vma`` (new name) and ``check_rep`` (old name) control the
+    same replication-checking machinery; exactly one may be given.
+    ``axis_names`` (new: the set of mesh axes to run manually) maps to
+    the old complementary ``auto`` set; this requires ``mesh``.
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass either check_vma or check_rep, not both")
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        kwargs["check_vma" if _SHARD_MAP_HAS_CHECK_VMA else
+               "check_rep"] = flag
+    if axis_names is not None:
+        if _SHARD_MAP_HAS_CHECK_VMA:   # modern jax: pass through
+            kwargs["axis_names"] = set(axis_names)
+        else:
+            if mesh is None:
+                raise TypeError(
+                    "axis_names on old jax needs an explicit mesh to "
+                    "derive the complementary auto set")
+            kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if mesh is not None:
+        kwargs["mesh"] = mesh
+    if in_specs is not None:
+        kwargs["in_specs"] = in_specs
+    if out_specs is not None:
+        kwargs["out_specs"] = out_specs
+    if f is None:
+        return functools.partial(_REAL_SHARD_MAP, **kwargs)
+    return _REAL_SHARD_MAP(f, **kwargs)
+
+
+# captured before install() so the shim never sees itself
+_REAL_AXIS_SIZE = getattr(_lax, "axis_size", None)
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` (added after 0.4.x) with a psum(1) fallback.
+
+    Inside shard_map/pmap the size of a named axis equals the sum of 1
+    over it — same value, one tiny collective the compiler folds away.
+    """
+    if _REAL_AXIS_SIZE is not None:
+        return _REAL_AXIS_SIZE(axis_name)
+    return _lax.psum(1, axis_name)
+
+
+_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None)
+
+
+def manual_axis_names() -> set[str]:
+    """Mesh axes the current trace executes manually (inside shard_map).
+
+    Modern jax reads the abstract mesh's axis types.  Old jax has no
+    abstract mesh; there the named-axis environment is the best signal —
+    it over-approximates (auto axes of a partial-manual shard_map are
+    also bound as named axes), which is safe for every caller here:
+    they only *drop* the returned axes from sharding constraints, and a
+    dropped hint degrades propagation, never correctness.
+    """
+    if _GET_ABSTRACT_MESH is not None:
+        try:
+            amesh = _GET_ABSTRACT_MESH()
+            return {a for a, t in zip(amesh.axis_names, amesh.axis_types)
+                    if "Manual" in str(t)}
+        except Exception:
+            return set()
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_sizes)
+    except Exception:
+        return set()
+
+
+def supports_unbound_spec_constraint() -> bool:
+    """Whether ``with_sharding_constraint`` accepts a bare PartitionSpec
+    (resolved against the ambient/abstract mesh) — modern jax only."""
+    return _GET_ABSTRACT_MESH is not None
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    Old jax returns a one-element list of per-computation dicts; new jax
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def install() -> None:
+    """Graft the shims onto jax so modern-spelling call sites work.
+
+    Idempotent; a no-op on jax versions that already ship the real API.
+    """
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _MAKE_MESH_HAS_AXIS_TYPES:
+        jax.make_mesh = make_mesh
+    if not hasattr(_lax, "axis_size"):
+        _lax.axis_size = axis_size
+
+
+install()

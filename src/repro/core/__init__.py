@@ -6,8 +6,14 @@ Public API:
   PCA                     implicit-centering principal component analysis
   qr_rank1_update         Golub & Van Loan rank-1 thin-QR update
   as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
+  BlockedOp / ChainedOp   out-of-core streaming / lazy-composition operators
+  ContactEngine / get_engine / register_backend   unified contact layer
 """
-from repro.core.linop import CallableOp, DenseOp, LinOp, SparseOp, as_linop
+from repro.core.contact import (ContactEngine, available_backends,
+                                default_backend, get_engine,
+                                register_backend)
+from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
+                              LinOp, SparseOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
 from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
                               svd_jit)
@@ -16,7 +22,9 @@ from repro.core.distributed import (dist_col_mean, dist_pca_fit, dist_srsvd,
                                     tsqr)
 
 __all__ = [
-    "CallableOp", "DenseOp", "LinOp", "SparseOp", "as_linop",
-    "qr_rank1_update", "SVDResult", "expected_error_bound", "rsvd", "srsvd",
-    "svd_jit", "PCA", "dist_col_mean", "dist_pca_fit", "dist_srsvd", "tsqr",
+    "BlockedOp", "CallableOp", "ChainedOp", "DenseOp", "LinOp", "SparseOp",
+    "as_linop", "ContactEngine", "available_backends", "default_backend",
+    "get_engine", "register_backend", "qr_rank1_update", "SVDResult",
+    "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",
+    "dist_col_mean", "dist_pca_fit", "dist_srsvd", "tsqr",
 ]

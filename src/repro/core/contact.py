@@ -1,0 +1,254 @@
+"""ContactEngine — the single owner of every product S-RSVD performs.
+
+The paper's whole value proposition is that the algorithm touches the
+data matrix only through products, so the shifted matrix ``X - mu 1^T``
+never exists.  Before this module, the rank-1 shift algebra behind that
+trick was re-derived at three independent call sites (the ``LinOp``
+base-class fallbacks, the TPU-vs-XLA branching in ``kernels/ops.py``,
+and a hand-rolled copy inside ``distributed.py``'s shard_map body).
+Now it lives here, once (DESIGN.md §2-§3):
+
+  (X - mu 1^T)   @ B  ==  X   @ B - u w^T   with  u = mu,   w = 1^T B
+  (X - mu 1^T)^T @ B  ==  X^T @ B - u w^T   with  u = 1_n,  w = mu^T B
+
+Both contact points therefore reduce to one primitive — a rank-1-
+corrected matmul ``op(A) @ B - u w^T`` — and backends are just
+implementations of that primitive:
+
+  pallas_tpu  fused rank-1-epilogue Pallas kernel (TPU; accumulator and
+              epilogue stay in VMEM, one HBM write-back)
+  xla         plain-XLA composition (CPU/GPU fallback, sparse operands)
+  interpret   the Pallas kernel body executed in Python on CPU — used
+              by tests to validate the kernel itself off-TPU
+
+``ContactEngine`` binds a backend and exposes the operator-level
+contact points (``matmat`` / ``rmatmat`` / ``shifted_*``) that
+``srsvd``, ``PCA`` and the blocked/streaming operators call.  The
+distributed path cannot route whole products through an engine (its
+products are psum-composed inside shard_map), so it uses the shared
+shift-vector/correction helpers below — the algebra still has exactly
+one home.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# The rank-1 shift algebra.  THE single implementation: every shift
+# correction in the codebase is one of these four functions.
+# --------------------------------------------------------------------------
+
+
+def shift_vectors_matmat(B: jax.Array, mu: jax.Array):
+    """(u, w) such that (X - mu 1^T) @ B == X @ B - u w^T."""
+    return mu, B.sum(axis=0)
+
+
+def shift_vectors_rmatmat(B: jax.Array, mu: jax.Array, n: int, dtype):
+    """(u, w) such that (X - mu 1^T)^T @ B == X^T @ B - u w^T."""
+    return jnp.ones((n,), dtype), mu @ B
+
+
+def rank1_correct(P: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """``P - u w^T`` — the only place the shift outer product is spelled.
+
+    Used directly by call sites that already hold the uncorrected
+    product (e.g. a psum-composed local product inside shard_map, where
+    the K-vector ``w`` rode the same collective as ``P``).
+    """
+    return P - u[:, None] * w[None, :]
+
+
+def rank1_restore(P: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """``P + u w^T`` — the inverse correction (decompression paths)."""
+    return P + u[:, None] * w[None, :]
+
+
+# --------------------------------------------------------------------------
+# Backend registry.  A backend is one function: the rank-1-corrected
+# matmul primitive ``op(A) @ B - u w^T``.
+# --------------------------------------------------------------------------
+
+# (A, B, u, w, transpose_a) -> op(A) @ B - u w^T
+MatmulRank1 = Callable[..., jax.Array]
+
+_REGISTRY: dict[str, MatmulRank1] = {}
+_ENGINES: dict[str, "ContactEngine"] = {}
+
+
+def register_backend(name: str, matmul_rank1: MatmulRank1,
+                     *, overwrite: bool = False) -> None:
+    """Register a rank-1-corrected matmul implementation under ``name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = matmul_rank1
+    _ENGINES.pop(name, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def default_backend() -> str:
+    """Hardware-resolved default: the fused Pallas kernel on TPU, XLA
+    elsewhere (this CPU container, GPUs)."""
+    return "pallas_tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_backend(backend: str | None = None,
+                    interpret: bool | None = None) -> str:
+    """Map the legacy ``interpret`` tri-state and an explicit backend
+    name onto a registry key.
+
+    ``interpret=True`` forces the Pallas kernel body to run in Python
+    (kernel validation on CPU); ``interpret=False`` forces the XLA
+    composition; ``None`` defers to ``backend`` or the hardware default.
+    Passing both is a conflict and raises; an explicit ``backend`` must
+    name a registered key (typos surface here, not as a silent
+    fallback).
+    """
+    if interpret is not None and backend is not None:
+        raise ValueError(
+            f"pass either backend ({backend!r}) or the legacy interpret "
+            f"flag ({interpret!r}), not both")
+    if interpret is not None:
+        return "interpret" if interpret else "xla"
+    if backend is not None:
+        if backend not in _REGISTRY:
+            raise KeyError(
+                f"unknown contact backend {backend!r}; "
+                f"registered: {available_backends()}")
+        return backend
+    return default_backend()
+
+
+def backend_uses_pallas(name: str) -> bool:
+    """Whether a registry key names a Pallas execution path (used by the
+    non-matmul fused ops — attention, scan — that share the dispatch)."""
+    return name in ("pallas_tpu", "interpret")
+
+
+def pallas_dispatch(backend: str | None = None,
+                    interpret: bool | None = None) -> tuple[bool, bool]:
+    """One-stop dispatch decision for the non-matmul fused ops:
+    returns ``(use_pallas, interpret)`` for the resolved backend."""
+    name = resolve_backend(backend, interpret)
+    return backend_uses_pallas(name), name == "interpret"
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContactEngine:
+    """All matrix contact points, bound to one backend.
+
+    Operator-level entry points take anything satisfying the ``LinOp``
+    protocol; ``mu=None`` uniformly means "unshifted", so algorithm code
+    never branches on shifted-ness.  Dense-array entry points
+    (``dense_*``) are the thin layer ``kernels.ops`` re-exports.
+    """
+
+    backend: str
+
+    @property
+    def _matmul_rank1(self) -> MatmulRank1:
+        return _REGISTRY[self.backend]
+
+    # -- dense-array contact points ------------------------------------
+    def matmul_rank1(self, A, B, u, w, *, transpose_a: bool = False):
+        """``op(A) @ B - u w^T`` on this engine's backend."""
+        return self._matmul_rank1(A, B, u, w, transpose_a=transpose_a)
+
+    def dense_shifted_matmat(self, X, B, mu):
+        """(X - mu 1^T) @ B for a dense on-device X."""
+        u, w = shift_vectors_matmat(B, mu)
+        return self.matmul_rank1(X, B, u, w)
+
+    def dense_shifted_rmatmat(self, X, B, mu):
+        """(X - mu 1^T)^T @ B for a dense on-device X."""
+        u, w = shift_vectors_rmatmat(B, mu, X.shape[1], X.dtype)
+        return self.matmul_rank1(X, B, u, w, transpose_a=True)
+
+    # -- operator-level contact points ---------------------------------
+    def matmat(self, op, B):
+        return op.matmat(B)
+
+    def rmatmat(self, op, B):
+        return op.rmatmat(B)
+
+    def shifted_matmat(self, op, B, mu):
+        """(X - mu 1^T) @ B through ``op``; plain ``X @ B`` when mu is None.
+
+        Operators exposing a dense on-device array via ``contact_array``
+        (e.g. ``DenseOp``) get the fused backend primitive; everything
+        else (sparse, blocked, chained, callable) computes the product
+        through the operator and applies the correction — which costs
+        O(mK) extra and never materializes the shifted matrix.
+        """
+        if mu is None:
+            return op.matmat(B)
+        X = getattr(op, "contact_array", None)
+        if X is not None:
+            return self.dense_shifted_matmat(X, B, mu)
+        return rank1_correct(op.matmat(B), *shift_vectors_matmat(B, mu))
+
+    def shifted_rmatmat(self, op, B, mu):
+        """(X - mu 1^T)^T @ B through ``op``; ``X^T @ B`` when mu is None."""
+        if mu is None:
+            return op.rmatmat(B)
+        X = getattr(op, "contact_array", None)
+        if X is not None:
+            return self.dense_shifted_rmatmat(X, B, mu)
+        u, w = shift_vectors_rmatmat(B, mu, op.shape[1], op.dtype)
+        return rank1_correct(op.rmatmat(B), u, w)
+
+    def col_mean(self, op):
+        return op.col_mean()
+
+    def fro_norm2(self, op):
+        return op.fro_norm2()
+
+
+def get_engine(backend: str | None = None, *,
+               interpret: bool | None = None) -> ContactEngine:
+    """Engine for ``backend`` (default: hardware-resolved).  Cached —
+    engines are stateless beyond their registry binding."""
+    name = resolve_backend(backend, interpret)   # validates the name
+    eng = _ENGINES.get(name)
+    if eng is None:
+        eng = _ENGINES[name] = ContactEngine(name)
+    return eng
+
+
+# --------------------------------------------------------------------------
+# Built-in backends
+# --------------------------------------------------------------------------
+
+
+def _xla_matmul_rank1(A, B, u, w, *, transpose_a: bool = False):
+    from repro.kernels import ref
+    return ref.matmul_rank1_ref(A, B, u, w, transpose_a=transpose_a)
+
+
+def _pallas_matmul_rank1(A, B, u, w, *, transpose_a: bool = False):
+    from repro.kernels.shifted_matmul import matmul_rank1
+    return matmul_rank1(A, B, u, w, transpose_a=transpose_a,
+                        interpret=False)
+
+
+def _interpret_matmul_rank1(A, B, u, w, *, transpose_a: bool = False):
+    from repro.kernels.shifted_matmul import matmul_rank1
+    return matmul_rank1(A, B, u, w, transpose_a=transpose_a,
+                        interpret=True)
+
+
+register_backend("xla", _xla_matmul_rank1)
+register_backend("pallas_tpu", _pallas_matmul_rank1)
+register_backend("interpret", _interpret_matmul_rank1)

@@ -11,7 +11,11 @@ Every contact with X is a *local* block matmul followed by one ``psum``;
 the shift enters either as a per-block rank-1 epilogue (sample matrix,
 line 6) or as a K-vector correction that rides the same psum as the main
 product (power iteration / projection) — so implicit centering adds
-O(K) bytes to each collective, not O(m n).
+O(K) bytes to each collective, not O(m n).  The corrections themselves
+are the shared contact-engine helpers (``contact.rank1_correct`` /
+``contact.shift_vectors_*``) — whole products cannot route through an
+engine here because they are psum-composed across devices, but the
+rank-1 shift algebra still has exactly one home.
 
 Tall-skinny QR (TSQR) replaces the dense QR of row-sharded m x K factors:
 local QR -> all_gather of the P (K x K) R-factors -> one replicated
@@ -28,8 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
+from repro.core import contact
 from repro.core.srsvd import SVDResult
 
 
@@ -86,26 +91,26 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted,
         # numbers, which we fuse with the X1 psum above in spirit (same
         # collective phase; see DESIGN.md §5).
         v = lax.psum(omega_loc.T @ ones_loc, col_axis)   # (K,)
-        X1 = X1 - jnp.outer(mu_loc, v)
+        X1 = contact.rank1_correct(X1, mu_loc, v)
     Q_loc, _ = tsqr(X1, row_axis)                        # basis of Xbar
 
     for _ in range(q):                                   # lines 8-11
         # Zt = X^T Q - 1 (mu^T Q): ride the K-vector on the same psum.
         A, b = lax.psum(
             (X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
-        Zt = A - (ones_loc[:, None] * b[None, :] if shifted else 0.0)
+        Zt = contact.rank1_correct(A, ones_loc, b) if shifted else A
         Qp_loc, _ = tsqr(Zt, col_axis)                   # (n_loc, K)
         Z, s = lax.psum(
             (X_loc @ Qp_loc, ones_loc @ Qp_loc), col_axis)
         if shifted:
-            Z = Z - jnp.outer(mu_loc, s)
+            Z = contact.rank1_correct(Z, mu_loc, s)
         Q_loc, _ = tsqr(Z, row_axis)
 
     # line 12: Y = Q^T X - (Q^T mu) 1^T,  (K, n_loc) col-sharded.
     YT, b = lax.psum((X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
     Y_loc = YT.T
     if shifted:
-        Y_loc = Y_loc - b[:, None] * ones_loc[None, :]
+        Y_loc = contact.rank1_correct(Y_loc, b, ones_loc)
 
     U1, S, Vt_loc = _small_svd_from_cols(Y_loc, col_axis)  # line 13
     U_loc = Q_loc @ U1                                     # line 14

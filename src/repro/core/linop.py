@@ -2,14 +2,33 @@
 
 The whole point of the paper is that the algorithm only ever touches X
 through products (``X @ B``, ``X.T @ B``) and a column mean — so the data
-matrix can stay sparse / implicit / sharded while the *shifted* matrix
-``X - mu 1^T`` is never formed.  Every S-RSVD entry point accepts anything
-satisfying this protocol.
+matrix can stay sparse / implicit / sharded / on disk while the *shifted*
+matrix ``X - mu 1^T`` is never formed.  Every S-RSVD entry point accepts
+anything satisfying this protocol.
+
+Shifted products are NOT implemented here: the rank-1 shift algebra has
+exactly one home, :mod:`repro.core.contact`.  The base-class
+``shifted_*`` methods delegate to the default engine; operators that can
+expose a dense on-device array (``DenseOp``) advertise it through
+``contact_array`` so the engine can use the fused backend primitive.
+
+Out-of-core operators (DESIGN.md §4):
+
+``BlockedOp``
+    column-block iteration over an on-host / on-disk array (numpy array,
+    memmap, or any block source) — every product is accumulated
+    block-wise, so peak *device* memory is O(m·block + m·K) regardless
+    of n.  Block sources live in :mod:`repro.data.pipeline`.
+
+``ChainedOp``
+    lazy operator composition ``A1 @ A2 @ ... @ Ap`` — the product
+    matrix never exists, enabling shifted products of products (e.g.
+    PCA of a whitened or projected stream).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +40,11 @@ class LinOp:
 
     shape: tuple[int, int]
     dtype: jnp.dtype
+
+    #: dense on-device array for fused backend contact, or None.  The
+    #: contact engine checks this before falling back to product-then-
+    #: correct (see ContactEngine.shifted_matmat).
+    contact_array = None
 
     def matmat(self, B: jax.Array) -> jax.Array:      # X @ B    (n,K)->(m,K)
         raise NotImplementedError
@@ -35,13 +59,15 @@ class LinOp:
         raise NotImplementedError
 
     # -- shifted contact points: (X - mu 1^T) products, never materialized.
+    #    Single implementation in core.contact; kept on the protocol for
+    #    callers that hold an operator but no engine.
     def shifted_matmat(self, B: jax.Array, mu: jax.Array) -> jax.Array:
-        return self.matmat(B) - jnp.outer(mu, B.sum(axis=0))
+        from repro.core import contact
+        return contact.get_engine().shifted_matmat(self, B, mu)
 
     def shifted_rmatmat(self, B: jax.Array, mu: jax.Array) -> jax.Array:
-        n = self.shape[1]
-        return self.rmatmat(B) - jnp.outer(jnp.ones((n,), self.dtype),
-                                           mu @ B)
+        from repro.core import contact
+        return contact.get_engine().shifted_rmatmat(self, B, mu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +82,10 @@ class DenseOp(LinOp):
     def dtype(self):
         return self.X.dtype
 
+    @property
+    def contact_array(self):
+        return self.X
+
     def matmat(self, B):
         return self.X @ B
 
@@ -67,15 +97,6 @@ class DenseOp(LinOp):
 
     def fro_norm2(self):
         return jnp.sum(jnp.square(self.X))
-
-    def shifted_matmat(self, B, mu):
-        # Fused rank-1-epilogue Pallas matmul on TPU, XLA elsewhere.
-        from repro.kernels import ops
-        return ops.shifted_matmat(self.X, B, mu)
-
-    def shifted_rmatmat(self, B, mu):
-        from repro.kernels import ops
-        return ops.shifted_rmatmat(self.X, B, mu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +165,153 @@ class CallableOp(LinOp):
         if self._fro_norm2 is None:
             raise NotImplementedError("fro_norm2 not provided")
         return self._fro_norm2()
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedOp(LinOp):
+    """Column-block streaming operator: X lives on host / on disk, only
+    one (m, block) column slab is resident on device at a time.
+
+    ``source`` is any block source: ``shape``/``dtype`` attributes plus
+    ``iter_blocks()`` yielding ``(j0, block)`` pairs covering columns
+    ``[j0, j0 + block.shape[1])`` in order (see
+    :class:`repro.data.pipeline.ColumnBlockLoader`).  Products
+    accumulate block-wise, so ``matmat`` peaks at
+    O(m·block + (m + n)·K) device bytes — blocking removes the m·n
+    term (X itself never loads); the (n, K) right factor stays
+    device-resident.  This is the out-of-core regime of Halko et al.
+    (2011) §6.  Not jit-traceable (the block loop runs in Python);
+    each per-block product is an ordinary XLA dot.
+    """
+
+    source: Any
+
+    @property
+    def shape(self):
+        m, n = self.source.shape
+        return (int(m), int(n))
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.source.dtype)
+
+    def _blocks(self):
+        for j0, blk in self.source.iter_blocks():
+            yield int(j0), jnp.asarray(blk)
+
+    def matmat(self, B):
+        m, _ = self.shape
+        acc = jnp.zeros((m, B.shape[1]),
+                        jnp.promote_types(self.dtype, B.dtype))
+        for j0, blk in self._blocks():
+            acc = acc + blk @ B[j0:j0 + blk.shape[1]]
+        return acc
+
+    def rmatmat(self, B):
+        return jnp.concatenate(
+            [blk.T @ B for _, blk in self._blocks()], axis=0)
+
+    def col_mean(self):
+        m, n = self.shape
+        acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        for _, blk in self._blocks():
+            acc = acc + blk.sum(axis=1)
+        return (acc / n).astype(self.dtype)
+
+    def fro_norm2(self):
+        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        for _, blk in self._blocks():
+            acc = acc + jnp.sum(jnp.square(blk))
+        return acc
+
+    @classmethod
+    def from_array(cls, X, block_size: int) -> "BlockedOp":
+        """Convenience: wrap an in-host-memory array (numpy / memmap)."""
+        from repro.data.pipeline import ColumnBlockLoader
+        return cls(ColumnBlockLoader(X, block_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainedOp(LinOp):
+    """Lazy composition ``ops[0] @ ops[1] @ ... @ ops[-1]``.
+
+    The product matrix never exists; every contact evaluates right-to-
+    left (``matmat``) or left-to-right (``rmatmat``) through the chain.
+    Combined with the engine's product-then-correct path this gives
+    shifted products of products for free.
+    """
+
+    ops: tuple[LinOp, ...]
+
+    def __post_init__(self):
+        if not self.ops:
+            raise ValueError("ChainedOp needs at least one operator")
+        for a, b in zip(self.ops, self.ops[1:]):
+            if a.shape[1] != b.shape[0]:
+                raise ValueError(
+                    f"chain shape mismatch: {a.shape} @ {b.shape}")
+
+    @property
+    def shape(self):
+        return (self.ops[0].shape[0], self.ops[-1].shape[1])
+
+    @property
+    def dtype(self):
+        dt = self.ops[0].dtype
+        for op in self.ops[1:]:
+            dt = jnp.promote_types(dt, op.dtype)
+        return dt
+
+    def matmat(self, B):
+        for op in reversed(self.ops):
+            B = op.matmat(B)
+        return B
+
+    def rmatmat(self, B):
+        for op in self.ops:
+            B = op.rmatmat(B)
+        return B
+
+    def col_mean(self):
+        # col_mean(A1...Ap) = A1...A_{p-1} (Ap 1 / n) — one K=1 matmat
+        # per link, never the product matrix.
+        v = self.ops[-1].col_mean()
+        for op in reversed(self.ops[:-1]):
+            v = op.matmat(v[:, None])[:, 0]
+        return v
+
+    def fro_norm2(self, *, chunk: int = 256):
+        """Exact ||A1...Ap||_F^2 without forming the product.
+
+        When the smallest interface dimension r between chain links
+        fits in one probe chunk (the typical low-rank chain), split
+        there: ||L R||_F^2 = tr((L^T L)(R R^T)) costs ONE r-column pass
+        per side and O((m + n)·r) memory.  Otherwise probe the smaller
+        outer dimension with identity chunks — min(m, n)/chunk passes
+        over the chain, O(outer·chunk) memory per pass.
+        """
+        m, n = self.shape
+        interior = [op.shape[1] for op in self.ops[:-1]]
+        if interior and min(interior) <= chunk:
+            r = min(interior)
+            j = interior.index(r) + 1              # split after ops[:j]
+            E = jnp.eye(r, dtype=self.dtype)
+            L = E                                  # prefix product (m, r)
+            for op in reversed(self.ops[:j]):
+                L = op.matmat(L)
+            Rt = E                                 # suffix product^T (n, r)
+            for op in self.ops[j:]:
+                Rt = op.rmatmat(Rt)
+            return jnp.sum((L.T @ L) * (Rt.T @ Rt))
+        probe_n = m <= n                           # probe the smaller side
+        d = m if probe_n else n
+        acc = jnp.zeros((), jnp.float32)
+        for j0 in range(0, d, chunk):
+            cols = jnp.arange(j0, min(j0 + chunk, d))
+            E = jax.nn.one_hot(cols, d, dtype=self.dtype).T    # (d, c)
+            P = self.rmatmat(E) if probe_n else self.matmat(E)
+            acc = acc + jnp.sum(jnp.square(P))
+        return acc
 
 
 def as_linop(X) -> LinOp:

@@ -3,7 +3,11 @@
 ``PCA.fit`` merges mean-centering and factorization: the column mean is
 computed through the operator protocol (sparse-safe) and passed to
 ``srsvd`` as the shifting vector, so off-center (and sparse) data matrices
-are analysed without densification.
+are analysed without densification.  All contact with the data routes
+through a :class:`repro.core.contact.ContactEngine`; pass
+``backend="xla"`` / ``"pallas_tpu"`` / ``"interpret"`` to pin one, and
+wrap a too-big-for-device matrix in :class:`repro.core.linop.BlockedOp`
+for the out-of-core path (see ``examples/out_of_core_pca.py``).
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import contact
 from repro.core.linop import as_linop
 from repro.core.srsvd import SVDResult, srsvd
 
@@ -30,14 +35,21 @@ class PCA:
     K: int | None = None
     q: int = 0
     center: bool = True
+    backend: str | None = None
     components_: jax.Array | None = None
     mean_: jax.Array | None = None
     singular_values_: jax.Array | None = None
 
+    @property
+    def _engine(self) -> contact.ContactEngine:
+        return contact.get_engine(self.backend)
+
     def fit(self, X, *, key: jax.Array) -> "PCA":
         op = as_linop(X)
-        mu = op.col_mean() if self.center else None
-        res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key)
+        eng = self._engine
+        mu = eng.col_mean(op) if self.center else None
+        res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key,
+                               engine=eng)
         self.components_ = res.U.T
         self.singular_values_ = res.S
         m = op.shape[0]
@@ -47,8 +59,8 @@ class PCA:
     def transform(self, X) -> jax.Array:
         """Project columns of X: Y = U^T (X - mu 1^T), computed implicitly."""
         op = as_linop(X)
-        UtX = op.rmatmat(self.components_.T).T          # (k, n)
-        return UtX - (self.components_ @ self.mean_)[:, None]
+        return self._engine.shifted_rmatmat(
+            op, self.components_.T, self.mean_).T           # (k, n)
 
     def inverse_transform(self, Y: jax.Array) -> jax.Array:
         return self.components_.T @ Y + self.mean_[:, None]
@@ -58,14 +70,15 @@ class PCA:
 
         ||Xbar - U U^T Xbar||_F^2 / n  ==  (||Xbar||_F^2 - ||U^T Xbar||_F^2)/n
         — the right-hand form never materializes the centered matrix, so
-        the metric itself is sparse-safe.
+        the metric itself is sparse- and stream-safe.
         """
         op = as_linop(X)
+        eng = self._engine
         m, n = op.shape
         mu = self.mean_
         # ||Xbar||_F^2 = ||X||_F^2 - 2 tr(X^T mu 1^T) + n ||mu||^2
         #             = ||X||_F^2 - 2 (sum_cols X) . mu + n ||mu||^2
-        row_sum = op.matmat(jnp.ones((n, 1), op.dtype))[:, 0]   # X @ 1
-        xbar2 = op.fro_norm2() - 2.0 * row_sum @ mu + n * mu @ mu
+        row_sum = eng.matmat(op, jnp.ones((n, 1), op.dtype))[:, 0]  # X @ 1
+        xbar2 = eng.fro_norm2(op) - 2.0 * row_sum @ mu + n * mu @ mu
         Y = self.transform(op)
         return (xbar2 - jnp.sum(Y * Y)) / n

@@ -6,9 +6,12 @@ products — the shifted (dense) matrix never exists.  ``rsvd`` is the
 original algorithm (identical to ``srsvd`` with ``mu=None``), implemented
 as the paper's comparison baseline.
 
-Every matrix contact point routes through :mod:`repro.kernels.ops` which
-dispatches to the fused rank-1-epilogue Pallas matmul on TPU (and to plain
-XLA dot on other backends / for sparse operands).
+Every matrix contact point routes through a
+:class:`repro.core.contact.ContactEngine`, which dispatches to the fused
+rank-1-epilogue Pallas matmul on TPU (and to plain XLA dot on other
+backends / for sparse and streamed operands).  Passing ``mu=None`` to an
+engine contact point means "unshifted", so the algorithm body below has
+no shifted-vs-plain branching.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core import contact
 from repro.core.linop import LinOp, as_linop
 from repro.core.qr_update import qr_rank1_update
 
@@ -50,11 +54,13 @@ ShiftMode = Literal["exact", "paper"]
 
 def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
           key: jax.Array, use_qr_update: bool = True,
-          shift_mode: ShiftMode = "exact") -> SVDResult:
+          shift_mode: ShiftMode = "exact",
+          engine: contact.ContactEngine | None = None) -> SVDResult:
     """Rank-k SVD of ``X - mu 1^T`` (Algorithm 1).
 
     Args:
-      X: (m, n) array, BCOO sparse matrix, or LinOp.
+      X: (m, n) array, BCOO sparse matrix, or LinOp (including the
+        out-of-core ``BlockedOp`` / ``ChainedOp``).
       mu: (m,) shifting vector, or None for the unshifted algorithm.
       k: target rank.  K: sampling rank (default 2k).  q: power iterations.
       key: PRNG key for the Gaussian test matrix.
@@ -63,8 +69,11 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
       shift_mode: "exact" uses v = Omega^T 1 so line 6 produces the basis
         of the true sample (X - mu 1^T) Omega; "paper" uses v = 1_K,
         literally as printed in Algorithm 1 (see DESIGN.md §8).
+      engine: contact engine to route every product through (default:
+        the hardware-resolved backend — Pallas on TPU, XLA elsewhere).
     """
     op = as_linop(X)
+    eng = engine if engine is not None else contact.get_engine()
     m, n = op.shape
     dt = op.dtype
     if K is None:
@@ -73,7 +82,7 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         raise ValueError(f"need k <= K <= min(m, n), got {k=} {K=} {m=} {n=}")
 
     omega = jax.random.normal(key, (n, K), dtype=dt)        # line 2
-    X1 = op.matmat(omega)                                   # line 3
+    X1 = eng.matmat(op, omega)                              # line 3
     Q1, R1 = _qr(X1)                                        # line 4
 
     if mu is not None:                                      # lines 5-7
@@ -82,23 +91,20 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         if use_qr_update:
             Q, _ = qr_rank1_update(Q1, R1, -mu, v)          # line 6
         else:
-            Q, _ = _qr(Q1 @ (R1 if R1.ndim == 2 else R1) - jnp.outer(mu, v))
+            Q, _ = _qr(contact.rank1_correct(Q1 @ R1, mu, v))
     else:
         Q = Q1
 
     for _ in range(q):                                      # lines 8-11
-        # line 9 / Eq. 7 then line 10 / Eq. 8 — both through the fused
-        # rank-1-epilogue contact points (Pallas on TPU).
-        Zt = (op.shifted_rmatmat(Q, mu) if mu is not None
-              else op.rmatmat(Q))
+        # line 9 / Eq. 7 then line 10 / Eq. 8 — both through the engine's
+        # fused rank-1-epilogue contact points (Pallas on TPU).
+        Zt = eng.shifted_rmatmat(op, Q, mu)
         Qp, _ = _qr(Zt)
-        Z = (op.shifted_matmat(Qp, mu) if mu is not None
-             else op.matmat(Qp))
+        Z = eng.shifted_matmat(op, Qp, mu)
         Q, _ = _qr(Z)
 
     # line 12 / Eq. 10:  Y = Q^T X - (Q^T mu) 1^T  ==  ((Xbar)^T Q)^T.
-    Y = (op.shifted_rmatmat(Q, mu) if mu is not None
-         else op.rmatmat(Q)).T                              # (K, n)
+    Y = eng.shifted_rmatmat(op, Q, mu).T                    # (K, n)
 
     U1, S, Vt = jnp.linalg.svd(Y, full_matrices=False)      # line 13
     U = Q @ U1                                              # line 14
@@ -106,14 +112,19 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
 
 
 def rsvd(X, k: int, K: int | None = None, q: int = 0, *,
-         key: jax.Array) -> SVDResult:
+         key: jax.Array,
+         engine: contact.ContactEngine | None = None) -> SVDResult:
     """Halko et al. (2011) randomized SVD — the paper's baseline."""
-    return srsvd(X, None, k, K, q, key=key)
+    return srsvd(X, None, k, K, q, key=key, engine=engine)
 
 
 def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
     """Paper Eq. 12: E||Xbar - U S V^T|| <= [1 + 4 sqrt(2m/(k-1))]^(1/(2q+1))
     * sigma_{k+1}."""
+    if k <= 1:
+        raise ValueError(
+            f"expected_error_bound needs k >= 2 (the bound divides by "
+            f"k - 1), got k={k}")
     return (1.0 + 4.0 * (2.0 * m / (k - 1)) ** 0.5) ** (1.0 / (2 * q + 1)) \
         * sigma_k1
 

@@ -9,6 +9,11 @@ regime, §5.3); feature-mode archs (audio/vision frontend stubs) get unit-
 normal frame embeddings.  When a mesh is provided, batches are built with
 ``jax.make_array_from_callback`` so each host only materializes its
 addressable shards.
+
+This module also owns the out-of-core block sources that feed
+:class:`repro.core.linop.BlockedOp` (DESIGN.md §4): a column-block
+loader over any host array (numpy, memmap) and a memmap opener for
+matrices that live on disk.
 """
 from __future__ import annotations
 
@@ -20,6 +25,60 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnBlockLoader:
+    """Column-block source over a host-resident array (numpy / memmap).
+
+    Yields ``(j0, X[:, j0:j0+block_size])`` covering the columns in
+    order — the protocol :class:`repro.core.linop.BlockedOp` consumes.
+    Each block is a *host* slice; the operator moves it to device, so a
+    memmap-backed ``X`` streams from disk one slab at a time and total
+    device residency never exceeds one block plus the accumulator.
+    """
+
+    X: "np.ndarray"
+    block_size: int
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be > 0, got {self.block_size}")
+        if getattr(self.X, "ndim", None) != 2:
+            raise ValueError("ColumnBlockLoader needs a 2-D array")
+
+    @property
+    def shape(self):
+        return self.X.shape
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def num_blocks(self) -> int:
+        n = self.X.shape[1]
+        return -(-n // self.block_size)
+
+    def iter_blocks(self):
+        n = self.X.shape[1]
+        for j0 in range(0, n, self.block_size):
+            # np.ascontiguousarray forces the memmap read here (not
+            # lazily inside the device transfer) and keeps the slice a
+            # plain ndarray.
+            yield j0, np.ascontiguousarray(
+                self.X[:, j0:j0 + self.block_size])
+
+
+def open_memmap_matrix(path, shape: tuple[int, int], dtype="float32",
+                       *, block_size: int = 1024) -> ColumnBlockLoader:
+    """Block loader over a raw on-disk matrix (C-order, no header).
+
+    The file is opened read-only as a memmap — nothing is loaded until a
+    block is iterated, so matrices far larger than RAM stream cleanly.
+    """
+    mm = np.memmap(path, dtype=np.dtype(dtype), mode="r", shape=shape)
+    return ColumnBlockLoader(mm, block_size)
 
 
 @dataclasses.dataclass

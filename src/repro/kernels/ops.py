@@ -1,65 +1,66 @@
-"""jit'd public wrappers around the Pallas kernels with backend dispatch.
+"""jit'd public wrappers around the fused kernels, dispatched through the
+contact-engine backend registry (:mod:`repro.core.contact`).
 
-On TPU the fused rank-1-epilogue kernel runs natively; elsewhere (this CPU
-container, or sparse operands) we fall back to the algebraically identical
-XLA composition from :mod:`repro.kernels.ref`.  ``interpret=True`` forces
-the Pallas kernel body to execute in Python on CPU — used by the tests to
-validate the kernel itself.
+Backend resolution is owned by the registry: ``pallas_tpu`` on TPU,
+``xla`` elsewhere (this CPU container, sparse operands), ``interpret``
+to execute the Pallas kernel body in Python on CPU — used by the tests
+to validate the kernels themselves.  The legacy ``interpret`` tri-state
+kwarg is kept for callers/tests: ``True`` -> ``interpret`` backend,
+``False`` -> ``xla``, ``None`` -> hardware default.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref as _ref
-from repro.kernels.shifted_matmul import matmul_rank1
+from repro.core import contact
 
 
-def _use_pallas() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def shifted_matmat(X: jax.Array, B: jax.Array, mu: jax.Array, *,
-                   interpret: bool | None = None) -> jax.Array:
+def shifted_matmat(X, B, mu, *, interpret: bool | None = None,
+                   backend: str | None = None):
     """(X - mu 1^T) @ B without materializing the shifted matrix."""
-    w = B.sum(axis=0)
-    if interpret or (interpret is None and _use_pallas()):
-        return matmul_rank1(X, B, mu, w, interpret=bool(interpret))
-    return _ref.matmul_rank1_ref(X, B, mu, w)
+    return contact.get_engine(backend, interpret=interpret) \
+        .dense_shifted_matmat(X, B, mu)
 
 
-def shifted_rmatmat(X: jax.Array, B: jax.Array, mu: jax.Array, *,
-                    interpret: bool | None = None) -> jax.Array:
+def shifted_rmatmat(X, B, mu, *, interpret: bool | None = None,
+                    backend: str | None = None):
     """(X - mu 1^T)^T @ B without materializing the shifted matrix."""
-    n = X.shape[1]
-    u = jnp.ones((n,), X.dtype)
-    w = mu @ B
-    if interpret or (interpret is None and _use_pallas()):
-        return matmul_rank1(X, B, u, w, transpose_a=True,
-                            interpret=bool(interpret))
-    return _ref.matmul_rank1_ref(X, B, u, w, transpose_a=True)
+    return contact.get_engine(backend, interpret=interpret) \
+        .dense_shifted_rmatmat(X, B, mu)
+
+
+def matmul_rank1(A, B, u, w, *, transpose_a: bool = False,
+                 interpret: bool | None = None,
+                 backend: str | None = None):
+    """The raw rank-1-corrected matmul primitive ``op(A) @ B - u w^T``."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .matmul_rank1(A, B, u, w, transpose_a=transpose_a)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    backend: str | None = None):
     """Fused attention forward (B,S,H,d)x(B,T,G,d) -> (B,S,H,d).
 
     Pallas kernel on TPU (scores never reach HBM); plain-XLA oracle
     elsewhere.  Forward-only — used by the prefill/serving paths."""
-    from repro.kernels import flash_attention as _fa
-    if interpret or (interpret is None and _use_pallas()):
+    from repro.kernels import ref as _ref
+    use_pallas, interp = contact.pallas_dispatch(backend, interpret)
+    if use_pallas:
+        from repro.kernels import flash_attention as _fa
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                                   interpret=bool(interpret))
+                                   interpret=interp)
     return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
 
 
-def selective_scan(x, delta, A, B, C, D, *, interpret: bool | None = None):
+def selective_scan(x, delta, A, B, C, D, *, interpret: bool | None = None,
+                   backend: str | None = None):
     """Fused Mamba-1 selective scan (see kernels/selective_scan.py).
 
     Pallas kernel on TPU — dA/dBu never reach HBM; associative-scan
     oracle elsewhere.  Forward-only — used by the prefill path."""
-    from repro.kernels import selective_scan as _ss
-    if interpret or (interpret is None and _use_pallas()):
+    from repro.kernels import ref as _ref
+    use_pallas, interp = contact.pallas_dispatch(backend, interpret)
+    if use_pallas:
+        from repro.kernels import selective_scan as _ss
         return _ss.selective_scan(x, delta, A, B, C, D,
-                                  interpret=bool(interpret))
+                                  interpret=interp)
     return _ref.selective_scan_ref(x, delta, A, B, C, D)

@@ -1,4 +1,11 @@
-"""Pure-jnp oracles for the Pallas kernels."""
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ``xla`` backend bodies of the contact-engine registry
+(:mod:`repro.core.contact`).  Only the raw primitives live here; the
+shift algebra mapping ``(X - mu 1^T)`` products onto ``matmul_rank1``
+calls has its single home in ``core.contact`` — use
+``ops.shifted_matmat`` / ``ops.shifted_rmatmat`` for shifted products.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,18 +18,6 @@ def matmul_rank1_ref(A, B, u, w, *, transpose_a: bool = False):
     out_dtype = jnp.promote_types(A.dtype, B.dtype)
     return (jnp.dot(a, B, preferred_element_type=jnp.float32)
             - jnp.outer(u, w)).astype(out_dtype)
-
-
-def shifted_matmat_ref(X, B, mu):
-    """(X - mu 1^T) @ B."""
-    return matmul_rank1_ref(X, B, mu, B.sum(axis=0))
-
-
-def shifted_rmatmat_ref(X, B, mu):
-    """(X - mu 1^T)^T @ B."""
-    n = X.shape[1]
-    return matmul_rank1_ref(X, B, jnp.ones((n,), X.dtype), mu @ B,
-                            transpose_a=True)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):

@@ -24,9 +24,13 @@ from jax.experimental import pallas as pl
 try:  # TPU-only helpers; fall back cleanly when running interpret-mode.
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
+    # renamed TPUCompilerParams -> CompilerParams across jax versions
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
 except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
+    _COMPILER_PARAMS = None
 
 
 def _kernel(a_ref, b_ref, u_ref, w_ref, o_ref, acc_ref, *, nk: int,
@@ -93,8 +97,8 @@ def matmul_rank1(A: jax.Array, B: jax.Array, u: jax.Array, w: jax.Array, *,
 
     grid = (mp // bm, Kp // bn, nk)
     kwargs = {}
-    if pltpu is not None and not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+    if _COMPILER_PARAMS is not None and not interpret:
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     out = pl.pallas_call(
         functools.partial(_kernel, nk=nk, transpose_a=transpose_a),

@@ -86,7 +86,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t2 = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from repro.compat import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         # loop-corrected per-device costs (cost_analysis counts while
         # bodies once — see hlo_analysis module docstring)
         hc = analyze(compiled.as_text(), num_partitions=chips)

@@ -171,31 +171,6 @@ def _split_computations(hlo: str) -> tuple[dict[str, list[str]], str | None]:
     return comps, entry
 
 
-def _fusion_operand_window(fused_lines: list[str], index: int) -> int | None:
-    """If every use of fused parameter ``index`` is a (dynamic-)slice or
-    gather, return the total window bytes read; else None (full read)."""
-    pname = None
-    for ln in fused_lines:
-        m = _PARAM_RE.match(ln)
-        if m and int(m.group(3)) == index:
-            pname = m.group(1)
-            break
-    if pname is None:
-        return None
-    uses = [ln for ln in fused_lines
-            if re.search(r"%" + re.escape(pname) + r"\b",
-                         ln.split("=", 1)[-1])]
-    if not uses:
-        return None
-    sliced = 0
-    for ln in uses:
-        m = _OP_RE.match(ln)
-        if not m or m.group(3) not in _SLICING_OPS:
-            return None
-        sliced += _type_bytes(m.group(2))
-    return sliced
-
-
 class _Module:
     def __init__(self, hlo: str, num_partitions: int):
         self.comps, self.entry = _split_computations(hlo)
@@ -231,6 +206,94 @@ class _Module:
     def _kind_kloop(self, line: str) -> bool:
         return "kind=kLoop" in line
 
+    def _fusion_like(self, op: str, line: str) -> bool:
+        """fusion(kind=kLoop) or a ``call`` whose body is only such
+        fusions / elementwise / slicing ops (older XLA CPU wraps kLoop
+        fusions in a parallel ``call`` indirection)."""
+        if op == "fusion":
+            return self._kind_kloop(line)
+        if op != "call":
+            return False
+        mcl = _CALLS_RE.search(line)
+        body = self.defs.get(mcl.group(1), {}) if mcl else {}
+        if not body:
+            return False
+        for bop, _, _, bline in body.values():
+            if bop in _ZERO_OPS or bop in _VIEW_OPS \
+                    or bop in _ELEMENTWISE_OPS or bop in _SLICING_OPS:
+                continue
+            if bop == "fusion" and self._kind_kloop(bline):
+                continue
+            return False
+        return True
+
+    def _operand_window(self, comp_name: str, index: int,
+                        depth: int = 0) -> int | None:
+        """Window bytes if every transitive use of parameter ``index`` of
+        ``comp_name`` is a (dynamic-)slice/gather — possibly through
+        nested fusion/call wrappers; else None (full read)."""
+        if depth > 4 or comp_name not in self.comps:
+            return None
+        pname = None
+        for ln in self.comps[comp_name]:
+            m = _PARAM_RE.match(ln)
+            if m and int(m.group(3)) == index:
+                pname = m.group(1)
+                break
+        if pname is None:
+            return None
+        # negative lookahead, not \b: HLO names contain dots, so
+        # %add\b would also match the unrelated %add.1
+        uses = [ln for ln in self.comps[comp_name]
+                if re.search(r"%" + re.escape(pname) + r"(?![\w.\-])",
+                             ln.split("=", 1)[-1])]
+        if not uses:
+            return None
+        sliced = 0
+        for ln in uses:
+            m = _OP_RE.match(ln)
+            if not m:
+                return None
+            op = m.group(3)
+            if op in _SLICING_OPS:
+                sliced += _type_bytes(m.group(2))
+                continue
+            if op in ("fusion", "call"):
+                mcl = _CALLS_RE.search(ln)
+                if not mcl:
+                    return None
+                # operand list starts after the opcode's paren (_OP_RE
+                # ends there) — splitting on the first "(" of the line
+                # would grab a tuple result type instead
+                operand_names = _OPERAND_RE.findall(
+                    ln[m.end():].split(")", 1)[0])
+                if pname not in operand_names:
+                    return None            # parse failed: full read
+                for j, a in enumerate(operand_names):
+                    if a != pname:
+                        continue
+                    w = self._operand_window(mcl.group(1), j, depth + 1)
+                    if w is None:
+                        return None
+                    sliced += w
+                continue
+            return None
+        return sliced
+
+    def _windowed_reads(self, cname: str, operands: list[str], line: str,
+                        seen: set[str]) -> float:
+        """Reads feeding a fusion-like op, each operand clamped to its
+        slice window inside the called computation (if any)."""
+        mcl = _CALLS_RE.search(line)
+        called = mcl.group(1) if mcl else None
+        tot = 0.0
+        for i, a in enumerate(operands):
+            w = (self._operand_window(called, i)
+                 if called is not None else None)
+            r = self.read_bytes(cname, a, seen)
+            tot += min(r, w) if w is not None else r
+        return tot
+
     def transparent(self, cname: str, name: str) -> bool:
         """True if this op's result never materializes in HBM (fuses into
         its single consumer)."""
@@ -241,7 +304,7 @@ class _Module:
             return False
         if op in _ELEMENTWISE_OPS:
             return True
-        if op == "fusion" and self._kind_kloop(line):
+        if self._fusion_like(op, line):
             return True
         return False
 
@@ -259,15 +322,8 @@ class _Module:
         if op in _VIEW_OPS:
             return float(_type_bytes(res_type))
         if self.transparent(cname, name):
-            if op == "fusion":
-                mcl = _CALLS_RE.search(line)
-                fused = self.comps.get(mcl.group(1), []) if mcl else []
-                tot = 0.0
-                for i, a in enumerate(operands):
-                    w = _fusion_operand_window(fused, i)
-                    r = self.read_bytes(cname, a, seen)
-                    tot += min(r, w) if w is not None else r
-                return tot
+            if self._fusion_like(op, line):
+                return self._windowed_reads(cname, operands, line, seen)
             return sum(self.read_bytes(cname, a, seen) for a in operands)
         return float(_type_bytes(res_type))
 
@@ -347,20 +403,13 @@ class _Module:
                   ) -> float:
         if op in _ZERO_OPS or op in _VIEW_OPS or op == "while":
             return 0.0
-        if (op in _ELEMENTWISE_OPS or
-                (op == "fusion" and self._kind_kloop(line))):
+        if op in _ELEMENTWISE_OPS or self._fusion_like(op, line):
             if self.transparent(cname, res_name):
                 return 0.0
             # materialized (multi-use or loop-carried): write + reads
             seen: set[str] = set()
-            if op == "fusion":
-                mcl = _CALLS_RE.search(line)
-                fused = self.comps.get(mcl.group(1), []) if mcl else []
-                reads = 0.0
-                for i, a in enumerate(operands):
-                    w = _fusion_operand_window(fused, i)
-                    r = self.read_bytes(cname, a, seen)
-                    reads += min(r, w) if w is not None else r
+            if self._fusion_like(op, line):
+                reads = self._windowed_reads(cname, operands, line, seen)
             else:
                 reads = sum(self.read_bytes(cname, a, seen)
                             for a in operands)

@@ -10,14 +10,15 @@ import to build these meshes on CPU.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_mesh_for_devices(n_devices: int | None = None, model: int = 1):
@@ -26,5 +27,5 @@ def make_mesh_for_devices(n_devices: int | None = None, model: int = 1):
     n = n_devices or len(jax.devices())
     model = min(model, n)
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))

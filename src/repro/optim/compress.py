@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import contact
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressConfig:
@@ -83,7 +85,8 @@ def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
 
     if cfg.shift:
         mu = jnp.mean(g2, axis=1)                        # local col mean
-        sample = g2 @ omega - jnp.outer(mu, omega.sum(0))
+        sample = contact.rank1_correct(
+            g2 @ omega, *contact.shift_vectors_matmat(omega, mu))
     else:
         mu = jnp.zeros((m,), jnp.float32)
         sample = g2 @ omega
@@ -91,14 +94,14 @@ def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
     sample, mu_sum = lax.psum((sample, mu), axis)
     Q, _ = jnp.linalg.qr(sample, mode="reduced")         # identical per pod
 
-    Y = Q.T @ g2 - jnp.outer(Q.T @ mu, jnp.ones((n,), jnp.float32))
+    ones_n = jnp.ones((n,), jnp.float32)
+    Y = contact.rank1_correct(Q.T @ g2, Q.T @ mu, ones_n)
     # --- collective 2: K*n floats over DCN
     Y_sum = lax.psum(Y, axis)
 
-    g_hat_mean = (Q @ Y_sum + jnp.outer(mu_sum,
-                                        jnp.ones((n,), jnp.float32))) / P_
+    g_hat_mean = contact.rank1_restore(Q @ Y_sum, mu_sum, ones_n) / P_
     # error feedback vs the *local* contribution this pod actually sent
-    local_dec = Q @ Y + jnp.outer(mu, jnp.ones((n,), jnp.float32))
+    local_dec = contact.rank1_restore(Q @ Y, mu, ones_n)
     new_err = g2 - local_dec
     return g_hat_mean.reshape(shape).astype(g.dtype), new_err.reshape(shape)
 

@@ -22,6 +22,8 @@ from typing import Mapping
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 _state = threading.local()
 
 
@@ -131,13 +133,8 @@ def manual_moe_axis(d_ff: int) -> str | None:
     axis = rules.get("moe_ffn_manual")
     if not axis or d_ff == 0 or d_ff % mesh.shape[axis]:
         return None
-    try:
-        amesh = jax.sharding.get_abstract_mesh()
-        for a, t in zip(amesh.axis_names, amesh.axis_types):
-            if a == axis and "Manual" in str(t):
-                return None
-    except Exception:
-        pass
+    if axis in compat.manual_axis_names():
+        return None
     return axis
 
 
@@ -173,12 +170,7 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     spec = logical_to_spec(logical, rules)
     # axes already manual (inside shard_map over e.g. 'pod') must not
     # appear in the constraint — the context mesh owns them
-    try:
-        amesh = jax.sharding.get_abstract_mesh()
-        manual = {a for a, t in zip(amesh.axis_names, amesh.axis_types)
-                  if "Manual" in str(t)}
-    except Exception:
-        manual = set()
+    manual = compat.manual_axis_names()
     fixed = []
     for dim, ax in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
         axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
@@ -195,6 +187,10 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
             fixed.append(axes if len(axes) > 1 else axes[0])
     if manual:
         # context mesh differs from the bound mesh: constrain via spec
+        if not compat.supports_unbound_spec_constraint():
+            # old jax can't resolve a bare spec against the trace mesh;
+            # the constraint is a propagation hint, so drop it
+            return x
         return jax.lax.with_sharding_constraint(x, P(*fixed))
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*fixed)))

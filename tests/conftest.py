@@ -7,6 +7,8 @@ spawn subprocesses with their own XLA_FLAGS.
 import numpy as np
 import pytest
 
+import repro.compat  # noqa: F401  — jax version shims before test imports
+
 
 @pytest.fixture
 def rng():

@@ -14,6 +14,10 @@ import jax.numpy as jnp                                        # noqa: E402
 import numpy as onp                                            # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P     # noqa: E402
 
+import repro.compat                                            # noqa: E402,F401
+# ^ grafts the modern jax API (jax.shard_map, AxisType, ...) before the
+#   checks below use the modern spelling
+
 
 def _mesh(shape, axes):
     return jax.make_mesh(shape, axes,

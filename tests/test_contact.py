@@ -1,0 +1,294 @@
+"""Contact-engine layer: backend registry, out-of-core operators.
+
+Three claims under test:
+  1. the backend registry's ``interpret`` and ``xla`` implementations of
+     the rank-1-corrected matmul agree (so swapping backends never
+     changes results, only where they run);
+  2. ``BlockedOp`` (column-block streaming) and ``ChainedOp`` (lazy
+     composition) reproduce dense ``srsvd`` / ``PCA.fit`` bit-for-bit up
+     to fp32 tolerance, across block sizes including non-dividing ones;
+  3. the engine's product-then-correct fallback equals the fused dense
+     path, so every operator type sees the same shift algebra.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PCA, BlockedOp, ChainedOp, DenseOp, SparseOp,
+                        as_linop, available_backends, expected_error_bound,
+                        get_engine, rsvd, srsvd)
+from repro.core import contact
+from repro.kernels import ops
+
+
+def _data(rng, m=48, n=160):
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    mu = X.mean(axis=1)
+    return X, mu
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_backends():
+    assert {"xla", "pallas_tpu", "interpret"} <= set(available_backends())
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown contact backend"):
+        get_engine("cuda_dreams")
+
+
+def test_resolve_backend_legacy_interpret_tristate():
+    assert contact.resolve_backend(None, True) == "interpret"
+    assert contact.resolve_backend(None, False) == "xla"
+    assert contact.resolve_backend("xla", None) == "xla"
+    # None/None resolves to the hardware default (xla on this container)
+    assert contact.resolve_backend(None, None) == contact.default_backend()
+
+
+def test_resolve_backend_conflicting_args_raise():
+    with pytest.raises(ValueError, match="not both"):
+        contact.resolve_backend("pallas_tpu", False)
+
+
+def test_unknown_backend_raises_on_every_entry_point(rng):
+    """A typo'd backend must surface everywhere, never silently fall
+    back to the oracle path."""
+    X = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    with pytest.raises(KeyError, match="unknown contact backend"):
+        ops.shifted_matmat(X, X, jnp.zeros((8,)), backend="pallas")
+    q = jnp.zeros((1, 4, 2, 8), jnp.float32)
+    k = v = jnp.zeros((1, 4, 1, 8), jnp.float32)
+    with pytest.raises(KeyError, match="unknown contact backend"):
+        ops.flash_attention(q, k, v, backend="pallas")
+
+
+@pytest.mark.parametrize("transpose_a", [False, True])
+def test_interpret_and_xla_backends_agree_on_primitive(rng, transpose_a):
+    m, n, K = 56, 100, 12
+    A = rng.standard_normal((n, m) if transpose_a else (m, n)) \
+        .astype(np.float32)
+    B = rng.standard_normal((n, K)).astype(np.float32)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(K).astype(np.float32)
+    outs = [get_engine(b).matmul_rank1(jnp.asarray(A), jnp.asarray(B),
+                                       jnp.asarray(u), jnp.asarray(w),
+                                       transpose_a=transpose_a)
+            for b in ("xla", "interpret")]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_interpret_and_xla_backends_agree_on_shifted_contacts(rng):
+    X, mu = _data(rng)
+    B = rng.standard_normal((X.shape[1], 8)).astype(np.float32)
+    C = rng.standard_normal((X.shape[0], 8)).astype(np.float32)
+    for fn, rhs in ((ops.shifted_matmat, B), (ops.shifted_rmatmat, C)):
+        a = fn(jnp.asarray(X), jnp.asarray(rhs), jnp.asarray(mu),
+               backend="xla")
+        b = fn(jnp.asarray(X), jnp.asarray(rhs), jnp.asarray(mu),
+               backend="interpret")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_engine_fallback_equals_fused_dense_path(rng):
+    """product-then-correct (no contact_array) == fused dense contact."""
+    X, mu = _data(rng)
+    B = rng.standard_normal((X.shape[1], 8)).astype(np.float32)
+    eng = get_engine("xla")
+    dense = eng.shifted_matmat(DenseOp(jnp.asarray(X)), jnp.asarray(B),
+                               jnp.asarray(mu))
+    blocked = eng.shifted_matmat(BlockedOp.from_array(X, 50),
+                                 jnp.asarray(B), jnp.asarray(mu))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(blocked),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_rank1_correct_restore_roundtrip(rng):
+    P = jnp.asarray(rng.standard_normal((20, 6)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal(20).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal(6).astype(np.float32))
+    back = contact.rank1_restore(contact.rank1_correct(P, u, w), u, w)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(P), atol=1e-5)
+
+
+def test_custom_backend_registration_roundtrip():
+    calls = []
+
+    def traced(A, B, u, w, *, transpose_a=False):
+        calls.append(transpose_a)
+        return contact._xla_matmul_rank1(A, B, u, w,
+                                         transpose_a=transpose_a)
+
+    contact.register_backend("traced_test", traced)
+    try:
+        eng = get_engine("traced_test")
+        X = jnp.ones((4, 6), jnp.float32)
+        B = jnp.ones((6, 2), jnp.float32)
+        eng.dense_shifted_matmat(X, B, jnp.zeros((4,), jnp.float32))
+        assert calls == [False]
+        with pytest.raises(ValueError, match="already registered"):
+            contact.register_backend("traced_test", traced)
+    finally:
+        contact._REGISTRY.pop("traced_test", None)
+        contact._ENGINES.pop("traced_test", None)
+
+
+# ---------------------------------------------------------------------------
+# BlockedOp / ChainedOp parity with the dense path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_size", [32, 64, 77, 160, 500])
+def test_blocked_op_contacts_match_dense(rng, block_size):
+    X, mu = _data(rng)
+    B = rng.standard_normal((X.shape[1], 10)).astype(np.float32)
+    C = rng.standard_normal((X.shape[0], 10)).astype(np.float32)
+    op = BlockedOp.from_array(X, block_size)
+    assert op.shape == X.shape
+    np.testing.assert_allclose(np.asarray(op.matmat(jnp.asarray(B))),
+                               X @ B, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(jnp.asarray(C))),
+                               X.T @ C, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.col_mean()), mu, atol=1e-5)
+    np.testing.assert_allclose(float(op.fro_norm2()), float((X * X).sum()),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_size", [48, 61, 160])
+def test_blocked_srsvd_matches_dense(rng, block_size):
+    """Same key => identical factorization, streamed or not."""
+    X, mu = _data(rng)
+    key = jax.random.PRNGKey(3)
+    dense = srsvd(jnp.asarray(X), jnp.asarray(mu), 6, q=1, key=key)
+    blocked = srsvd(BlockedOp.from_array(X, block_size), jnp.asarray(mu),
+                    6, q=1, key=key)
+    np.testing.assert_allclose(np.asarray(blocked.S), np.asarray(dense.S),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(blocked.U), np.asarray(dense.U),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(blocked.Vt), np.asarray(dense.Vt),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("block_size", [48, 61])
+def test_blocked_pca_fit_matches_dense(rng, block_size):
+    X, _ = _data(rng)
+    key = jax.random.PRNGKey(4)
+    dense = PCA(k=5, q=1).fit(X, key=key)
+    blocked = PCA(k=5, q=1).fit(BlockedOp.from_array(X, block_size),
+                                key=key)
+    np.testing.assert_allclose(np.asarray(blocked.singular_values_),
+                               np.asarray(dense.singular_values_),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(blocked.components_),
+                               np.asarray(dense.components_),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(blocked.mean_),
+                               np.asarray(dense.mean_), atol=1e-5)
+    np.testing.assert_allclose(
+        float(blocked.mse(BlockedOp.from_array(X, block_size))),
+        float(dense.mse(X)), rtol=1e-4)
+
+
+def test_blocked_memmap_streams_from_disk(rng, tmp_path):
+    from repro.data.pipeline import open_memmap_matrix
+    X, mu = _data(rng, m=32, n=96)
+    path = tmp_path / "X.f32"
+    X.tofile(path)
+    loader = open_memmap_matrix(path, X.shape, "float32", block_size=40)
+    assert loader.num_blocks == 3
+    op = BlockedOp(loader)
+    key = jax.random.PRNGKey(5)
+    disk = srsvd(op, jnp.asarray(mu), 4, q=1, key=key)
+    dense = srsvd(jnp.asarray(X), jnp.asarray(mu), 4, q=1, key=key)
+    np.testing.assert_allclose(np.asarray(disk.S), np.asarray(dense.S),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_chained_op_contacts_match_materialized(rng):
+    A = rng.standard_normal((30, 20)).astype(np.float32)
+    B = rng.standard_normal((20, 50)).astype(np.float32)
+    M = A @ B
+    op = ChainedOp((DenseOp(jnp.asarray(A)), DenseOp(jnp.asarray(B))))
+    assert op.shape == (30, 50)
+    V = rng.standard_normal((50, 7)).astype(np.float32)
+    W = rng.standard_normal((30, 7)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matmat(jnp.asarray(V))),
+                               M @ V, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(jnp.asarray(W))),
+                               M.T @ W, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.col_mean()), M.mean(axis=1),
+                               atol=1e-5)
+    np.testing.assert_allclose(float(op.fro_norm2()), float((M * M).sum()),
+                               rtol=1e-4)
+
+
+def test_chained_srsvd_matches_dense(rng):
+    """Shifted product of a product: S-RSVD of A @ B without forming it."""
+    A = rng.standard_normal((40, 24)).astype(np.float32)
+    B = rng.standard_normal((24, 120)).astype(np.float32)
+    M = A @ B
+    mu = M.mean(axis=1)
+    key = jax.random.PRNGKey(6)
+    op = ChainedOp((DenseOp(jnp.asarray(A)), DenseOp(jnp.asarray(B))))
+    chained = srsvd(op, jnp.asarray(mu), 5, q=1, key=key)
+    dense = srsvd(jnp.asarray(M), jnp.asarray(mu), 5, q=1, key=key)
+    np.testing.assert_allclose(np.asarray(chained.S), np.asarray(dense.S),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_chained_blocked_composition(rng):
+    """A chain whose tail streams from host — products of products of
+    streams, still never materialized."""
+    A = rng.standard_normal((25, 30)).astype(np.float32)
+    X = rng.standard_normal((30, 90)).astype(np.float32)
+    op = ChainedOp((DenseOp(jnp.asarray(A)), BlockedOp.from_array(X, 32)))
+    V = rng.standard_normal((90, 4)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matmat(jnp.asarray(V))),
+                               (A @ X) @ V, atol=2e-4, rtol=2e-4)
+
+
+def test_chained_fro_norm2_both_strategies(rng):
+    """Small-interface split and outer-probing agree with the truth."""
+    A = rng.standard_normal((30, 12)).astype(np.float32)
+    B = rng.standard_normal((12, 50)).astype(np.float32)
+    truth = float((np.asarray(A @ B) ** 2).sum())
+    op = ChainedOp((DenseOp(jnp.asarray(A)), DenseOp(jnp.asarray(B))))
+    # interior dim 12 <= chunk -> one-pass trace split
+    np.testing.assert_allclose(float(op.fro_norm2(chunk=256)), truth,
+                               rtol=1e-4)
+    # chunk smaller than every interface -> outer identity probing
+    np.testing.assert_allclose(float(op.fro_norm2(chunk=4)), truth,
+                               rtol=1e-4)
+
+
+def test_chained_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="chain shape mismatch"):
+        ChainedOp((DenseOp(jnp.ones((3, 4))), DenseOp(jnp.ones((5, 6)))))
+
+
+# ---------------------------------------------------------------------------
+# satellite guards
+# ---------------------------------------------------------------------------
+
+def test_expected_error_bound_rejects_k1():
+    with pytest.raises(ValueError, match="k >= 2"):
+        expected_error_bound(100, 1, 0, 1.0)
+    # k=2 is fine
+    assert expected_error_bound(100, 2, 0, 1.0) > 1.0
+
+
+def test_srsvd_no_qr_update_path_matches(rng):
+    """The refactored line-6 fallback (rank1_correct) == qr_rank1_update."""
+    X, mu = _data(rng)
+    key = jax.random.PRNGKey(7)
+    a = srsvd(jnp.asarray(X), jnp.asarray(mu), 6, key=key,
+              use_qr_update=True)
+    b = srsvd(jnp.asarray(X), jnp.asarray(mu), 6, key=key,
+              use_qr_update=False)
+    np.testing.assert_allclose(np.asarray(a.S), np.asarray(b.S),
+                               atol=1e-4, rtol=1e-4)

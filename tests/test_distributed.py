@@ -43,6 +43,10 @@ def test_compression_cross_pod_mean():
 
 
 def test_multipod_compressed_train_step_runs():
+    from repro.compat import partial_manual_autodiff_works
+    if not partial_manual_autodiff_works():
+        pytest.skip("old XLA CHECK-aborts (IsManualSubgroup) on autodiff "
+                    "through a partial-manual shard_map; needs modern jax")
     _run("train_step_multipod")
 
 

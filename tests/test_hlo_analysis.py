@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.compat import cost_analysis_dict
 from repro.launch.hlo_analysis import (_collective_wire_bytes, _type_bytes,
                                        analyze)
 
@@ -25,7 +26,7 @@ def _scan_matmul(L=8, B=4, D=256):
 def test_cost_analysis_misses_trip_count():
     """Documents WHY this module exists: XLA counts the while body once."""
     compiled, expect = _scan_matmul()
-    xla = float(compiled.cost_analysis().get("flops", 0.0))
+    xla = float(cost_analysis_dict(compiled).get("flops", 0.0))
     assert xla < expect / 2          # the deficiency
 
 
@@ -48,6 +49,43 @@ def test_analyzer_counts_grad_scan_flops():
     compiled = jax.jit(jax.grad(f, argnums=(0, 1))).lower(W, x).compile()
     got = analyze(compiled.as_text())["flops"]
     np.testing.assert_allclose(got, 3 * 2 * L * B * D * D, rtol=0.02)
+
+
+def test_operand_window_tuple_result_is_conservative():
+    """A tuple-result nested fusion that reads its param in full must
+    yield window=None (full read), never a silent 0-byte window."""
+    from repro.launch.hlo_analysis import _Module
+    hlo = """
+%fused (p0: f32[8,16]) -> (f32[8,16], f32[8]) {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %neg = f32[8,16]{1,0} negate(f32[8,16]{1,0} %p0)
+  %c = f32[8]{0} constant(0)
+  ROOT %tup = (f32[8,16]{1,0}, f32[8]{0}) tuple(f32[8,16]{1,0} %neg, f32[8]{0} %c)
+}
+%wrapper (q: f32[8,16]) -> (f32[8,16], f32[8]) {
+  %q = f32[8,16]{1,0} parameter(0)
+  ROOT %f = (f32[8,16]{1,0}, f32[8]{0}) fusion(f32[8,16]{1,0} %q), kind=kLoop, calls=%fused
+}
+"""
+    mod = _Module(hlo, 1)
+    assert mod._operand_window("wrapper", 0) is None
+
+
+def test_operand_window_ignores_dotted_name_prefix():
+    """Param %add must not pick up uses of the unrelated %add.1."""
+    from repro.launch.hlo_analysis import _Module
+    hlo = """
+%fused (add: f32[64,64], i: s32[]) -> f32[1,64] {
+  %add = f32[64,64]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  %add.1 = s32[] add(s32[] %i, s32[] %i)
+  ROOT %ds = f32[1,64]{1,0} dynamic-slice(f32[64,64]{1,0} %add, s32[] %i, s32[] %i), dynamic_slice_sizes={1,64}
+}
+"""
+    mod = _Module(hlo, 1)
+    # every true use of %add is a slice -> window is the slice bytes,
+    # not None (which the %add.1 false match would force)
+    assert mod._operand_window("fused", 0) == 1 * 64 * 4
 
 
 def test_scan_bytes_close_to_ideal():
