@@ -1,16 +1,21 @@
 """Benchmark driver: one section per paper table/figure + framework
 benches.  Prints ``name,value,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig1,table1_images,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,schedule,...] [--smoke]
+
+``--smoke`` runs sections that support it (currently ``schedule``) at
+tiny sizes — the CI guard that keeps benches importable and runnable.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
-                        roofline, stream_bench, table1_images, table1_words)
+                        roofline, schedule_bench, stream_bench,
+                        table1_images, table1_words)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -19,6 +24,7 @@ SECTIONS = {
     "compress": compress_bench.main,
     "dist_svd": dist_svd_bench.main,
     "roofline": roofline.main,
+    "schedule": schedule_bench.main,
     "stream": stream_bench.main,
 }
 
@@ -27,6 +33,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (sections that support it)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
 
@@ -36,7 +44,11 @@ def main() -> None:
         t0 = time.time()
         rows: list[tuple] = []
         try:
-            SECTIONS[name](rows)
+            fn = SECTIONS[name]
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(rows, smoke=args.smoke)
+            else:
+                fn(rows)
         except Exception as e:  # report loudly, keep going
             failures += 1
             rows.append((f"{name}_ERROR", type(e).__name__, str(e)[:120]))

@@ -8,6 +8,8 @@ Public API:
   as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
   BlockedOp / ChainedOp   out-of-core streaming / lazy-composition operators
   ContactEngine / get_engine / register_backend   unified contact layer
+  ShiftSchedule / FixedShift / DecayingShift / DynamicShift
+                          power-iteration shift schedules (DESIGN.md §9)
 """
 from repro.core.contact import (ContactEngine, available_backends,
                                 default_backend, get_engine,
@@ -15,6 +17,8 @@ from repro.core.contact import (ContactEngine, available_backends,
 from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
                               LinOp, SparseOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
+from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
+                                 ShiftSchedule, as_schedule)
 from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
                               svd_jit)
 from repro.core.pca import PCA
@@ -27,4 +31,6 @@ __all__ = [
     "get_engine", "register_backend", "qr_rank1_update", "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",
     "dist_col_mean", "dist_pca_fit", "dist_srsvd", "tsqr",
+    "ShiftSchedule", "FixedShift", "DecayingShift", "DynamicShift",
+    "as_schedule",
 ]

@@ -209,6 +209,16 @@ class ContactEngine:
         u, w = shift_vectors_rmatmat(B, mu, op.shape[1], op.dtype)
         return rank1_correct(op.rmatmat(B), u, w)
 
+    def shifted_gram_matmat(self, op, B, mu):
+        """(X - mu 1^T)(X - mu 1^T)^T @ B — the power-iteration Gram
+        contact, composed from the two existing contact points (so every
+        operator type, fused or streamed, gets it for free).  Used by
+        the spectral shift schedules (:mod:`repro.core.schedule`), which
+        damp this product by ``alpha * B`` *outside* the contact — the
+        schedule update never touches X.
+        """
+        return self.shifted_matmat(op, self.shifted_rmatmat(op, B, mu), mu)
+
     def col_mean(self, op):
         return op.col_mean()
 

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import contact
+from repro.core.schedule import ShiftSchedule, as_schedule
 from repro.core.srsvd import SVDResult
 
 
@@ -76,11 +77,11 @@ def _small_svd_from_cols(Y_loc: jax.Array, col_axis):
     return U1, S, Vt_loc
 
 
-def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted,
+def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted, sched,
                      row_axis, col_axis):
     """The full Algorithm 1, executed per-device inside shard_map."""
     m_loc, n_loc = X_loc.shape
-    dt = X_loc.dtype
+    dt = omega_loc.dtype       # the float working dtype (operator may be int)
     ones_loc = jnp.ones((n_loc,), dt)
 
     # line 3: sample matrix.  Local partial + one psum over the col axis.
@@ -94,17 +95,35 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted,
         X1 = contact.rank1_correct(X1, mu_loc, v)
     Q_loc, _ = tsqr(X1, row_axis)                        # basis of Xbar
 
-    for _ in range(q):                                   # lines 8-11
-        # Zt = X^T Q - 1 (mu^T Q): ride the K-vector on the same psum.
+    state = sched.init(dt)
+    for t in range(q):                                   # lines 8-11
+        # Per-iteration shift vector mu_t = c_t mu: the schedule scales
+        # the *local* shard, so the K-vector correction rides the same
+        # psum as the main product, exactly as the constant shift does
+        # (DESIGN.md §9 — the rank-1 algebra is linear in mu).
+        mu_t = sched.shift_at(mu_loc, t)
+        # Zt = X^T Q - 1 (mu_t^T Q): ride the K-vector on the same psum.
         A, b = lax.psum(
-            (X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
+            (X_loc.T @ Q_loc, mu_t @ Q_loc), row_axis)
         Zt = contact.rank1_correct(A, ones_loc, b) if shifted else A
-        Qp_loc, _ = tsqr(Zt, col_axis)                   # (n_loc, K)
-        Z, s = lax.psum(
-            (X_loc @ Qp_loc, ones_loc @ Qp_loc), col_axis)
-        if shifted:
-            Z = contact.rank1_correct(Z, mu_loc, s)
-        Q_loc, _ = tsqr(Z, row_axis)
+        if sched.spectral:
+            # dashSVD Gram body: W = Xbar Xbar^T Q - alpha Q, one TSQR.
+            Z, s = lax.psum(
+                (X_loc @ Zt, ones_loc @ Zt), col_axis)
+            if shifted:
+                Z = contact.rank1_correct(Z, mu_t, s)
+            W = Z - sched.alpha(state) * Q_loc
+            Q_loc, R = tsqr(W, row_axis)
+            # R is replicated (TSQR), so the alpha update is identical
+            # on every device — no extra collective.
+        else:
+            Qp_loc, _ = tsqr(Zt, col_axis)               # (n_loc, K)
+            Z, s = lax.psum(
+                (X_loc @ Qp_loc, ones_loc @ Qp_loc), col_axis)
+            if shifted:
+                Z = contact.rank1_correct(Z, mu_t, s)
+            Q_loc, R = tsqr(Z, row_axis)
+        state = sched.update(state, R)
 
     # line 12: Y = Q^T X - (Q^T mu) 1^T,  (K, n_loc) col-sharded.
     YT, b = lax.psum((X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
@@ -132,14 +151,24 @@ def dist_col_mean(X, mesh: Mesh, row_axis="model", col_axis="data"):
 
 def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
                mesh: Mesh, key: jax.Array,
+               shift: ShiftSchedule | None = None,
                row_axis="model", col_axis="data") -> SVDResult:
     """Distributed shifted randomized SVD of ``X - mu 1^T``.
 
     X: (m, n) global array sharded P(row_axis, col_axis).
     mu: (m,) sharded P(row_axis), or None (plain distributed RSVD).
+    shift: power-iteration schedule (see :mod:`repro.core.schedule`);
+      scalar-profile schedules scale the local mu shard so per-iteration
+      shift vectors ride the existing psums, and spectral schedules
+      update their alpha from TSQR's replicated R factor — either way
+      the collective count per iteration is unchanged.
     """
     m, n = X.shape
     dt = X.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        # integer operators: draw omega (and run the QR/SVD algebra) in
+        # the float result type — same promotion rule as srsvd.
+        dt = jnp.result_type(dt, jnp.float32)
     K = 2 * k if K is None else K
     shifted = mu is not None
     if mu is None:
@@ -148,7 +177,7 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
 
     body = functools.partial(
         _dist_srsvd_body, k=k, K=K, q=q, shifted=shifted,
-        row_axis=row_axis, col_axis=col_axis)
+        sched=as_schedule(shift), row_axis=row_axis, col_axis=col_axis)
 
     U, S, Vt = shard_map(
         body, mesh=mesh,
@@ -160,9 +189,10 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
 
 
 def dist_pca_fit(X, k, *, mesh, key, q: int = 0,
+                 shift: ShiftSchedule | None = None,
                  row_axis="model", col_axis="data"):
     """Distributed PCA: column mean + shifted factorization, one pass."""
     mu = dist_col_mean(X, mesh, row_axis, col_axis)
-    res = dist_srsvd(X, mu, k, q=q, mesh=mesh, key=key,
+    res = dist_srsvd(X, mu, k, q=q, mesh=mesh, key=key, shift=shift,
                      row_axis=row_axis, col_axis=col_axis)
     return res, mu

@@ -193,7 +193,14 @@ class BlockedOp(LinOp):
 
     @property
     def dtype(self):
-        return jnp.dtype(self.source.dtype)
+        # Canonicalize the *host* source dtype once (float64 numpy /
+        # memmap -> float32 under x32): every accumulator below builds
+        # its dtype from this property, so the raw 64-bit type never
+        # reaches jnp.zeros and the per-call x64-truncation UserWarning
+        # never fires.  The device blocks are canonicalized by
+        # jnp.asarray the same way, so products are consistent.
+        return jnp.dtype(
+            jax.dtypes.canonicalize_dtype(jnp.dtype(self.source.dtype)))
 
     def _blocks(self):
         for j0, blk in self.source.iter_blocks():

@@ -18,12 +18,18 @@ import jax.numpy as jnp
 
 from repro.core import contact
 from repro.core.linop import as_linop
+from repro.core.schedule import ShiftSchedule
 from repro.core.srsvd import SVDResult, srsvd
 
 
 @dataclasses.dataclass
 class PCA:
     """Principal component analysis via shifted randomized SVD.
+
+    ``shift`` takes a :class:`~repro.core.schedule.ShiftSchedule` for
+    the power iterations (e.g. ``PCA(k=10, q=2,
+    shift=DynamicShift())`` — the Feng et al. accelerated iteration);
+    the fitted factorization target is the centered matrix either way.
 
     Attributes after ``fit``:
       components_: (k, m) rows are principal axes (left singular vectors^T).
@@ -36,6 +42,7 @@ class PCA:
     q: int = 0
     center: bool = True
     backend: str | None = None
+    shift: ShiftSchedule | None = None
     components_: jax.Array | None = None
     mean_: jax.Array | None = None
     singular_values_: jax.Array | None = None
@@ -44,12 +51,19 @@ class PCA:
     def _engine(self) -> contact.ContactEngine:
         return contact.get_engine(self.backend)
 
+    def _check_fitted(self, method: str) -> None:
+        if self.components_ is None or self.mean_ is None:
+            raise ValueError(
+                f"PCA.{method} called before fit: this PCA(k={self.k}) "
+                "has no fitted components yet — call "
+                ".fit(X, key=jax.random.PRNGKey(...)) first")
+
     def fit(self, X, *, key: jax.Array) -> "PCA":
         op = as_linop(X)
         eng = self._engine
         mu = eng.col_mean(op) if self.center else None
         res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key,
-                               engine=eng)
+                               shift=self.shift, engine=eng)
         self.components_ = res.U.T
         self.singular_values_ = res.S
         m = op.shape[0]
@@ -58,11 +72,13 @@ class PCA:
 
     def transform(self, X) -> jax.Array:
         """Project columns of X: Y = U^T (X - mu 1^T), computed implicitly."""
+        self._check_fitted("transform")
         op = as_linop(X)
         return self._engine.shifted_rmatmat(
             op, self.components_.T, self.mean_).T           # (k, n)
 
     def inverse_transform(self, Y: jax.Array) -> jax.Array:
+        self._check_fitted("inverse_transform")
         return self.components_.T @ Y + self.mean_[:, None]
 
     def mse(self, X) -> jax.Array:
@@ -72,6 +88,7 @@ class PCA:
         — the right-hand form never materializes the centered matrix, so
         the metric itself is sparse- and stream-safe.
         """
+        self._check_fitted("mse")
         op = as_linop(X)
         eng = self._engine
         m, n = op.shape

@@ -1,0 +1,243 @@
+"""Shift schedules for the S-RSVD power iteration (DESIGN.md §9).
+
+The paper fixes the shifting vector ``mu`` once (the column mean) and
+carries it unchanged through every power iteration.  Feng et al.
+(arXiv:2404.09276, "dashSVD") show that *updating* the shift per
+iteration accelerates the convergence of randomized SVD at no extra
+matrix contact.  This module is the single home of that idea: a
+``ShiftSchedule`` decides, for every power iteration ``t``, which shift
+the iteration runs under — and every consumer (``srsvd``'s engine loop,
+``svd_jit``'s ``lax.fori_loop``, the ``distributed.py`` shard_map body,
+the gradient-compression power refinement) drives its own contact
+points through the same small hook set:
+
+  ``init(dtype)``       -> state pytree carried through the loop
+                           (``lax.fori_loop``-compatible: fixed
+                           structure, fixed shapes)
+  ``scale_at(t)``       -> scalar multiplier on the rank-1 shifting
+                           vector for iteration ``t`` (``mu_t = c_t mu``)
+  ``shift_at(mu, t)``   -> the shift vector itself (``None`` stays
+                           ``None``; a multiplier of exactly 1.0 returns
+                           ``mu`` unchanged, preserving bit-for-bit
+                           parity with the constant-shift path)
+  ``spectral``          -> class flag: whether the schedule also carries
+                           a scalar spectral shift ``alpha`` applied to
+                           the Gram operator (the dashSVD accelerator)
+  ``alpha(state)``      -> the current spectral shift (spectral only)
+  ``update(state, R)``  -> post-iteration state update from the R factor
+                           of the iteration's QR — an O(K^3) host-side
+                           computation, never a new touch of X
+
+Two shift *kinds* compose here (DESIGN.md §9):
+
+  rank-1 shift   ``X - mu_t 1^T``      — the paper's implicit centering;
+                                         per-iteration vectors enter the
+                                         existing contact points
+                                         unchanged (the rank-1 algebra
+                                         is linear in ``mu``).
+  spectral shift ``Xbar Xbar^T - a I`` — dashSVD's damping of the power
+                                         iteration; applied *outside*
+                                         the contact points as an axpy
+                                         on the iterate, so it costs no
+                                         contact either.
+
+Schedules are frozen (hashable) hyper-parameter holders so they can ride
+``jax.jit`` static arguments; all iteration-varying quantities live in
+the ``state`` pytree.
+
+Example::
+
+    from repro.core import DynamicShift, srsvd
+
+    res = srsvd(X, mu, k=10, q=2, key=key, shift=DynamicShift())
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+class ShiftSchedule:
+    """Base schedule: the constant (paper) shift profile.
+
+    Subclasses override ``scale_at`` for scalar-profile schedules
+    (``mu_t = c_t mu``) and/or set ``spectral = True`` + implement
+    ``alpha``/``update`` for Gram-operator shifts.  The base class is a
+    valid schedule in its own right — it is the fixed-shift case.
+    """
+
+    #: whether this schedule carries a spectral (Gram) shift alpha.
+    #: (deliberately un-annotated: dataclass subclasses must not pick
+    #: this up as a constructor field)
+    spectral = False
+
+    def init(self, dtype):
+        """Initial loop-carried state (empty for stateless schedules)."""
+        return ()
+
+    def scale_at(self, t):
+        """Multiplier ``c_t`` on the rank-1 shifting vector at iteration
+        ``t``.  ``t`` may be a Python int (unrolled loops) or a traced
+        int32 (``lax.fori_loop``); implementations must accept both."""
+        return 1.0
+
+    def shift_at(self, mu, t):
+        """The shift vector for iteration ``t``: ``c_t * mu``.
+
+        ``None`` propagates (unshifted algorithm), and a static
+        multiplier of exactly 1.0 returns ``mu`` itself so the constant
+        schedule reproduces the fixed-``mu`` path bit for bit.
+        """
+        if mu is None:
+            return None
+        c = self.scale_at(t)
+        if isinstance(c, (int, float)) and c == 1.0:
+            return mu
+        return mu * jnp.asarray(c, mu.dtype)
+
+    def alpha(self, state):
+        """Current spectral shift (only meaningful when ``spectral``)."""
+        raise TypeError(f"{type(self).__name__} carries no spectral shift")
+
+    def update(self, state, R):
+        """Advance the state given the R factor of this iteration's QR.
+
+        ``R`` is (K, K) and replicated on every device in the
+        distributed path (TSQR returns a replicated R), so updates
+        computed from it stay consistent across shards for free.
+        """
+        return state
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedShift(ShiftSchedule):
+    """The paper's constant shift: ``mu_t = mu`` for every iteration.
+
+    ``srsvd(X, mu, ..., shift=FixedShift())`` is exactly
+    ``srsvd(X, mu, ...)`` — same operations in the same order.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class DecayingShift(ShiftSchedule):
+    """Annealed shift: ``mu_t = (floor + (1 - floor) gamma^t) mu``.
+
+    Starts at the full shift (``c_0 = 1``) and decays geometrically
+    toward ``floor * mu`` — interpolating the power iteration between
+    the paper's centered operator and the plain (Halko) one.  Useful
+    when the centering direction is itself a dominant component that
+    early iterations should see but late iterations should not re-amplify.
+    ``gamma = 1`` degenerates to :class:`FixedShift` exactly.
+    """
+
+    gamma: float = 0.5
+    floor: float = 0.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.gamma <= 1.0 and 0.0 <= self.floor <= 1.0):
+            raise ValueError(
+                f"need 0 <= gamma, floor <= 1, got {self.gamma=} "
+                f"{self.floor=}")
+
+    def scale_at(self, t):
+        if self.gamma == 1.0:
+            return 1.0
+        # ``gamma ** t`` works for Python ints and traced int32 alike.
+        return self.floor + (1.0 - self.floor) * self.gamma ** t
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicShift(ShiftSchedule):
+    """Per-iteration dynamic shift à la Feng et al. (dashSVD, Alg. 4).
+
+    Keeps the rank-1 shift ``mu`` constant and adds a scalar spectral
+    shift ``alpha_t`` to the Gram operator the power iteration runs on:
+
+        W_t = (Xbar Xbar^T - alpha_t I) Q_t,   Q_{t+1} R_t = qr(W_t)
+
+    Damping ratio: component ``i`` of the iterate scales by
+    ``sigma_i^2 - alpha`` per iteration, so the tail-to-head ratio
+    ``(sigma_j^2 - a)/(sigma_i^2 - a)`` (j > i) shrinks as ``alpha``
+    grows — strictly faster convergence than the unshifted iteration
+    whenever ``alpha > 0`` (DESIGN.md §9).  Safety requires
+    ``alpha <= sigma_K(Xbar)^2 / 2``; the update rule
+
+        alpha_{t+1} = max(alpha_t, (sigma_min(R_t) + alpha_t) / 2)
+
+    approaches that limit monotonically from below, because
+    ``sigma_min(R_t)`` estimates ``sigma_K(Xbar)^2 - alpha_t``.
+    ``alpha_0 = 0`` makes the first iteration identical to the plain
+    one; the state is the single scalar ``alpha``, carried through
+    ``lax.fori_loop``.  The two products per iteration are the same two
+    contact points the fixed path performs — no extra touch of X.
+    """
+
+    alpha0: float = 0.0
+    spectral = True
+
+    def init(self, dtype):
+        real = jnp.zeros((), dtype).real.dtype
+        return jnp.asarray(self.alpha0, real)
+
+    def alpha(self, state):
+        return state
+
+    def update(self, state, R):
+        smin = jnp.linalg.svd(R, compute_uv=False)[-1]
+        return jnp.maximum(state, (smin + state) * 0.5)
+
+
+#: module-level constant schedule (schedules are stateless and frozen,
+#: so one shared instance serves every fixed-shift call).
+FIXED = FixedShift()
+
+
+def as_schedule(shift) -> ShiftSchedule:
+    """Normalize ``shift`` to a schedule: ``None`` means fixed."""
+    if shift is None:
+        return FIXED
+    if isinstance(shift, ShiftSchedule):
+        return shift
+    raise TypeError(
+        f"shift must be a ShiftSchedule or None, got {type(shift).__name__}"
+        " (pass a shifting *vector* positionally as mu)")
+
+
+def resolve_shift(mu, shift):
+    """Normalize ``srsvd``'s ``(mu, shift=)`` pair to ``(mu, schedule)``.
+
+    ``shift`` accepts a schedule, a shifting vector (the fixed case
+    spelled through the new keyword), or None.  Passing a vector both
+    positionally (``mu``) and as ``shift=`` is ambiguous and raises.
+    """
+    if shift is None or isinstance(shift, ShiftSchedule):
+        return mu, as_schedule(shift)
+    if mu is not None:
+        raise ValueError(
+            "pass the shifting vector either positionally (mu) or as "
+            "shift=, not both")
+    return shift, FIXED
+
+
+def power_step(sched: ShiftSchedule, eng, op, Q, mu, t, state):
+    """One scheduled power iteration through engine contact points.
+
+    Non-spectral schedules run the paper's two-QR body (lines 9-10 of
+    Algorithm 1) under the per-iteration shift vector; spectral
+    schedules run the dashSVD single-QR Gram body.  Both perform exactly
+    two contacts with X per iteration.  Returns ``(Q, state)``; usable
+    as a ``lax.fori_loop`` body (``t`` may be traced, ``state`` is a
+    fixed-structure pytree).
+    """
+    mu_t = sched.shift_at(mu, t)
+    if sched.spectral:
+        W = eng.shifted_gram_matmat(op, Q, mu_t)
+        W = W - sched.alpha(state) * Q
+        Q, R = jnp.linalg.qr(W, mode="reduced")
+    else:
+        Zt = eng.shifted_rmatmat(op, Q, mu_t)
+        Qp, _ = jnp.linalg.qr(Zt, mode="reduced")
+        Z = eng.shifted_matmat(op, Qp, mu_t)
+        Q, R = jnp.linalg.qr(Z, mode="reduced")
+    return Q, sched.update(state, R)

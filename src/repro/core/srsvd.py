@@ -12,6 +12,13 @@ rank-1-epilogue Pallas matmul on TPU (and to plain XLA dot on other
 backends / for sparse and streamed operands).  Passing ``mu=None`` to an
 engine contact point means "unshifted", so the algorithm body below has
 no shifted-vs-plain branching.
+
+The power iterations run under a :class:`repro.core.schedule.ShiftSchedule`
+(``shift=``): the default ``FixedShift`` is the paper's constant ``mu``,
+``DynamicShift`` is the Feng et al. (arXiv:2404.09276) per-iteration
+accelerator, ``DecayingShift`` anneals the centering (DESIGN.md §9)::
+
+    srsvd(X, mu, k=10, q=2, key=key, shift=DynamicShift())
 """
 from __future__ import annotations
 
@@ -21,10 +28,12 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core import contact
+from repro.core import contact, schedule as _schedule
 from repro.core.linop import LinOp, as_linop
 from repro.core.qr_update import qr_rank1_update
+from repro.core.schedule import ShiftSchedule
 
 
 @jax.tree_util.register_pytree_node_class
@@ -52,9 +61,14 @@ def _qr(A):
 ShiftMode = Literal["exact", "paper"]
 
 
+PowerLoop = Literal["python", "fori"]
+
+
 def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
           key: jax.Array, use_qr_update: bool = True,
           shift_mode: ShiftMode = "exact",
+          shift: ShiftSchedule | jax.Array | None = None,
+          loop: PowerLoop = "python",
           engine: contact.ContactEngine | None = None) -> SVDResult:
     """Rank-k SVD of ``X - mu 1^T`` (Algorithm 1).
 
@@ -69,6 +83,18 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
       shift_mode: "exact" uses v = Omega^T 1 so line 6 produces the basis
         of the true sample (X - mu 1^T) Omega; "paper" uses v = 1_K,
         literally as printed in Algorithm 1 (see DESIGN.md §8).
+      shift: a :class:`~repro.core.schedule.ShiftSchedule` governing the
+        power iterations (``FixedShift`` — the default — reproduces the
+        constant-``mu`` path exactly; ``DynamicShift`` is the dashSVD
+        accelerator; ``DecayingShift`` anneals the centering), or a
+        shifting *vector* — equivalent to passing it as ``mu``.  The
+        sample (lines 3-7) and final projection (line 12) always use the
+        target ``mu``; the schedule governs lines 8-11 only, so every
+        schedule factorizes the same matrix (DESIGN.md §9).
+      loop: "python" unrolls the power loop (required for the streaming
+        ``BlockedOp``, whose block iteration is host-side); "fori" runs
+        it as a ``lax.fori_loop`` with ``(Q, schedule state)`` carry —
+        the jit-friendly form ``svd_jit`` uses.
       engine: contact engine to route every product through (default:
         the hardware-resolved backend — Pallas on TPU, XLA elsewhere).
     """
@@ -76,10 +102,16 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     eng = engine if engine is not None else contact.get_engine()
     m, n = op.shape
     dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        # Integer / bool operators: draw omega (and run all QR/SVD
+        # algebra) in the float result type of the operator dtype; the
+        # operator itself stays integer — products promote.
+        dt = jnp.result_type(dt, jnp.float32)
     if K is None:
         K = 2 * k
     if not (k <= K <= min(m, n)):
         raise ValueError(f"need k <= K <= min(m, n), got {k=} {K=} {m=} {n=}")
+    mu, sched = _schedule.resolve_shift(mu, shift)
 
     omega = jax.random.normal(key, (n, K), dtype=dt)        # line 2
     X1 = eng.matmat(op, omega)                              # line 3
@@ -95,13 +127,21 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     else:
         Q = Q1
 
-    for _ in range(q):                                      # lines 8-11
-        # line 9 / Eq. 7 then line 10 / Eq. 8 — both through the engine's
-        # fused rank-1-epilogue contact points (Pallas on TPU).
-        Zt = eng.shifted_rmatmat(op, Q, mu)
-        Qp, _ = _qr(Zt)
-        Z = eng.shifted_matmat(op, Qp, mu)
-        Q, _ = _qr(Z)
+    # lines 8-11 under the shift schedule: line 9 / Eq. 7 then line 10 /
+    # Eq. 8 (or the spectral Gram body), every product through the
+    # engine's fused rank-1-epilogue contact points (Pallas on TPU).
+    state = sched.init(dt)
+    if loop == "fori":
+        Q, state = lax.fori_loop(
+            0, q,
+            lambda t, c: _schedule.power_step(sched, eng, op, c[0], mu,
+                                              t, c[1]),
+            (Q, state))
+    elif loop == "python":
+        for t in range(q):
+            Q, state = _schedule.power_step(sched, eng, op, Q, mu, t, state)
+    else:
+        raise ValueError(f"loop must be 'python' or 'fori', got {loop!r}")
 
     # line 12 / Eq. 10:  Y = Q^T X - (Q^T mu) 1^T  ==  ((Xbar)^T Q)^T.
     Y = eng.shifted_rmatmat(op, Q, mu).T                    # (K, n)
@@ -112,10 +152,14 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
 
 
 def rsvd(X, k: int, K: int | None = None, q: int = 0, *,
-         key: jax.Array,
+         key: jax.Array, shift: ShiftSchedule | None = None,
          engine: contact.ContactEngine | None = None) -> SVDResult:
-    """Halko et al. (2011) randomized SVD — the paper's baseline."""
-    return srsvd(X, None, k, K, q, key=key, engine=engine)
+    """Halko et al. (2011) randomized SVD — the paper's baseline.
+
+    ``shift=DynamicShift()`` turns it into dashSVD proper (Feng et al.):
+    the spectral schedule needs no shifting vector.
+    """
+    return srsvd(X, None, k, K, q, key=key, shift=shift, engine=engine)
 
 
 def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
@@ -129,14 +173,27 @@ def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
         * sigma_k1
 
 
-@functools.partial(jax.jit, static_argnames=("k", "K", "q", "shifted"))
-def _jit_svd_dense(X, mu, k, K, q, shifted, key):
-    return srsvd(X, mu if shifted else None, k, K, q, key=key)
+@functools.partial(jax.jit,
+                   static_argnames=("k", "K", "q", "shifted", "shift"))
+def _jit_svd_dense(X, mu, k, K, q, shifted, shift, key):
+    # the power loop is a lax.fori_loop with (Q, schedule state) carry,
+    # so q never unrolls into the HLO and dynamic schedules trace once.
+    return srsvd(X, mu if shifted else None, k, K, q, key=key,
+                 shift=shift, loop="fori")
 
 
-def svd_jit(X, mu, k, K=None, q=0, *, key):
-    """jit'd convenience entry point for dense arrays."""
+def svd_jit(X, mu, k, K=None, q=0, *, key,
+            shift: ShiftSchedule | None = None):
+    """jit'd convenience entry point for dense arrays.
+
+    ``shift`` takes a schedule (frozen/hashable — it rides the jit cache
+    key as a static argument); its per-iteration state is carried
+    through the ``lax.fori_loop`` power loop.
+    """
     K = 2 * k if K is None else K
     m = X.shape[0]
+    if shift is not None and not isinstance(shift, ShiftSchedule):
+        raise TypeError("svd_jit takes the shifting vector as mu and a "
+                        "ShiftSchedule as shift")
     mu_arr = jnp.zeros((m,), X.dtype) if mu is None else mu
-    return _jit_svd_dense(X, mu_arr, k, K, q, mu is not None, key)
+    return _jit_svd_dense(X, mu_arr, k, K, q, mu is not None, shift, key)

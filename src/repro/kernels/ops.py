@@ -27,6 +27,15 @@ def shifted_rmatmat(X, B, mu, *, interpret: bool | None = None,
         .dense_shifted_rmatmat(X, B, mu)
 
 
+def shifted_gram_matmat(X, B, mu, *, interpret: bool | None = None,
+                        backend: str | None = None):
+    """(X - mu 1^T)(X - mu 1^T)^T @ B — the power-iteration Gram product
+    of the shift schedules, composed from the two fused contacts."""
+    from repro.core.linop import DenseOp
+    return contact.get_engine(backend, interpret=interpret) \
+        .shifted_gram_matmat(DenseOp(X), B, mu)
+
+
 def matmul_rank1(A, B, u, w, *, transpose_a: bool = False,
                  interpret: bool | None = None,
                  backend: str | None = None):

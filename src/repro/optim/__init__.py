@@ -1,7 +1,8 @@
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
-from repro.optim.compress import (CompressConfig, compress_state_init,
-                                  compressed_pod_mean, srsvd_compress_leaf)
+from repro.optim.compress import (CompressConfig, comm_bytes,
+                                  compress_state_init, compressed_pod_mean,
+                                  srsvd_compress_leaf)
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "CompressConfig",
-           "compress_state_init", "compressed_pod_mean",
+           "comm_bytes", "compress_state_init", "compressed_pod_mean",
            "srsvd_compress_leaf"]

@@ -38,6 +38,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import contact
+from repro.core.schedule import ShiftSchedule, as_schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,13 @@ class CompressConfig:
     min_numel: int = 1 << 20    # ... and at least this many elements
     shift: bool = True          # S-RSVD (paper) vs plain RSVD baseline
     axis: str = "pod"
+    # Power refinement of the compression basis (Halko q-sweep): each
+    # iteration costs one extra K(m + n)-float psum pair over DCN and
+    # sharpens Q toward the top-K subspace of the summed shifted
+    # gradient.  ``schedule`` picks the per-iteration shift (see
+    # repro.core.schedule; None = the constant shift).
+    power_q: int = 0
+    schedule: ShiftSchedule | None = None
 
 
 def _compressible(leaf) -> bool:
@@ -95,6 +103,33 @@ def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
     Q, _ = jnp.linalg.qr(sample, mode="reduced")         # identical per pod
 
     ones_n = jnp.ones((n,), jnp.float32)
+
+    # Power refinement of Q toward the top-K subspace of the *summed*
+    # shifted gradient A = sum_i (G_i - mu_i 1^T): every contact with A
+    # is a psum of local contacts (linearity again), the shift vector is
+    # the already-psummed mu_sum, and the schedule scales it per
+    # iteration / damps the Gram product exactly as in srsvd's loop
+    # (DESIGN.md §9).  Cost: 2 psums of K*n + K*m floats per iteration.
+    sched = as_schedule(cfg.schedule)
+    state = sched.init(jnp.float32)
+    for t in range(cfg.power_q):
+        mu_t = sched.shift_at(mu_sum, t)
+        Zt = contact.rank1_correct(
+            lax.psum(g2.T @ Q, axis),
+            *contact.shift_vectors_rmatmat(Q, mu_t, n, jnp.float32))
+        if sched.spectral:
+            W = contact.rank1_correct(
+                lax.psum(g2 @ Zt, axis),
+                *contact.shift_vectors_matmat(Zt, mu_t))
+            W = W - sched.alpha(state) * Q
+            Q, R = jnp.linalg.qr(W, mode="reduced")
+        else:
+            Qp, _ = jnp.linalg.qr(Zt, mode="reduced")
+            Z = contact.rank1_correct(
+                lax.psum(g2 @ Qp, axis),
+                *contact.shift_vectors_matmat(Qp, mu_t))
+            Q, R = jnp.linalg.qr(Z, mode="reduced")
+        state = sched.update(state, R)
     Y = contact.rank1_correct(Q.T @ g2, Q.T @ mu, ones_n)
     # --- collective 2: K*n floats over DCN
     Y_sum = lax.psum(Y, axis)
@@ -145,7 +180,9 @@ def comm_bytes(cfg: CompressConfig, grads_like) -> dict:
         if leaf_eligible(cfg, g):
             m = int(jnp.prod(jnp.array(g.shape[:-1])))
             n = g.shape[-1]
-            comp += 4 * (cfg.rank * (m + n) + m)
+            # base factors + one K(m + n) psum pair per power iteration
+            comp += 4 * (cfg.rank * (m + n) + m
+                         + cfg.power_q * cfg.rank * (m + n))
         else:
             comp += nbytes
     return {"plain_bytes": plain, "compressed_bytes": comp,

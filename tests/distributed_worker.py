@@ -47,6 +47,41 @@ def check_dist_srsvd_matches_single():
                                 onp.asarray(single.S), rtol=1e-3)
 
 
+def check_dist_schedule_matches_single():
+    """Schedules through the shard_map body: per-iteration shift
+    vectors ride the existing psums, the dynamic alpha updates from
+    TSQR's replicated R — and both match the single-device loop."""
+    from repro.core import (DecayingShift, DynamicShift, dist_col_mean,
+                            dist_srsvd, srsvd)
+    mesh = _mesh((2, 4), ("model", "data"))
+    rng = onp.random.default_rng(4)
+    m, n, k = 64, 256, 8
+    X = (rng.random((m, n)) + 1.0).astype(onp.float32)   # slow tail
+    Xs = jax.device_put(jnp.asarray(X),
+                        NamedSharding(mesh, P("model", "data")))
+    mu = dist_col_mean(Xs, mesh, "model", "data")
+    for sched in (DynamicShift(), DecayingShift(gamma=0.7)):
+        res = dist_srsvd(Xs, mu, k, q=2, mesh=mesh,
+                         key=jax.random.PRNGKey(3), shift=sched,
+                         row_axis="model", col_axis="data")
+        single = srsvd(jnp.asarray(X), jnp.asarray(X.mean(1)), k, q=2,
+                       key=jax.random.PRNGKey(3), shift=sched)
+        onp.testing.assert_allclose(
+            onp.asarray(res.reconstruct()),
+            onp.asarray(single.reconstruct()), atol=2e-3)
+        onp.testing.assert_allclose(onp.asarray(res.S),
+                                    onp.asarray(single.S), rtol=1e-3)
+    # integer operators promote (same rule as srsvd's working dtype)
+    Xi = (X * 50).astype(onp.int32)
+    Xis = jax.device_put(jnp.asarray(Xi),
+                         NamedSharding(mesh, P("model", "data")))
+    res_i = dist_srsvd(Xis, None, k, q=1, mesh=mesh,
+                       key=jax.random.PRNGKey(5),
+                       row_axis="model", col_axis="data")
+    assert res_i.S.dtype == jnp.float32
+    assert onp.isfinite(onp.asarray(res_i.S)).all()
+
+
 def check_tsqr():
     from repro.core import tsqr
     from jax import shard_map

@@ -282,6 +282,46 @@ def test_expected_error_bound_rejects_k1():
     assert expected_error_bound(100, 2, 0, 1.0) > 1.0
 
 
+def test_blocked_float64_source_no_truncation_warning(rng):
+    """A float64 host source (numpy default / memmap) must stream
+    silently: the operator canonicalizes the dtype once instead of
+    passing raw promote_types results to jnp.zeros on every call."""
+    import warnings
+    X64 = rng.standard_normal((24, 60))           # float64, numpy default
+    op = BlockedOp.from_array(X64, 25)
+    assert op.dtype == jnp.float32
+    B = jnp.asarray(rng.standard_normal((60, 4)).astype(np.float32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        out = op.matmat(B)
+        mu = op.col_mean()
+        f2 = op.fro_norm2()
+    assert out.dtype == jnp.float32 and mu.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), X64 @ np.asarray(B),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mu), X64.mean(axis=1), atol=1e-5)
+    np.testing.assert_allclose(float(f2), (X64 * X64).sum(), rtol=1e-5)
+
+
+def test_shifted_gram_contact_matches_composition(rng):
+    """The engine's Gram contact == the two-contact composition, dense
+    fused path vs streamed fallback, and the ops-layer wrapper agrees."""
+    X, mu = _data(rng)
+    B = rng.standard_normal((X.shape[0], 6)).astype(np.float32)
+    Xb = X - mu[:, None]
+    truth = Xb @ (Xb.T @ B)
+    eng = get_engine("xla")
+    dense = eng.shifted_gram_matmat(DenseOp(jnp.asarray(X)),
+                                    jnp.asarray(B), jnp.asarray(mu))
+    blocked = eng.shifted_gram_matmat(BlockedOp.from_array(X, 50),
+                                      jnp.asarray(B), jnp.asarray(mu))
+    wrapped = ops.shifted_gram_matmat(jnp.asarray(X), jnp.asarray(B),
+                                      jnp.asarray(mu), backend="xla")
+    for out in (dense, blocked, wrapped):
+        np.testing.assert_allclose(np.asarray(out), truth, rtol=2e-3,
+                                   atol=2e-2)
+
+
 def test_srsvd_no_qr_update_path_matches(rng):
     """The refactored line-6 fallback (rank1_correct) == qr_rank1_update."""
     X, mu = _data(rng)

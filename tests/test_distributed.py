@@ -34,6 +34,12 @@ def test_dist_srsvd_matches_single_device():
     _run("dist_srsvd_matches_single")
 
 
+def test_dist_schedules_match_single_device():
+    """Dynamic and decaying shift schedules through the shard_map body
+    == the single-device scheduled loop (same key, same schedule)."""
+    _run("dist_schedule_matches_single")
+
+
 def test_tsqr_orthonormal_and_exact():
     _run("tsqr")
 

@@ -78,3 +78,19 @@ def test_transform_is_implicitly_centered(rng):
     Y = np.asarray(p.transform(X))
     expl = np.asarray(p.components_) @ (X - np.asarray(p.mean_)[:, None])
     np.testing.assert_allclose(Y, expl, atol=1e-3)
+
+
+def test_unfitted_pca_raises_clear_error(rng):
+    """transform/inverse_transform/mse before fit must fail with an
+    actionable message, not an opaque NoneType AttributeError."""
+    X = _data(rng)
+    p = PCA(k=3)
+    for call in (lambda: p.transform(X),
+                 lambda: p.inverse_transform(jnp.zeros((3, 5))),
+                 lambda: p.mse(X)):
+        with pytest.raises(ValueError, match="before fit.*call.*fit"):
+            call()
+    # and after fit, the same calls work
+    p.fit(X, key=jax.random.PRNGKey(4))
+    assert p.transform(X).shape == (3, X.shape[1])
+    assert np.isfinite(float(p.mse(X)))

@@ -1,0 +1,320 @@
+"""Shift-schedule subsystem (DESIGN.md §9).
+
+Claims under test:
+  1. the constant schedule is *exactly* the fixed-``mu`` path — same
+     operations in the same order, bit-for-bit — on the xla and
+     interpret backends and through the blocked/streaming operator;
+  2. the dynamic (Feng et al.) schedule reaches lower reconstruction
+     error than the fixed shift at equal q>=2 on a slowly-decaying
+     spectrum, at the same per-iteration contact count;
+  3. schedules are jit-compatible: ``svd_jit`` carries the schedule
+     state through a ``lax.fori_loop`` and matches the eager loop;
+  4. every consumer agrees: dense == sparse == blocked under a dynamic
+     schedule, and the compress path's scheduled power refinement
+     reduces compression error.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro.core import (PCA, BlockedOp, DecayingShift, DynamicShift,
+                        FixedShift, SparseOp, as_schedule, get_engine, rsvd,
+                        srsvd, svd_jit)
+from repro.core.schedule import FIXED, ShiftSchedule, resolve_shift
+
+
+def _data(rng, m=60, n=300):
+    """Slowly-decaying spectrum (uniform noise) — the regime where the
+    dynamic spectral shift has room to damp the tail."""
+    return rng.random((m, n)).astype(np.float32)
+
+
+def _rel_err(X, mu, res):
+    Xb = X - mu[:, None]
+    return np.linalg.norm(Xb - np.asarray(res.reconstruct())) \
+        / np.linalg.norm(Xb)
+
+
+# ---------------------------------------------------------------------------
+# protocol / resolution
+# ---------------------------------------------------------------------------
+
+def test_as_schedule_normalization():
+    assert as_schedule(None) is FIXED
+    d = DynamicShift()
+    assert as_schedule(d) is d
+    with pytest.raises(TypeError, match="ShiftSchedule"):
+        as_schedule(np.zeros(3))
+
+
+def test_resolve_shift_vector_and_conflict(rng):
+    mu = jnp.asarray(rng.standard_normal(4).astype(np.float32))
+    out_mu, sched = resolve_shift(None, mu)
+    assert out_mu is mu and isinstance(sched, FixedShift)
+    with pytest.raises(ValueError, match="not both"):
+        resolve_shift(mu, mu)
+
+
+def test_shift_vector_keyword_equals_mu_positional(rng):
+    X = _data(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(0)
+    a = srsvd(jnp.asarray(X), mu, 6, q=1, key=key)
+    b = srsvd(jnp.asarray(X), None, 6, q=1, key=key, shift=mu)
+    np.testing.assert_array_equal(np.asarray(a.U), np.asarray(b.U))
+    np.testing.assert_array_equal(np.asarray(a.S), np.asarray(b.S))
+
+
+def test_schedules_are_hashable_static_args():
+    # jit cache keys require hashable schedules
+    assert hash(DynamicShift()) == hash(DynamicShift())
+    assert DynamicShift() == DynamicShift()
+    assert DecayingShift(gamma=0.3) != DecayingShift(gamma=0.4)
+
+
+def test_decaying_shift_validates_hyperparams():
+    with pytest.raises(ValueError, match="gamma"):
+        DecayingShift(gamma=1.5)
+
+
+def test_decaying_scale_profile():
+    s = DecayingShift(gamma=0.5, floor=0.2)
+    assert s.scale_at(0) == 1.0
+    np.testing.assert_allclose(s.scale_at(1), 0.2 + 0.8 * 0.5)
+    assert DecayingShift(gamma=1.0).scale_at(7) == 1.0
+
+
+def test_base_schedule_has_no_alpha():
+    with pytest.raises(TypeError, match="no spectral shift"):
+        FixedShift().alpha(())
+
+
+# ---------------------------------------------------------------------------
+# constant-schedule parity: bit-for-bit with today's mu path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_constant_schedule_is_fixed_path_bitwise(rng, backend):
+    X = _data(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(3)
+    eng = get_engine(backend)
+    plain = srsvd(jnp.asarray(X), mu, 8, q=2, key=key, engine=eng)
+    sched = srsvd(jnp.asarray(X), mu, 8, q=2, key=key, engine=eng,
+                  shift=FixedShift())
+    np.testing.assert_array_equal(np.asarray(plain.U), np.asarray(sched.U))
+    np.testing.assert_array_equal(np.asarray(plain.S), np.asarray(sched.S))
+    np.testing.assert_array_equal(np.asarray(plain.Vt),
+                                  np.asarray(sched.Vt))
+
+
+def test_constant_schedule_parity_blocked(rng):
+    """The streaming operator sees the same equivalence."""
+    X = _data(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(4)
+    plain = srsvd(BlockedOp.from_array(X, 77), mu, 6, q=2, key=key)
+    sched = srsvd(BlockedOp.from_array(X, 77), mu, 6, q=2, key=key,
+                  shift=FixedShift())
+    np.testing.assert_array_equal(np.asarray(plain.U), np.asarray(sched.U))
+    np.testing.assert_array_equal(np.asarray(plain.S), np.asarray(sched.S))
+
+
+def test_gamma1_decay_equals_fixed(rng):
+    X = _data(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(5)
+    a = srsvd(jnp.asarray(X), mu, 6, q=2, key=key)
+    b = srsvd(jnp.asarray(X), mu, 6, q=2, key=key,
+              shift=DecayingShift(gamma=1.0))
+    np.testing.assert_array_equal(np.asarray(a.S), np.asarray(b.S))
+
+
+# ---------------------------------------------------------------------------
+# dynamic shift: convergence acceleration
+# ---------------------------------------------------------------------------
+
+def test_dynamic_beats_fixed_at_q2(rng):
+    """Feng et al.'s claim on a slowly-decaying spectrum: at q=2 (the
+    first q where alpha > 0 kicks in) the dynamic schedule reaches lower
+    reconstruction error at the same number of matrix contacts."""
+    X = _data(rng, m=80, n=500)
+    mu = X.mean(axis=1)
+    muj = jnp.asarray(mu)
+    errs = {name: np.mean([
+        _rel_err(X, mu, srsvd(jnp.asarray(X), muj, 10, q=2,
+                              key=jax.random.PRNGKey(s), shift=sched))
+        for s in range(3)])
+        for name, sched in [("fixed", None), ("dyn", DynamicShift())]}
+    assert errs["dyn"] < errs["fixed"]
+
+
+def test_dynamic_alpha_monotone_and_q1_tie(rng):
+    """alpha_0 = 0 makes q=1 numerically equivalent to the fixed path
+    (same subspace; different orthonormalization), and the update rule
+    is monotone nondecreasing."""
+    X = _data(rng)
+    mu = X.mean(axis=1)
+    muj = jnp.asarray(mu)
+    key = jax.random.PRNGKey(1)
+    e_fix = _rel_err(X, mu, srsvd(jnp.asarray(X), muj, 8, q=1, key=key))
+    e_dyn = _rel_err(X, mu, srsvd(jnp.asarray(X), muj, 8, q=1, key=key,
+                                  shift=DynamicShift()))
+    np.testing.assert_allclose(e_dyn, e_fix, rtol=1e-4)
+    # monotone alpha: drive the update by hand
+    sched = DynamicShift()
+    state = sched.init(jnp.float32)
+    R = jnp.asarray(np.diag([4.0, 2.0, 1.0]).astype(np.float32))
+    s1 = sched.update(state, R)
+    s2 = sched.update(s1, R)
+    assert float(s1) == pytest.approx(0.5)      # (1 + 0)/2
+    assert float(s2) >= float(s1)
+
+
+def test_dynamic_unshifted_is_dashsvd(rng):
+    """rsvd(shift=DynamicShift()) — the spectral schedule needs no mu."""
+    X = _data(rng)
+    key = jax.random.PRNGKey(2)
+    res = rsvd(jnp.asarray(X), 8, q=2, key=key, shift=DynamicShift())
+    base = rsvd(jnp.asarray(X), 8, q=2, key=key)
+    err_d = np.linalg.norm(X - np.asarray(res.reconstruct()))
+    err_b = np.linalg.norm(X - np.asarray(base.reconstruct()))
+    assert err_d <= err_b * 1.001
+    U = np.asarray(res.U)
+    np.testing.assert_allclose(U.T @ U, np.eye(8), atol=1e-4)
+
+
+def test_dynamic_sparse_matches_dense(rng):
+    """The spectral Gram contact composes through every operator type."""
+    m, n = 50, 150
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    X[rng.random((m, n)) < 0.8] = 0.0
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(6)
+    dense = srsvd(jnp.asarray(X), mu, 6, q=2, key=key, shift=DynamicShift())
+    sparse = srsvd(SparseOp(jsparse.BCOO.fromdense(jnp.asarray(X))), mu, 6,
+                   q=2, key=key, shift=DynamicShift())
+    np.testing.assert_allclose(np.asarray(sparse.S), np.asarray(dense.S),
+                               rtol=1e-4, atol=1e-5)
+    blocked = srsvd(BlockedOp.from_array(X, 64), mu, 6, q=2, key=key,
+                    shift=DynamicShift())
+    np.testing.assert_allclose(np.asarray(blocked.S), np.asarray(dense.S),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# jit / fori_loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched", [None, DynamicShift(),
+                                   DecayingShift(gamma=0.5)])
+def test_svd_jit_fori_matches_eager(rng, sched):
+    """The lax.fori_loop carry (Q, schedule state) reproduces the
+    unrolled python loop for every schedule kind."""
+    X = _data(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(7)
+    eager = srsvd(jnp.asarray(X), mu, 6, q=2, key=key, shift=sched)
+    jitted = svd_jit(jnp.asarray(X), mu, 6, q=2, key=key, shift=sched)
+    np.testing.assert_allclose(np.asarray(jitted.S), np.asarray(eager.S),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jitted.reconstruct()),
+                               np.asarray(eager.reconstruct()),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svd_jit_rejects_vector_shift(rng):
+    X = jnp.asarray(_data(rng))
+    with pytest.raises(TypeError, match="ShiftSchedule"):
+        svd_jit(X, None, 4, key=jax.random.PRNGKey(0),
+                shift=jnp.zeros((60,)))
+
+
+def test_srsvd_rejects_unknown_loop(rng):
+    X = jnp.asarray(_data(rng))
+    with pytest.raises(ValueError, match="loop"):
+        srsvd(X, None, 4, q=1, key=jax.random.PRNGKey(0), loop="unrolled")
+
+
+def test_pca_threads_schedule(rng):
+    X = _data(rng)
+    key = jax.random.PRNGKey(8)
+    p_fix = PCA(k=6, q=2).fit(X, key=key)
+    p_dyn = PCA(k=6, q=2, shift=DynamicShift()).fit(X, key=key)
+    assert float(p_dyn.mse(X)) <= float(p_fix.mse(X)) * 1.001
+    np.testing.assert_allclose(np.asarray(p_dyn.mean_),
+                               np.asarray(p_fix.mean_), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# compress path: scheduled power refinement
+# ---------------------------------------------------------------------------
+
+def test_compress_power_refinement_reduces_error(rng):
+    """power_q > 0 sharpens the compression basis; the dynamic schedule
+    stays at least as good — exercised on a single-pod mesh in-process."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.optim import (CompressConfig, compress_state_init,
+                             compressed_pod_mean)
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    # rank well above the compression rank so power iterations matter
+    base = (rng.standard_normal((64, 16)) @ rng.standard_normal((16, 128))
+            + 2.0 + 0.3 * rng.standard_normal((64, 128))) \
+        .astype(np.float32)
+    grads = {"w": jnp.asarray(base[None])}
+
+    def run(cfg):
+        err0 = jax.tree.map(
+            lambda e: jnp.zeros((1,) + e.shape, e.dtype),
+            compress_state_init(cfg, {"w": grads["w"][0]}))
+
+        def body(g, e):
+            e = jax.tree.map(lambda x: x[0], e)
+            gh, ne = compressed_pod_mean(cfg, g, e,
+                                         jnp.zeros((), jnp.int32))
+            return gh, jax.tree.map(lambda x: x[None], ne)
+
+        gh, _ = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P("pod"), grads),
+                      jax.tree.map(lambda _: P("pod"), err0)),
+            out_specs=(P(), jax.tree.map(lambda _: P("pod"), err0)),
+            check_vma=False))(grads, err0)
+        return float(np.linalg.norm(np.asarray(gh["w"][0]) - base)
+                     / np.linalg.norm(base))
+
+    mk = lambda **kw: CompressConfig(rank=6, min_dim=32, min_numel=1024,
+                                     **kw)
+    e0 = run(mk())
+    e2 = run(mk(power_q=2))
+    e2d = run(mk(power_q=2, schedule=DynamicShift()))
+    assert e2 < e0
+    assert e2d <= e2 * 1.01
+
+
+def test_compress_comm_bytes_counts_power_iterations():
+    from repro.optim import CompressConfig, comm_bytes
+    g = {"w": jnp.zeros((512, 2048), jnp.float32)}
+    b0 = comm_bytes(CompressConfig(rank=8), g)
+    b2 = comm_bytes(CompressConfig(rank=8, power_q=2), g)
+    assert b2["compressed_bytes"] - b0["compressed_bytes"] \
+        == 4 * 2 * 8 * (512 + 2048)
+
+
+# ---------------------------------------------------------------------------
+# bench smoke: the registered section stays runnable
+# ---------------------------------------------------------------------------
+
+def test_schedule_bench_smoke_runs():
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import schedule_bench
+    rows = []
+    schedule_bench.main(rows, smoke=True)
+    names = [r[0] for r in rows]
+    assert any("dyn_minus_fixed" in n for n in names)
+    assert all(np.isfinite(float(r[1])) for r in rows)

@@ -151,3 +151,34 @@ def test_validation_errors(rng):
         srsvd(X, None, k=40, K=30, key=jax.random.PRNGKey(0))  # K < k
     with pytest.raises(ValueError):
         srsvd(X, None, k=10, K=60, key=jax.random.PRNGKey(0))  # K > m
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int8])
+def test_integer_operator_promotes_to_float(rng, dtype):
+    """Integer data matrices (counts, co-occurrence tallies) must work:
+    omega is drawn in the float result type and products promote — the
+    factorization equals the float-cast matrix's bit for bit (same key,
+    same float omega)."""
+    X = (rng.random((40, 120)) * 50).astype(dtype)
+    mu = X.astype(np.float32).mean(axis=1)
+    key = jax.random.PRNGKey(9)
+    res_i = srsvd(jnp.asarray(X), jnp.asarray(mu), 5, q=1, key=key)
+    res_f = srsvd(jnp.asarray(X.astype(np.float32)), jnp.asarray(mu), 5,
+                  q=1, key=key)
+    assert res_i.U.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(res_i.S), np.asarray(res_f.S),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(res_i.reconstruct()),
+                               np.asarray(res_f.reconstruct()),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_integer_operator_unshifted_and_jit(rng):
+    X = (rng.random((30, 90)) * 20).astype(np.int32)
+    key = jax.random.PRNGKey(10)
+    res = rsvd(jnp.asarray(X), 4, q=1, key=key)
+    assert res.S.dtype == jnp.float32
+    assert np.all(np.isfinite(np.asarray(res.S)))
+    jit_res = svd_jit(jnp.asarray(X), None, 4, q=1, key=key)
+    np.testing.assert_allclose(np.asarray(jit_res.S), np.asarray(res.S),
+                               rtol=1e-5)
