@@ -1,0 +1,82 @@
+"""Bench regression gate: fail CI when a gated metric drifts past its
+committed baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --current BENCH_stream.json --baseline benchmarks/baselines/stream.json
+
+``--current`` is a ``benchmarks/run.py --json`` output; ``--baseline``
+is a committed gate file::
+
+    {"gates": [{"name": "<row name>", "max": 0.93,
+                "note": "why this bound"}]}
+
+Each gate names one row of the current run and bounds its value
+(``max`` and/or ``min``, inclusive).  A missing row fails — a silently
+dropped metric is a regression too.  Wall-time rows are deliberately
+not gated (CI machine variance); the gated rows are accuracy metrics
+(rel-err, parity gaps), which are deterministic for pinned jax + fixed
+PRNG keys, so the bounds carry only small fp headroom.
+
+Updating a baseline is a reviewed code change: rerun the bench, copy
+the new value in, say why in ``note``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    """Returns a list of human-readable failures (empty = pass)."""
+    rows = {r["name"]: r["value"] for r in current.get("rows", [])}
+    failures = []
+    gates = baseline.get("gates", [])
+    if not gates:
+        return ["baseline has no gates — refusing to vacuously pass"]
+    for gate in gates:
+        name = gate["name"]
+        if name not in rows:
+            failures.append(f"{name}: row missing from current run")
+            continue
+        try:
+            val = float(rows[name])
+        except ValueError:
+            failures.append(f"{name}: non-numeric value {rows[name]!r}")
+            continue
+        if "max" in gate and val > gate["max"]:
+            failures.append(
+                f"{name}: {val:g} > max {gate['max']:g}"
+                + (f" ({gate['note']})" if gate.get("note") else ""))
+        if "min" in gate and val < gate["min"]:
+            failures.append(
+                f"{name}: {val:g} < min {gate['min']:g}"
+                + (f" ({gate['note']})" if gate.get("note") else ""))
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline)
+    for gate in baseline.get("gates", []):
+        name = gate["name"]
+        bad = any(f.startswith(f"{name}:") for f in failures)
+        print(f"{'FAIL' if bad else 'ok':4s} {name} "
+              f"(max={gate.get('max', '-')}, min={gate.get('min', '-')})")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench regression gate passed ({len(baseline['gates'])} gates)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,21 @@
 """Benchmark driver: one section per paper table/figure + framework
 benches.  Prints ``name,value,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig1,schedule,...] [--smoke]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,schedule,...]
+      [--smoke] [--json out.json]
 
-``--smoke`` runs sections that support it (currently ``schedule``) at
+``--smoke`` runs sections that support it (``schedule``, ``stream``) at
 tiny sizes — the CI guard that keeps benches importable and runnable.
+``--json`` additionally writes every row machine-readably, which is what
+``benchmarks/check_regression.py`` gates against the committed baselines
+in ``benchmarks/baselines/`` (the bench trajectory: rel-err must never
+silently regress).
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 
@@ -35,11 +41,15 @@ def main() -> None:
                     help="comma-separated section names")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (sections that support it)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as JSON (for the "
+                         "regression gate)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
 
     print("name,value,derived")
     failures = 0
+    all_rows: list[dict] = []
     for name in names:
         t0 = time.time()
         rows: list[tuple] = []
@@ -51,10 +61,20 @@ def main() -> None:
                 fn(rows)
         except Exception as e:  # report loudly, keep going
             failures += 1
-            rows.append((f"{name}_ERROR", type(e).__name__, str(e)[:120]))
+            rows.append((f"{name}_ERROR", type(e).__name__, str(e)[:200]))
+        wall = time.time() - t0
+        rows.append((f"{name}_wall_s", f"{wall:.1f}", ""))
         for row in rows:
             print(",".join(str(x) for x in row), flush=True)
-        print(f"{name}_wall_s,{time.time() - t0:.1f},", flush=True)
+            r = (tuple(row) + ("", ""))[:3]
+            all_rows.append({"section": name, "name": str(r[0]),
+                             "value": str(r[1]), "derived": str(r[2])})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"meta": {"smoke": args.smoke, "sections": names},
+                       "rows": all_rows}, f, indent=1)
+        print(f"# wrote {len(all_rows)} rows to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

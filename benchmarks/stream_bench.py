@@ -1,20 +1,29 @@
-"""Blocked out-of-core streaming vs in-memory dense S-RSVD.
+"""Blocked out-of-core streaming vs in-memory dense S-RSVD, plus the
+host-sharded streamed *distributed* path vs the resident-shard one.
 
 The blocked path (``BlockedOp`` over a disk-backed memmap) trades
 arithmetic locality for a device working set that is O(m·block + m·K)
 instead of O(m·n): only one (m, block) column slab is device-resident at
 a time, so matrices far larger than device memory stream through the
-same Algorithm 1.  This bench reports, for the dense baseline and at
-least two block sizes:
+same Algorithm 1.  The sharded path (``ShardedBlockedOp`` +
+``dist_srsvd_streamed``, DESIGN.md §10) splits the on-disk columns into
+per-host ranges, so the bound drops from host RAM to disk.  This bench
+reports, for each path:
 
   - wall time per full rank-k factorization (same key, same data);
-  - effective matrix throughput (bytes of X touched per second — the
-    algorithm reads X once per contact: 2 + 2q passes);
-  - peak device bytes for the X-contact working set (analytic — exact
-    for this allocator-free access pattern), dense vs blocked;
-  - a parity row: max |S_blocked - S_dense| must sit at fp32 noise.
+  - effective matrix throughput (bytes of X touched per second);
+  - peak per-host bytes for the X-contact working set (analytic — exact
+    for this allocator-free access pattern);
+  - relative Frobenius reconstruction error vs the centered matrix (the
+    regression-gated metric: it must not drift when the streaming
+    machinery changes);
+  - parity rows: max |S_streamed - S_dense| must sit at fp32 noise.
 
-Run: ``PYTHONPATH=src python -m benchmarks.run --only stream``
+Scratch space for the on-disk matrix comes from ``$REPRO_SCRATCH`` (or
+the system temp dir); an unwritable scratch dir fails with a clear
+message, and the memmap file is always removed on exit.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only stream [--smoke]``
 """
 from __future__ import annotations
 
@@ -26,11 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import BlockedOp, srsvd
+from repro.core import (BlockedOp, ShardedBlockedOp, dist_srsvd,
+                        dist_srsvd_streamed, srsvd)
 from repro.data.pipeline import open_memmap_matrix
 
-M, N, K_RANK, Q = 256, 8192, 16, 1
-BLOCKS = (512, 2048)
 ITEM = 4  # float32
 
 
@@ -51,46 +59,132 @@ def _peak_blocked_bytes(m: int, n: int, block: int, K: int) -> int:
     return (m * block + m * K + n * K) * ITEM
 
 
-def main(rows):
-    rng = np.random.default_rng(0)
-    X = (rng.standard_normal((M, N)) + 1.0).astype(np.float32)
-    mu = jnp.asarray(X.mean(axis=1))
-    key = jax.random.PRNGKey(0)
-    K = 2 * K_RANK
-    touched_mb = X.nbytes * _passes(Q) / 1e6
+def _peak_sharded_bytes(m: int, n: int, block: int, K: int,
+                        hosts: int) -> int:
+    # per HOST: one slab + replicated (m, K) iterate + this host's
+    # (n/P, K) slice of the right factors (DESIGN.md §10)
+    return (m * block + m * K + (n // hosts) * K) * ITEM
 
-    # --- in-memory dense baseline
-    Xj = jnp.asarray(X)
-    t_us = time_call(
-        lambda: srsvd(Xj, mu, K_RANK, q=Q, key=key), repeats=2)
-    peak = _peak_dense_bytes(M, N, K) / 1e6
-    dense_S = np.asarray(srsvd(Xj, mu, K_RANK, q=Q, key=key).S)
-    rows.append(("stream_dense_ms", f"{t_us / 1e3:.1f}",
-                 f"peak_dev_MB={peak:.1f} thpt_MBps="
-                 f"{touched_mb / (t_us / 1e6):.0f}"))
 
-    # --- blocked, streaming from an on-disk memmap
-    fd, path = tempfile.mkstemp(suffix=".f32")
-    os.close(fd)
+def _rel_err(Xbar: np.ndarray, res) -> float:
+    return float(np.linalg.norm(Xbar - np.asarray(res.reconstruct()))
+                 / np.linalg.norm(Xbar))
+
+
+def _scratch_file(n_bytes_hint: int) -> str:
+    """A writable scratch path for the on-disk matrix, or a clear error.
+
+    Honors ``$REPRO_SCRATCH``; an unwritable/missing directory is an
+    operator problem, reported as one line — not an OSError traceback
+    from deep inside np.memmap.
+    """
+    scratch = os.environ.get("REPRO_SCRATCH") or tempfile.gettempdir()
     try:
+        fd, path = tempfile.mkstemp(suffix=".f32", dir=scratch)
+        os.close(fd)
+        return path
+    except OSError as e:
+        raise RuntimeError(
+            f"stream bench needs {n_bytes_hint / 1e6:.1f} MB of writable "
+            f"scratch; {scratch!r} is not writable ({e}). Set "
+            "$REPRO_SCRATCH to a writable directory.") from e
+
+
+def main(rows, smoke: bool = False):
+    if smoke:
+        m, n, k, q = 64, 1024, 8, 1
+        blocks = (128,)
+    else:
+        m, n, k, q = 256, 8192, 16, 1
+        blocks = (512, 2048)
+    K = 2 * k
+    # fail fast on an unwritable scratch dir, before any compute; from
+    # here on the file exists, so everything runs under the try/finally
+    # that removes it.
+    path = _scratch_file(m * n * ITEM)
+    try:
+        rng = np.random.default_rng(0)
+        X = (rng.standard_normal((m, n)) + 1.0).astype(np.float32)
+        mu = jnp.asarray(X.mean(axis=1))
+        Xbar = X - X.mean(axis=1, keepdims=True)
+        key = jax.random.PRNGKey(0)
+        touched_mb = X.nbytes * _passes(q) / 1e6
+
+        # --- in-memory dense baseline
+        Xj = jnp.asarray(X)
+        t_us = time_call(
+            lambda: srsvd(Xj, mu, k, q=q, key=key), repeats=2)
+        peak = _peak_dense_bytes(m, n, K) / 1e6
+        dense = srsvd(Xj, mu, k, q=q, key=key)
+        dense_S = np.asarray(dense.S)
+        rows.append(("stream_dense_ms", f"{t_us / 1e3:.1f}",
+                     f"peak_dev_MB={peak:.1f} thpt_MBps="
+                     f"{touched_mb / (t_us / 1e6):.0f}"))
+        rows.append(("stream_relerr_dense", f"{_rel_err(Xbar, dense):.5f}",
+                     "rank-k rel Frobenius err (gated)"))
+
+        # --- blocked + host-sharded, streaming from an on-disk memmap
         X.tofile(path)
-        for block in BLOCKS:
+        for block in blocks:
             op = BlockedOp(open_memmap_matrix(
-                path, (M, N), "float32", block_size=block))
+                path, (m, n), "float32", block_size=block))
             t_us = time_call(
-                lambda op=op: srsvd(op, mu, K_RANK, q=Q, key=key),
+                lambda op=op: srsvd(op, mu, k, q=q, key=key),
                 repeats=2)
-            peak = _peak_blocked_bytes(M, N, block, K) / 1e6
-            blk_S = np.asarray(srsvd(op, mu, K_RANK, q=Q, key=key).S)
-            gap = float(np.abs(blk_S - dense_S).max())
-            rows.append((f"stream_blocked_b{block}_ms", f"{t_us / 1e3:.1f}",
+            peak = _peak_blocked_bytes(m, n, block, K) / 1e6
+            res = srsvd(op, mu, k, q=q, key=key)
+            gap = float(np.abs(np.asarray(res.S) - dense_S).max())
+            rows.append((f"stream_blocked_b{block}_ms",
+                         f"{t_us / 1e3:.1f}",
                          f"peak_dev_MB={peak:.1f} thpt_MBps="
                          f"{touched_mb / (t_us / 1e6):.0f}"))
             rows.append((f"stream_parity_b{block}_maxS_gap", f"{gap:.2e}",
-                         "must be fp32 noise"))
-        shrink = (_peak_dense_bytes(M, N, K)
-                  / _peak_blocked_bytes(M, N, min(BLOCKS), K))
+                         "must be fp32 noise (gated)"))
+            rows.append((f"stream_relerr_blocked_b{block}",
+                         f"{_rel_err(Xbar, res):.5f}", "gated"))
+        shrink = (_peak_dense_bytes(m, n, K)
+                  / _peak_blocked_bytes(m, n, min(blocks), K))
         rows.append(("stream_peak_mem_shrink_bmin",
-                     f"{shrink:.1f}x", f"dense/blocked@{min(BLOCKS)}"))
+                     f"{shrink:.1f}x", f"dense/blocked@{min(blocks)}"))
+
+        # --- streamed-distributed vs dense-distributed, on the local
+        # devices (1 in the CI bench process; 8 under the multidevice
+        # job's XLA_FLAGS).  shard_map needs the column count to divide
+        # the mesh, so clamp to the largest divisor of n — on an odd
+        # device count the bench degrades to fewer hosts, it does not
+        # error out.  Same key => same factors; the bench reports the
+        # cost of never holding X resident.
+        hosts = max(d for d in range(1, jax.device_count() + 1)
+                    if n % d == 0)
+        mesh = jax.make_mesh((1, hosts), ("model", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        Xs = jax.device_put(Xj, jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("model", "data")))
+        t_us = time_call(
+            lambda: dist_srsvd(Xs, mu, k, q=q, mesh=mesh, key=key),
+            repeats=2)
+        dres = dist_srsvd(Xs, mu, k, q=q, mesh=mesh, key=key)
+        rows.append(("stream_dist_dense_ms", f"{t_us / 1e3:.1f}",
+                     f"hosts={hosts} peak_host_MB="
+                     f"{_peak_dense_bytes(m, n, K) / hosts / 1e6:.1f}"))
+        rows.append(("stream_relerr_dist_dense",
+                     f"{_rel_err(Xbar, dres):.5f}", "gated"))
+        sop = ShardedBlockedOp.from_memmap(
+            path, (m, n), "float32", num_shards=hosts,
+            block_size=min(blocks))
+        t_us = time_call(
+            lambda: dist_srsvd_streamed(sop, mu, k, q=q, mesh=mesh,
+                                        key=key), repeats=2)
+        sres = dist_srsvd_streamed(sop, mu, k, q=q, mesh=mesh, key=key)
+        peak = _peak_sharded_bytes(m, n, min(blocks), K, hosts) / 1e6
+        rows.append(("stream_dist_streamed_ms", f"{t_us / 1e3:.1f}",
+                     f"hosts={hosts} peak_host_MB={peak:.1f} thpt_MBps="
+                     f"{touched_mb / (t_us / 1e6):.0f}"))
+        rows.append(("stream_relerr_dist_streamed",
+                     f"{_rel_err(Xbar, sres):.5f}", "gated"))
+        gap = float(np.abs(np.asarray(sres.S) - np.asarray(dres.S)).max())
+        rows.append(("stream_parity_dist_maxS_gap", f"{gap:.2e}",
+                     "streamed vs dense distributed (gated)"))
     finally:
-        os.unlink(path)
+        if os.path.exists(path):
+            os.unlink(path)

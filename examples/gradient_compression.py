@@ -17,7 +17,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ShapeCfg, get_config
 from repro.data import DataPipeline

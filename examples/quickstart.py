@@ -9,7 +9,8 @@ Demonstrates the paper's core claims in ~30 seconds on CPU:
   4. the dynamic shift schedule (Feng et al.) accelerates the power
      iteration at the same contact count (DESIGN.md §9).
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
@@ -27,14 +28,14 @@ def main():
     X, X_sparse, density = zipf_cooccurrence(300, 2000, n_pairs=400_000,
                                              rank=16, seed=0)
     print(f"X: {X.shape}, density {density:.3f} "
-          f"(mean-centering would densify to 100%)")
+          "(mean-centering would densify to 100%)")
 
     mu = X.mean(axis=1)
     k = 32
 
     # --- 1. implicit factorization of the centered matrix, sparse input
     res_sparse = srsvd(SparseOp(X_sparse), jnp.asarray(mu), k, q=1, key=key)
-    print(f"S-RSVD top-5 singular values: "
+    print("S-RSVD top-5 singular values: "
           f"{np.asarray(res_sparse.S[:5]).round(4)}")
 
     # --- 2. same key => same factorization as explicit centering

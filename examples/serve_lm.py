@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python examples/serve_lm.py [--arch yi_6b]
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -7,7 +7,8 @@ configuration (several hours on CPU, minutes on a real accelerator):
     PYTHONPATH=src python examples/train_lm.py                # ~2 min
     PYTHONPATH=src python examples/train_lm.py --full
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -15,7 +16,6 @@ import dataclasses
 
 import repro.configs.yi_6b as yi
 from repro.launch import train as trainer
-import repro.configs as configs
 
 
 def lm100m():

@@ -3,6 +3,9 @@
 Public API:
   srsvd / rsvd            single-device (Algorithm 1 / Halko baseline)
   dist_srsvd / dist_pca_fit  shard_map multi-device versions
+  dist_srsvd_streamed / dist_pca_fit_streamed  host-sharded out-of-core
+                          streaming front-end (per-host column ranges
+                          from disk; DESIGN.md §10)
   PCA                     implicit-centering principal component analysis
   qr_rank1_update         Golub & Van Loan rank-1 thin-QR update
   as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
@@ -15,22 +18,25 @@ from repro.core.contact import (ContactEngine, available_backends,
                                 default_backend, get_engine,
                                 register_backend)
 from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
-                              LinOp, SparseOp, as_linop)
+                              LinOp, ShardedBlockedOp, SparseOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
 from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
                               svd_jit)
 from repro.core.pca import PCA
-from repro.core.distributed import (dist_col_mean, dist_pca_fit, dist_srsvd,
-                                    tsqr)
+from repro.core.distributed import (dist_col_mean, dist_pca_fit,
+                                    dist_pca_fit_streamed, dist_srsvd,
+                                    dist_srsvd_streamed, tsqr)
 
 __all__ = [
-    "BlockedOp", "CallableOp", "ChainedOp", "DenseOp", "LinOp", "SparseOp",
+    "BlockedOp", "CallableOp", "ChainedOp", "DenseOp", "LinOp",
+    "ShardedBlockedOp", "SparseOp",
     "as_linop", "ContactEngine", "available_backends", "default_backend",
     "get_engine", "register_backend", "qr_rank1_update", "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",
-    "dist_col_mean", "dist_pca_fit", "dist_srsvd", "tsqr",
+    "dist_col_mean", "dist_pca_fit", "dist_pca_fit_streamed", "dist_srsvd",
+    "dist_srsvd_streamed", "tsqr",
     "ShiftSchedule", "FixedShift", "DecayingShift", "DynamicShift",
     "as_schedule",
 ]

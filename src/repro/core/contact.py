@@ -73,6 +73,16 @@ def rank1_restore(P: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
 # matmul primitive ``op(A) @ B - u w^T``.
 # --------------------------------------------------------------------------
 
+def canonical_dtype(src_dtype) -> jnp.dtype:
+    """Working dtype for a host block source: the raw (possibly 64-bit
+    numpy/memmap) dtype canonicalized ONCE under the current x64 mode,
+    so it never reaches a jnp accumulator directly and the per-call
+    truncation UserWarning never fires.  The single home of this rule —
+    the blocked/sharded operators and the sharded contact points below
+    must agree on it."""
+    return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(src_dtype)))
+
+
 # (A, B, u, w, transpose_a) -> op(A) @ B - u w^T
 MatmulRank1 = Callable[..., jax.Array]
 
@@ -216,8 +226,93 @@ class ContactEngine:
         the spectral shift schedules (:mod:`repro.core.schedule`), which
         damp this product by ``alpha * B`` *outside* the contact — the
         schedule update never touches X.
+
+        Block-source operators (``BlockedOp``) take the single-pass
+        sharded path below instead: each column slab serves both the
+        ``X^T B`` and the ``X (...)`` side while it is resident, halving
+        disk traffic per power iteration (2 passes -> 1).
         """
+        source = getattr(op, "source", None)
+        if source is not None and hasattr(source, "iter_blocks"):
+            G, s = self.sharded_shifted_gram_matmat(source, B, mu)
+            return G if mu is None else rank1_correct(G, mu, s)
         return self.shifted_matmat(op, self.shifted_rmatmat(op, B, mu), mu)
+
+    # -- sharded (per-column-range) contact points ---------------------
+    #    One host's side of a streamed product: the input is a block
+    #    source covering that host's column range (range-local j0), the
+    #    output is the host's *partial* — the caller sums partials over
+    #    hosts (a psum in the distributed path, a plain sum in-process).
+    #    Per-block products route through the backend primitive, so the
+    #    pallas_tpu / xla / interpret engines need no call-site changes.
+
+    def sharded_matmat(self, source, B_loc):
+        """Local partial ``X_loc @ B_loc`` for one column range.
+
+        ``B_loc`` is the (n_loc, K) slice of the right factor this range
+        owns.  Global ``X @ B`` = sum of partials over ranges.
+        """
+        m = int(source.shape[0])
+        acc = jnp.zeros((m, B_loc.shape[1]),
+                        jnp.promote_types(canonical_dtype(source.dtype),
+                                          B_loc.dtype))
+        for j0, blk in source.iter_blocks():
+            acc = acc + jnp.asarray(blk) @ B_loc[j0:j0 + blk.shape[1]]
+        return acc
+
+    def sharded_shifted_rmatmat(self, source, B, mu):
+        """Local rows ``(X_loc - mu 1^T)^T @ B`` for one column range.
+
+        Unlike the partial-sum contacts this output is *owned* whole by
+        the range (rows of the global product); ranges concatenate, they
+        do not sum.  ``mu=None`` means unshifted, as everywhere.
+        """
+        w = None if mu is None else mu @ B
+        parts = []
+        for _, blk in source.iter_blocks():
+            blk = jnp.asarray(blk)
+            if mu is None:
+                parts.append(blk.T @ B)
+            else:
+                u = jnp.ones((blk.shape[1],), w.dtype)
+                parts.append(self.matmul_rank1(blk, B, u, w,
+                                               transpose_a=True))
+        if not parts:
+            n_loc = int(source.shape[1])
+            dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+            return jnp.zeros((n_loc, B.shape[1]), dt)
+        return jnp.concatenate(parts, axis=0)
+
+    def sharded_shifted_gram_matmat(self, source, B, mu):
+        """One column range's share of the Gram contact, in a single
+        pass over its blocks: returns ``(G_loc, s_loc)`` with
+
+            Zt_blk = blk^T B - 1 (mu^T B)        (fused backend primitive)
+            G_loc  = sum_blk blk @ Zt_blk        (m, K)
+            s_loc  = sum_blk 1^T Zt_blk          (K,)
+
+        so the *global* Gram product is
+        ``(Xbar Xbar^T) B = psum(G_loc) - mu psum(s_loc)`` — the K-vector
+        ``s_loc`` rides the same collective as ``G_loc``, exactly like
+        the resident-shard ``dist_srsvd`` body (DESIGN.md §5, §10).
+        Each block is touched once while resident, serving both sides of
+        the Gram product.
+        """
+        m = int(source.shape[0])
+        w = None if mu is None else mu @ B
+        dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+        G = jnp.zeros((m, B.shape[1]), dt)
+        s = jnp.zeros((B.shape[1],), dt)
+        for _, blk in source.iter_blocks():
+            blk = jnp.asarray(blk)
+            if mu is None:
+                Zt_blk = blk.T @ B
+            else:
+                u = jnp.ones((blk.shape[1],), w.dtype)
+                Zt_blk = self.matmul_rank1(blk, B, u, w, transpose_a=True)
+            G = G + blk @ Zt_blk
+            s = s + Zt_blk.sum(axis=0)
+        return G, s
 
     def col_mean(self, op):
         return op.col_mean()

@@ -21,12 +21,16 @@ Tall-skinny QR (TSQR) replaces the dense QR of row-sharded m x K factors:
 local QR -> all_gather of the P (K x K) R-factors -> one replicated
 (PK x K) QR -> local recombination.  Communication: P*K*K floats, compute:
 O(m_loc K^2) — the standard scalable choice at 1000+ nodes.
+
+``dist_srsvd_streamed`` (bottom of this module, DESIGN.md §10) is the
+out-of-core front-end: the same collective schedule, but X lives on disk
+as per-host column ranges (``ShardedBlockedOp``) and every contact is a
+per-host block loop — the factorable matrix is bounded by *disk*, not
+host RAM.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import contact
+from repro.core.linop import ShardedBlockedOp
 from repro.core.schedule import ShiftSchedule, as_schedule
 from repro.core.srsvd import SVDResult
 
@@ -196,3 +201,270 @@ def dist_pca_fit(X, k, *, mesh, key, q: int = 0,
     res = dist_srsvd(X, mu, k, q=q, mesh=mesh, key=key, shift=shift,
                      row_axis=row_axis, col_axis=col_axis)
     return res, mu
+
+
+# ---------------------------------------------------------------------------
+# Host-sharded streaming front-end (DESIGN.md §10)
+#
+# The dense path above needs the full X resident and sharded before
+# shard_map ever sees it — the largest matrix it can factor is bounded
+# by host RAM.  The streamed path removes that bound: each host owns a
+# *column range of an on-disk matrix* (a ShardedBlockedOp shard) and
+# every contact with X is a per-host block loop that materializes one
+# (m, block) slab at a time.  The collective-bearing algebra — the
+# partial-product psums, the TSQR of the col-sharded iterate, the
+# replicated-R schedule updates — still runs inside shard_map on the
+# mesh, consuming the per-host partials.  Per-host residency:
+# O(m·block) for the slab + O(m·K) for the replicated iterate +
+# O(n·K / P) for the host's slice of the right factors; the m·n term is
+# gone on *disk* terms too, not just device terms (Halko et al. 2011
+# §6, combined with the Feng et al. dynamic shifts of DESIGN.md §9).
+#
+# The power-loop driver runs in Python on every host (the block loops
+# are host-side, exactly like BlockedOp's single-device loop), so one
+# iteration = host block loops producing partials, then one shard_map
+# combine.  In a true multi-host deployment each host computes only its
+# own partial from local disk; in this single-process simulation the
+# driver computes all of them and scatters with device_put — the
+# shard_map bodies are identical either way.
+# ---------------------------------------------------------------------------
+
+
+def _qr_replicated(A):
+    """Thin QR via the TSQR composition with a single block.
+
+    Bit-identical to ``tsqr(A, axis)`` over a trivial (size-1) axis —
+    an all_gather over one device is the identity — which is what keeps
+    the streamed path's factors matching the dense ``dist_srsvd`` run
+    on a trivially-row-sharded mesh, sign conventions included.
+    """
+    Q1, R1 = jnp.linalg.qr(A, mode="reduced")
+    Q2, R = jnp.linalg.qr(R1, mode="reduced")
+    return Q1 @ Q2, R
+
+
+def _col_axis_size(mesh: Mesh, col_axis) -> int:
+    axes = col_axis if isinstance(col_axis, (tuple, list)) else (col_axis,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(
+                f"mesh has no axis {a!r}; axes: {tuple(mesh.shape)}")
+        size *= mesh.shape[a]
+    return size
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "col_axis", "shifted"))
+def _streamed_sample(Xp, vp, mu, *, mesh, col_axis, shifted):
+    """psum the per-host sample partials, fold the rank-1 shift, QR."""
+
+    def body(Xp_loc, vp_loc, mu_):
+        X1 = lax.psum(Xp_loc[0], col_axis)
+        if shifted:
+            v = lax.psum(vp_loc[0], col_axis)
+            X1 = contact.rank1_correct(X1, mu_, v)
+        Q, _ = _qr_replicated(X1)
+        return Q
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(col_axis, None, None), P(col_axis, None), P()),
+        out_specs=P(None, None), check_vma=False)(Xp, vp, mu)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "col_axis"))
+def _streamed_tsqr_cols(Zt, *, mesh, col_axis):
+    """TSQR of the col-sharded (n, K) iterate — the same collective the
+    resident-shard body runs (local QR -> all_gather R -> replicated QR
+    -> recombine)."""
+
+    def body(Zt_loc):
+        return tsqr(Zt_loc, col_axis)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(col_axis, None),),
+        out_specs=(P(col_axis, None), P(None, None)),
+        check_vma=False)(Zt)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "col_axis", "shifted",
+                                    "spectral"))
+def _streamed_power_combine(Zp, sp, mu_t, Q, alpha, *, mesh, col_axis,
+                            shifted, spectral):
+    """psum the per-host power partials, correct, damp (spectral), QR.
+
+    ``R`` comes back replicated (the TSQR contract), so the dynamic
+    schedule's alpha update stays a per-host O(K^3) computation with no
+    extra collective — exactly as in the resident-shard body.
+    """
+
+    def body(Zp_loc, sp_loc, mu_t_, Q_):
+        Z = lax.psum(Zp_loc[0], col_axis)
+        s = lax.psum(sp_loc[0], col_axis)
+        if shifted:
+            Z = contact.rank1_correct(Z, mu_t_, s)
+        if spectral:
+            Z = Z - alpha * Q_
+        Q_new, R = _qr_replicated(Z)
+        return Q_new, R
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(col_axis, None, None), P(col_axis, None), P(), P()),
+        out_specs=(P(None, None), P(None, None)), check_vma=False)(
+            Zp, sp, mu_t, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "col_axis"))
+def _streamed_small_svd(Y, *, mesh, col_axis):
+    """Final small SVD of the (K, n) col-sharded projection via TSQR of
+    Y^T — identical to the resident-shard line 13."""
+
+    def body(Y_loc):
+        return _small_svd_from_cols(Y_loc, col_axis)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, col_axis),),
+        out_specs=(P(None, None), P(None), P(None, col_axis)),
+        check_vma=False)(Y)
+
+
+def _put(x, mesh, spec):
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
+                        *, mesh: Mesh, key: jax.Array,
+                        shift: ShiftSchedule | None = None,
+                        col_axis="data",
+                        engine: contact.ContactEngine | None = None
+                        ) -> SVDResult:
+    """Distributed S-RSVD of ``X - mu 1^T`` where X never fully loads:
+    host ``p`` streams its own column range from disk, block by block.
+
+    op: a :class:`repro.core.linop.ShardedBlockedOp` whose shard count
+      equals the ``col_axis`` mesh size and whose column ranges are
+      equal-width (the shard_map divisibility rule, same as the dense
+      path's).  Each per-block contact routes through the engine's
+      sharded contact points, so the pallas_tpu / xla / interpret
+      backends apply here with no call-site changes.
+    mu: (m,) shifting vector (host or device array), or None.
+    shift: power-iteration schedule; scalar profiles scale ``mu`` before
+      it enters the per-block rank-1 corrections, spectral schedules
+      update alpha from the combine's replicated R — collective count
+      per iteration is unchanged from the resident-shard body.
+
+    Factors come back laid out like ``dist_srsvd``'s: U (m, k) and S
+    replicated, Vt (k, n) sharded over ``col_axis``.  Same key => same
+    factors as the dense path up to blocked-accumulation fp noise (the
+    streamed-vs-dense parity check in ``tests/distributed_worker.py``).
+    """
+    if not isinstance(op, ShardedBlockedOp):
+        raise TypeError(
+            "dist_srsvd_streamed needs a ShardedBlockedOp (per-host "
+            f"column-range block sources), got {type(op).__name__}")
+    m, n = op.shape
+    P_ = _col_axis_size(mesh, col_axis)
+    if op.num_shards != P_:
+        raise ValueError(
+            f"operator has {op.num_shards} column shards but the mesh "
+            f"{col_axis!r} axis has {P_} devices — one host range per "
+            "device")
+    widths = {int(s.shape[1]) for s in op.shards}
+    if len(widths) != 1:
+        raise ValueError(
+            "shard_map needs equal-width column ranges, got widths "
+            f"{sorted(int(s.shape[1]) for s in op.shards)}; use "
+            "ColumnBlockLoader.split on a divisible n")
+
+    dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = jnp.result_type(dt, jnp.float32)
+    K = 2 * k if K is None else K
+    sched = as_schedule(shift)
+    eng = engine if engine is not None else contact.get_engine()
+    shifted = mu is not None
+    mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
+    mu_rep = _put(mu, mesh, P())
+    starts = op.col_starts
+
+    # line 2: the same global draw as the dense path (key parity).
+    omega = jax.random.normal(key, (n, K), dtype=dt)
+
+    def partial_sum_contact(fn):
+        """Stack per-host (m, K) partials, sharded one per col device."""
+        parts = [fn(p) for p in range(P_)]
+        return _put(jnp.stack([a for a, _ in parts]), mesh,
+                    P(col_axis, None, None)), \
+            _put(jnp.stack([b for _, b in parts]), mesh, P(col_axis, None))
+
+    # lines 3-7: sample partials per host, one combine.
+    Xp, vp = partial_sum_contact(
+        lambda p: (eng.sharded_matmat(op.shards[p],
+                                      omega[starts[p]:starts[p + 1]]),
+                   omega[starts[p]:starts[p + 1]].sum(axis=0)))
+    Q = _streamed_sample(Xp, vp, mu_rep, mesh=mesh, col_axis=col_axis,
+                         shifted=shifted)
+
+    # lines 8-11: per-iteration host block loops + one combine each.
+    state = sched.init(dt)
+    for t in range(q):
+        mu_t = sched.shift_at(mu, t) if shifted else None
+        mu_t_rep = _put(mu if mu_t is None else jnp.asarray(mu_t, dt),
+                        mesh, P())
+        if sched.spectral:
+            # dashSVD Gram body, one disk pass per iteration: each
+            # resident block serves both sides of Xbar Xbar^T Q.
+            Zp, sp = partial_sum_contact(
+                lambda p: eng.sharded_shifted_gram_matmat(
+                    op.shards[p], Q, mu_t))
+            alpha = sched.alpha(state)
+        else:
+            # two-QR body: Zt rows are owned per host (concatenate),
+            # then TSQR over the col axis, then partial products again.
+            Zt = jnp.concatenate(
+                [eng.sharded_shifted_rmatmat(op.shards[p], Q, mu_t)
+                 for p in range(P_)], axis=0)
+            Qp, _ = _streamed_tsqr_cols(
+                _put(Zt, mesh, P(col_axis, None)), mesh=mesh,
+                col_axis=col_axis)
+            Zp, sp = partial_sum_contact(
+                lambda p: (eng.sharded_matmat(
+                    op.shards[p], Qp[starts[p]:starts[p + 1]]),
+                    Qp[starts[p]:starts[p + 1]].sum(axis=0)))
+            alpha = jnp.zeros((), dt)
+        Q, R = _streamed_power_combine(
+            Zp, sp, mu_t_rep, Q, alpha, mesh=mesh, col_axis=col_axis,
+            shifted=shifted, spectral=bool(sched.spectral))
+        state = sched.update(state, R)
+
+    # line 12: Y = Q^T X - (Q^T mu) 1^T, rows owned per host.
+    Y = jnp.concatenate(
+        [eng.sharded_shifted_rmatmat(op.shards[p], Q,
+                                     mu if shifted else None)
+         for p in range(P_)], axis=0).T
+    U1, S, Vt = _streamed_small_svd(
+        _put(Y, mesh, P(None, col_axis)), mesh=mesh, col_axis=col_axis)
+    U = Q @ U1                                           # line 14
+    return SVDResult(U[:, :k], S[:k], Vt[:k, :])
+
+
+def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,
+                          key: jax.Array, q: int = 0,
+                          shift: ShiftSchedule | None = None,
+                          col_axis="data", center: bool = True,
+                          engine: contact.ContactEngine | None = None):
+    """Streamed distributed PCA: the column mean comes from one extra
+    disk pass over each host's range (a per-host (m,) partial — the
+    streamed analogue of ``dist_col_mean``'s single psum), then the
+    factorization streams the same ranges.  Returns ``(SVDResult, mu)``.
+    """
+    mu = op.col_mean() if center else None
+    res = dist_srsvd_streamed(op, mu, k, K, q, mesh=mesh, key=key,
+                              shift=shift, col_axis=col_axis,
+                              engine=engine)
+    m = op.shape[0]
+    return res, (mu if mu is not None else jnp.zeros((m,), op.dtype))

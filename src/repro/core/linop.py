@@ -24,6 +24,14 @@ Out-of-core operators (DESIGN.md §4):
     lazy operator composition ``A1 @ A2 @ ... @ Ap`` — the product
     matrix never exists, enabling shifted products of products (e.g.
     PCA of a whitened or projected stream).
+
+``ShardedBlockedOp``
+    host-sharded column ranges (DESIGN.md §10) — shard ``p`` owns one
+    column range of the matrix as its own block source, so P hosts can
+    stream one shared on-disk matrix with per-host residency
+    O(m·block + m·K + n·K/P).  Feeds ``dist_srsvd_streamed`` (the
+    multi-host path); also a plain ``LinOp``, so the single-device
+    algorithms accept it unchanged.
 """
 from __future__ import annotations
 
@@ -199,8 +207,8 @@ class BlockedOp(LinOp):
         # reaches jnp.zeros and the per-call x64-truncation UserWarning
         # never fires.  The device blocks are canonicalized by
         # jnp.asarray the same way, so products are consistent.
-        return jnp.dtype(
-            jax.dtypes.canonicalize_dtype(jnp.dtype(self.source.dtype)))
+        from repro.core.contact import canonical_dtype
+        return canonical_dtype(self.source.dtype)
 
     def _blocks(self):
         for j0, blk in self.source.iter_blocks():
@@ -236,6 +244,123 @@ class BlockedOp(LinOp):
         """Convenience: wrap an in-host-memory array (numpy / memmap)."""
         from repro.data.pipeline import ColumnBlockLoader
         return cls(ColumnBlockLoader(X, block_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBlockedOp(LinOp):
+    """Host-sharded out-of-core operator: shard ``p`` owns the global
+    column range ``[col_starts[p], col_starts[p+1])`` as its own block
+    source (DESIGN.md §10).
+
+    Each element of ``shards`` satisfies the block-source protocol
+    (``shape``/``dtype`` + range-local ``iter_blocks()``, e.g.
+    :class:`repro.data.pipeline.ColumnBlockLoader` with
+    ``col_lo``/``col_hi`` set).  In a true multi-host deployment every
+    host holds only its own shard and streams it from local disk; in a
+    single-process simulation this operator holds all of them, and
+    ``dist_srsvd_streamed`` drives one per-shard block loop per contact,
+    exactly as the per-host loops would run.
+
+    As a plain ``LinOp`` (products loop over every shard) it is
+    equivalent to a ``BlockedOp`` whose blocks happen to be grouped into
+    ranges — single-device ``srsvd``/``PCA`` accept it unchanged, which
+    is what the parity tests lean on.
+    """
+
+    shards: tuple[Any, ...]
+
+    def __post_init__(self):
+        if not self.shards:
+            raise ValueError("ShardedBlockedOp needs at least one shard")
+        m = int(self.shards[0].shape[0])
+        for s in self.shards:
+            if int(s.shape[0]) != m:
+                raise ValueError(
+                    f"shard row counts disagree: {s.shape[0]} != {m}")
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def col_starts(self) -> tuple[int, ...]:
+        """Global column offsets: shard p covers
+        [col_starts[p], col_starts[p+1])."""
+        starts, lo = [0], 0
+        for s in self.shards:
+            lo += int(s.shape[1])
+            starts.append(lo)
+        return tuple(starts)
+
+    @property
+    def shape(self):
+        m = int(self.shards[0].shape[0])
+        return (m, self.col_starts[-1])
+
+    @property
+    def dtype(self):
+        # same canonicalization rule as BlockedOp (one home:
+        # contact.canonical_dtype) — the raw host dtype never reaches a
+        # jnp accumulator.
+        from repro.core.contact import canonical_dtype
+        dt = canonical_dtype(self.shards[0].dtype)
+        for s in self.shards[1:]:
+            dt = jnp.promote_types(dt, canonical_dtype(s.dtype))
+        return dt
+
+    def _shard_ops(self):
+        for lo, src in zip(self.col_starts, self.shards):
+            yield lo, BlockedOp(src)
+
+    def matmat(self, B):
+        m, _ = self.shape
+        acc = jnp.zeros((m, B.shape[1]),
+                        jnp.promote_types(self.dtype, B.dtype))
+        for lo, op in self._shard_ops():
+            w = op.shape[1]
+            if w:
+                acc = acc + op.matmat(B[lo:lo + w])
+        return acc
+
+    def rmatmat(self, B):
+        parts = [op.rmatmat(B) for _, op in self._shard_ops()
+                 if op.shape[1]]
+        if not parts:
+            return jnp.zeros((0, B.shape[1]),
+                             jnp.promote_types(self.dtype, B.dtype))
+        return jnp.concatenate(parts, axis=0)
+
+    def col_mean(self):
+        m, n = self.shape
+        acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        for _, op in self._shard_ops():
+            if op.shape[1]:
+                acc = acc + op.col_mean() * op.shape[1]
+        return (acc / n).astype(self.dtype)
+
+    def fro_norm2(self):
+        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        for _, op in self._shard_ops():
+            if op.shape[1]:
+                acc = acc + op.fro_norm2()
+        return acc
+
+    @classmethod
+    def from_array(cls, X, num_shards: int,
+                   block_size: int) -> "ShardedBlockedOp":
+        """Even column split of a host array into ``num_shards`` ranges."""
+        from repro.data.pipeline import ColumnBlockLoader
+        return cls(ColumnBlockLoader(X, block_size).split(num_shards))
+
+    @classmethod
+    def from_memmap(cls, path, shape, dtype="float32", *,
+                    num_shards: int,
+                    block_size: int = 1024) -> "ShardedBlockedOp":
+        """Every shard opens the same on-disk matrix, restricted to its
+        own column range — the multi-host shared-filesystem layout."""
+        from repro.data.pipeline import open_memmap_matrix
+        return cls(open_memmap_matrix(
+            path, shape, dtype, block_size=block_size).split(num_shards))
 
 
 @dataclasses.dataclass(frozen=True)

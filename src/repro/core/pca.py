@@ -58,7 +58,33 @@ class PCA:
                 "has no fitted components yet — call "
                 ".fit(X, key=jax.random.PRNGKey(...)) first")
 
-    def fit(self, X, *, key: jax.Array) -> "PCA":
+    def fit(self, X, *, key: jax.Array, mesh=None,
+            streamed: bool = False) -> "PCA":
+        """Fit on X.  ``streamed=True`` routes through the host-sharded
+        distributed path (``dist_srsvd_streamed``): X must be a
+        :class:`repro.core.linop.ShardedBlockedOp` (per-host column
+        ranges of an on-disk matrix) and ``mesh`` is required — each
+        host streams its own range, the full matrix never loads
+        (DESIGN.md §10).
+        """
+        if streamed:
+            if mesh is None:
+                raise ValueError(
+                    "PCA.fit(streamed=True) needs a mesh — the streamed "
+                    "path shards column ranges over its col axis")
+            from repro.core.distributed import dist_pca_fit_streamed
+            res, mu = dist_pca_fit_streamed(
+                X, self.k, self.K, mesh=mesh, key=key, q=self.q,
+                shift=self.shift, center=self.center,
+                engine=self._engine)
+            self.components_ = res.U.T
+            self.singular_values_ = res.S
+            self.mean_ = mu
+            return self
+        if mesh is not None:
+            raise ValueError("PCA.fit only takes a mesh with "
+                             "streamed=True; use dist_pca_fit for the "
+                             "resident-shard distributed path")
         op = as_linop(X)
         eng = self._engine
         mu = eng.col_mean(op) if self.center else None

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import contact, schedule as _schedule
-from repro.core.linop import LinOp, as_linop
+from repro.core.linop import as_linop
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import ShiftSchedule
 
@@ -167,7 +167,7 @@ def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
     * sigma_{k+1}."""
     if k <= 1:
         raise ValueError(
-            f"expected_error_bound needs k >= 2 (the bound divides by "
+            "expected_error_bound needs k >= 2 (the bound divides by "
             f"k - 1), got k={k}")
     return (1.0 + 4.0 * (2.0 * m / (k - 1)) ** 0.5) ** (1.0 / (2 * q + 1)) \
         * sigma_k1

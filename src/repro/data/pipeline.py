@@ -31,25 +31,46 @@ from repro.models.config import ModelConfig
 class ColumnBlockLoader:
     """Column-block source over a host-resident array (numpy / memmap).
 
-    Yields ``(j0, X[:, j0:j0+block_size])`` covering the columns in
-    order — the protocol :class:`repro.core.linop.BlockedOp` consumes.
-    Each block is a *host* slice; the operator moves it to device, so a
+    Yields ``(j0, X[:, lo+j0 : lo+j0+block_size])`` covering the columns
+    of the loader's range in order — the protocol
+    :class:`repro.core.linop.BlockedOp` consumes.  ``j0`` is *range-
+    local* (the first block is always ``j0 = 0``), so a loader over a
+    host's column range ``[col_lo, col_hi)`` drops into ``BlockedOp``
+    unchanged: the operator simply presents an ``(m, col_hi - col_lo)``
+    matrix.  That range slicing is what the multi-host streaming path
+    (:class:`repro.core.linop.ShardedBlockedOp`,
+    ``dist_srsvd_streamed``) builds on — each host owns one range of the
+    same on-disk matrix.
+
+    Each block is a *host* slice; the consumer moves it to device, so a
     memmap-backed ``X`` streams from disk one slab at a time and total
-    device residency never exceeds one block plus the accumulator.
+    device residency never exceeds one block plus the accumulator.  An
+    empty range (``col_lo == col_hi``) is a valid loader of width 0 that
+    yields no blocks — a host that owns no columns contributes zero
+    partials, it does not crash.
     """
 
     X: "np.ndarray"
     block_size: int
+    col_lo: int = 0
+    col_hi: int | None = None
 
     def __post_init__(self):
         if self.block_size <= 0:
             raise ValueError(f"block_size must be > 0, got {self.block_size}")
         if getattr(self.X, "ndim", None) != 2:
             raise ValueError("ColumnBlockLoader needs a 2-D array")
+        n = self.X.shape[1]
+        hi = n if self.col_hi is None else self.col_hi
+        object.__setattr__(self, "col_hi", hi)
+        if not (0 <= self.col_lo <= hi <= n):
+            raise ValueError(
+                f"need 0 <= col_lo <= col_hi <= n={n}, got "
+                f"col_lo={self.col_lo} col_hi={hi}")
 
     @property
     def shape(self):
-        return self.X.shape
+        return (self.X.shape[0], self.col_hi - self.col_lo)
 
     @property
     def dtype(self):
@@ -57,28 +78,50 @@ class ColumnBlockLoader:
 
     @property
     def num_blocks(self) -> int:
-        n = self.X.shape[1]
-        return -(-n // self.block_size)
+        return -(-(self.col_hi - self.col_lo) // self.block_size)
 
     def iter_blocks(self):
-        n = self.X.shape[1]
-        for j0 in range(0, n, self.block_size):
+        width = self.col_hi - self.col_lo
+        for j0 in range(0, width, self.block_size):
+            lo = self.col_lo + j0
+            hi = self.col_lo + min(j0 + self.block_size, width)
             # np.ascontiguousarray forces the memmap read here (not
             # lazily inside the device transfer) and keeps the slice a
             # plain ndarray.
-            yield j0, np.ascontiguousarray(
-                self.X[:, j0:j0 + self.block_size])
+            yield j0, np.ascontiguousarray(self.X[:, lo:hi])
+
+    def split(self, num_shards: int) -> tuple["ColumnBlockLoader", ...]:
+        """Even column-range split of this loader's range into
+        ``num_shards`` sub-loaders (host p owns range p) — the canonical
+        way to build a :class:`repro.core.linop.ShardedBlockedOp` from
+        one on-disk matrix.  When the width does not divide, the first
+        ``width % num_shards`` shards get one extra column.
+        """
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be > 0, got {num_shards}")
+        width = self.col_hi - self.col_lo
+        base, extra = divmod(width, num_shards)
+        out, lo = [], self.col_lo
+        for p in range(num_shards):
+            w = base + (1 if p < extra else 0)
+            out.append(dataclasses.replace(self, col_lo=lo, col_hi=lo + w))
+            lo += w
+        return tuple(out)
 
 
 def open_memmap_matrix(path, shape: tuple[int, int], dtype="float32",
-                       *, block_size: int = 1024) -> ColumnBlockLoader:
+                       *, block_size: int = 1024, col_lo: int = 0,
+                       col_hi: int | None = None) -> ColumnBlockLoader:
     """Block loader over a raw on-disk matrix (C-order, no header).
 
     The file is opened read-only as a memmap — nothing is loaded until a
     block is iterated, so matrices far larger than RAM stream cleanly.
+    ``col_lo``/``col_hi`` restrict the loader to one host's column range
+    of a shared file (the multi-host streaming layout: every host opens
+    the same path, each reads only its own columns).
     """
     mm = np.memmap(path, dtype=np.dtype(dtype), mode="r", shape=shape)
-    return ColumnBlockLoader(mm, block_size)
+    return ColumnBlockLoader(mm, block_size, col_lo=col_lo, col_hi=col_hi)
 
 
 @dataclasses.dataclass

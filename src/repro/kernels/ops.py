@@ -36,6 +36,17 @@ def shifted_gram_matmat(X, B, mu, *, interpret: bool | None = None,
         .shifted_gram_matmat(DenseOp(X), B, mu)
 
 
+def sharded_shifted_gram_matmat(source, B, mu, *,
+                                interpret: bool | None = None,
+                                backend: str | None = None):
+    """One column range's Gram-contact partials ``(G_loc, s_loc)`` from a
+    block source, single pass over its blocks — the streamed distributed
+    power iteration's per-host contact (DESIGN.md §10).  Global product:
+    ``psum(G_loc) - mu psum(s_loc)``."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sharded_shifted_gram_matmat(source, B, mu)
+
+
 def matmul_rank1(A, B, u, w, *, transpose_a: bool = False,
                  interpret: bool | None = None,
                  backend: str | None = None):

@@ -20,10 +20,9 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import (ARCHS, SHAPES, cell_skip_reason, get_config,
-                           input_specs)
+from repro.configs import (ARCHS, SHAPES, cell_skip_reason,
+                           get_config)
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_step

@@ -15,7 +15,6 @@ import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

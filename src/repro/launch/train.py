@@ -22,14 +22,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import statistics
 import time
 
 import jax
 import numpy as np
 
-from repro import sharding as shd
 from repro.ckpt import CheckpointManager
 from repro.configs import ShapeCfg, get_config
 from repro.data import DataPipeline

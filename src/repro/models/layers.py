@@ -16,16 +16,14 @@ capacity), none.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.config import LayerSpec, ModelConfig
+from repro.models.config import ModelConfig
 from repro.sharding import constrain
 
 Params = dict

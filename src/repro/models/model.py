@@ -11,7 +11,6 @@ decode (single-token step against the cache).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

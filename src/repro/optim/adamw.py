@@ -38,7 +38,8 @@ def schedule(cfg: AdamWConfig, step):
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

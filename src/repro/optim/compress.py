@@ -30,12 +30,10 @@ Communication accounting per 2-D leaf: psum bytes = K(m + n) + m
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core import contact
 from repro.core.schedule import ShiftSchedule, as_schedule

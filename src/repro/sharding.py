@@ -57,7 +57,8 @@ def default_rules(mesh: Mesh, *, fsdp: bool = True,
             "ff": None, "kv_proj": None, "rnn_in": None,
             "experts": None, "inner": None, "rnn": None,
             "lora": None, "state": None, "embed_col": None,
-            "moe_grp": ("pod", "data", "model") if "pod" in mesh.axis_names else ("data", "model"),
+            "moe_grp": (("pod", "data", "model")
+                        if "pod" in mesh.axis_names else ("data", "model")),
         }
     if profile != "megatron":
         raise ValueError(f"unknown sharding profile: {profile}")

@@ -1,0 +1,81 @@
+"""Bench-trajectory plumbing: the regression gate's pass/fail logic and
+the stream bench's scratch-dir contract (clear failure, no litter)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import check                  # noqa: E402
+
+
+def _current(**rows):
+    return {"rows": [{"section": "s", "name": k, "value": str(v),
+                      "derived": ""} for k, v in rows.items()]}
+
+
+def test_gate_passes_within_bounds():
+    base = {"gates": [{"name": "relerr", "max": 0.9},
+                      {"name": "gap", "max": 1e-4, "min": 0.0}]}
+    assert check(_current(relerr=0.85, gap=3e-5), base) == []
+
+
+def test_gate_fails_over_max_and_reports_note():
+    base = {"gates": [{"name": "relerr", "max": 0.9, "note": "why"}]}
+    fails = check(_current(relerr=0.95), base)
+    assert len(fails) == 1 and "0.95 > max 0.9" in fails[0]
+    assert "why" in fails[0]
+
+
+def test_gate_fails_on_missing_row():
+    """A silently dropped metric is a regression too."""
+    base = {"gates": [{"name": "vanished", "max": 1.0}]}
+    fails = check(_current(other=0.5), base)
+    assert fails and "missing" in fails[0]
+
+
+def test_gate_refuses_empty_baseline():
+    assert check(_current(x=1.0), {"gates": []})
+    assert check(_current(x=1.0), {})
+
+
+def test_gate_fails_on_non_numeric_value():
+    base = {"gates": [{"name": "x", "max": 1.0}]}
+    fails = check(_current(x="3.2x"), base)
+    assert fails and "non-numeric" in fails[0]
+
+
+def test_committed_baselines_are_wellformed():
+    """Every committed baseline parses and gates at least one row."""
+    import json
+    bdir = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines")
+    names = [f for f in os.listdir(bdir) if f.endswith(".json")]
+    assert {"schedule.json", "stream.json"} <= set(names)
+    for f in names:
+        with open(os.path.join(bdir, f)) as fh:
+            base = json.load(fh)
+        assert base["gates"], f
+        for gate in base["gates"]:
+            assert "name" in gate and ("max" in gate or "min" in gate)
+
+
+def test_stream_bench_unwritable_scratch_is_clear_and_clean(tmp_path,
+                                                            monkeypatch):
+    """`--only stream` on an unwritable scratch dir must fail with one
+    actionable message (no OSError traceback) before any compute, and
+    a successful run must leave no memmap litter behind."""
+    from benchmarks import stream_bench
+    missing = tmp_path / "not-there"
+    monkeypatch.setenv("REPRO_SCRATCH", str(missing))
+    with pytest.raises(RuntimeError, match="REPRO_SCRATCH"):
+        stream_bench._scratch_file(1024)
+    # a writable dir works and the bench contract removes the file
+    scratch = tmp_path / "scratch"
+    scratch.mkdir()
+    monkeypatch.setenv("REPRO_SCRATCH", str(scratch))
+    path = stream_bench._scratch_file(1024)
+    assert os.path.dirname(path) == str(scratch)
+    os.unlink(path)
+    assert os.listdir(scratch) == []

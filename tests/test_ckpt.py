@@ -1,5 +1,4 @@
 """Checkpointing: atomicity, keep-N GC, async, restore and resharding."""
-import json
 import os
 
 import jax

@@ -8,7 +8,7 @@ in tests/test_distributed.py via subprocess.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.optim import (CompressConfig, compress_state_init,
                          compressed_pod_mean)

@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (PCA, BlockedOp, ChainedOp, DenseOp, SparseOp,
-                        as_linop, available_backends, expected_error_bound,
-                        get_engine, rsvd, srsvd)
+from repro.core import (PCA, BlockedOp, ChainedOp, DenseOp,
+                        available_backends, expected_error_bound,
+                        get_engine, srsvd)
 from repro.core import contact
 from repro.kernels import ops
 
@@ -301,6 +301,103 @@ def test_blocked_float64_source_no_truncation_warning(rng):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(mu), X64.mean(axis=1), atol=1e-5)
     np.testing.assert_allclose(float(f2), (X64 * X64).sum(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_sharded_contacts_sum_to_dense(rng, backend):
+    """Per-column-range partials (the streamed distributed path's
+    per-host contacts) recombine to the dense products on every
+    backend: sum for matmat/gram, concat for rmatmat — and the K-vector
+    ``s`` that rides the psum reproduces the global correction."""
+    from repro.data.pipeline import ColumnBlockLoader
+    X, mu = _data(rng)
+    m, n = X.shape
+    muj = jnp.asarray(mu)
+    B = jnp.asarray(rng.standard_normal((m, 5)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((n, 5)).astype(np.float32))
+    Xb = X - mu[:, None]
+    eng = get_engine(backend)
+    shards = ColumnBlockLoader(X, 23).split(4)       # 160 -> 40 each
+    starts = [0, 40, 80, 120, 160]
+
+    mm = sum(eng.sharded_matmat(s, C[starts[p]:starts[p + 1]])
+             for p, s in enumerate(shards))
+    np.testing.assert_allclose(np.asarray(mm), X @ np.asarray(C),
+                               rtol=2e-4, atol=2e-4)
+
+    rm = jnp.concatenate([eng.sharded_shifted_rmatmat(s, B, muj)
+                          for s in shards], axis=0)
+    np.testing.assert_allclose(np.asarray(rm), Xb.T @ np.asarray(B),
+                               rtol=2e-4, atol=2e-3)
+
+    parts = [eng.sharded_shifted_gram_matmat(s, B, muj) for s in shards]
+    G = sum(g for g, _ in parts)
+    s_vec = sum(s for _, s in parts)
+    gram = contact.rank1_correct(G, muj, s_vec)
+    np.testing.assert_allclose(np.asarray(gram),
+                               Xb @ (Xb.T @ np.asarray(B)),
+                               rtol=2e-3, atol=2e-2)
+    # ops-layer wrapper routes the same way
+    G2, s2 = ops.sharded_shifted_gram_matmat(shards[0], B, muj,
+                                             backend=backend)
+    np.testing.assert_allclose(np.asarray(G2), np.asarray(parts[0][0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(parts[0][1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_op_contacts_match_dense(rng):
+    """ShardedBlockedOp as a plain LinOp: grouped column ranges behave
+    exactly like one blocked operator."""
+    from repro.core import ShardedBlockedOp
+    X, mu = _data(rng)
+    op = ShardedBlockedOp.from_array(X, 5, block_size=13)
+    assert op.shape == X.shape and op.num_shards == 5
+    B = jnp.asarray(rng.standard_normal((X.shape[1], 4)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((X.shape[0], 4)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op.matmat(B)),
+                               X @ np.asarray(B), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(C)),
+                               X.T @ np.asarray(C), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.col_mean()), mu, atol=1e-5)
+    np.testing.assert_allclose(float(op.fro_norm2()),
+                               float((X * X).sum()), rtol=1e-5)
+    key = jax.random.PRNGKey(9)
+    dense = srsvd(jnp.asarray(X), jnp.asarray(mu), 6, q=1, key=key)
+    sharded = srsvd(op, jnp.asarray(mu), 6, q=1, key=key)
+    np.testing.assert_allclose(np.asarray(sharded.S), np.asarray(dense.S),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_gram_single_pass_counts_reads(rng):
+    """The Gram contact over a block source touches each block ONCE per
+    power iteration (the slab serves both product sides while
+    resident) — half the disk traffic of the two-contact composition."""
+    from repro.core import BlockedOp
+
+    class CountingSource:
+        def __init__(self, X, bs):
+            from repro.data.pipeline import ColumnBlockLoader
+            self.inner = ColumnBlockLoader(X, bs)
+            self.reads = 0
+        shape = property(lambda self: self.inner.shape)
+        dtype = property(lambda self: self.inner.dtype)
+
+        def iter_blocks(self):
+            for j0, blk in self.inner.iter_blocks():
+                self.reads += 1
+                yield j0, blk
+
+    X, mu = _data(rng)
+    src = CountingSource(X, 40)                     # 160 cols -> 4 blocks
+    eng = get_engine("xla")
+    B = jnp.asarray(rng.standard_normal((X.shape[0], 5)).astype(np.float32))
+    out = eng.shifted_gram_matmat(BlockedOp(src), B, jnp.asarray(mu))
+    assert src.reads == 4                           # one pass, not two
+    Xb = X - mu[:, None]
+    np.testing.assert_allclose(np.asarray(out),
+                               Xb @ (Xb.T @ np.asarray(B)),
+                               rtol=2e-3, atol=2e-2)
 
 
 def test_shifted_gram_contact_matches_composition(rng):

@@ -1,9 +1,12 @@
-"""Data pipeline determinism (failover contract) + co-occurrence gen."""
+"""Data pipeline determinism (failover contract) + co-occurrence gen +
+column-block loader edge cases (the out-of-core block-source protocol)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.data import DataPipeline, zipf_cooccurrence, zipf_tokens
+from repro.data.pipeline import ColumnBlockLoader, open_memmap_matrix
 
 
 def test_batches_deterministic_in_step():
@@ -42,6 +45,113 @@ def test_partial_regeneration_matches_full():
     full = p._host_tokens(2, 0, 8)
     part = p._host_tokens(2, 0, 8)[3:6]
     np.testing.assert_array_equal(full[3:6], part)
+
+
+# ---------------------------------------------------------------------------
+# ColumnBlockLoader: the block-source protocol behind BlockedOp /
+# ShardedBlockedOp (DESIGN.md §4, §10)
+# ---------------------------------------------------------------------------
+
+def test_loader_block_size_at_least_n_yields_single_block(rng):
+    X = rng.standard_normal((6, 10)).astype(np.float32)
+    for bs in (10, 11, 1000):
+        loader = ColumnBlockLoader(X, bs)
+        blocks = list(loader.iter_blocks())
+        assert loader.num_blocks == 1 and len(blocks) == 1
+        j0, blk = blocks[0]
+        assert j0 == 0
+        np.testing.assert_array_equal(blk, X)
+
+
+def test_loader_non_divisible_final_block(rng):
+    X = rng.standard_normal((4, 10)).astype(np.float32)
+    loader = ColumnBlockLoader(X, 4)
+    blocks = list(loader.iter_blocks())
+    assert [j0 for j0, _ in blocks] == [0, 4, 8]
+    assert [b.shape[1] for _, b in blocks] == [4, 4, 2]
+    np.testing.assert_array_equal(np.concatenate([b for _, b in blocks],
+                                                 axis=1), X)
+
+
+def test_loader_host_range_slicing(rng):
+    """col_lo/col_hi restrict the loader to one host's range; j0 stays
+    range-local so BlockedOp consumes a range unchanged."""
+    from repro.core import BlockedOp
+    X = rng.standard_normal((5, 20)).astype(np.float32)
+    loader = ColumnBlockLoader(X, 3, col_lo=7, col_hi=15)
+    assert loader.shape == (5, 8)
+    blocks = list(loader.iter_blocks())
+    assert [j0 for j0, _ in blocks] == [0, 3, 6]
+    np.testing.assert_array_equal(
+        np.concatenate([b for _, b in blocks], axis=1), X[:, 7:15])
+    B = rng.standard_normal((8, 2)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(BlockedOp(loader).matmat(jnp.asarray(B))),
+        X[:, 7:15] @ B, rtol=1e-5, atol=1e-5)
+
+
+def test_loader_empty_host_range(rng):
+    """A host that owns no columns is a valid width-0 source: no blocks,
+    zero partials — not a crash."""
+    from repro.core import ShardedBlockedOp
+    X = rng.standard_normal((5, 12)).astype(np.float32)
+    loader = ColumnBlockLoader(X, 4, col_lo=6, col_hi=6)
+    assert loader.shape == (5, 0)
+    assert loader.num_blocks == 0
+    assert list(loader.iter_blocks()) == []
+    # an empty shard inside a ShardedBlockedOp contributes nothing
+    op = ShardedBlockedOp((ColumnBlockLoader(X, 4),
+                           ColumnBlockLoader(X, 4, col_lo=6, col_hi=6)))
+    assert op.shape == (5, 12)
+    B = jnp.asarray(rng.standard_normal((12, 3)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op.matmat(B)),
+                               X @ np.asarray(B), rtol=1e-5, atol=1e-5)
+
+
+def test_loader_range_validation(rng):
+    X = rng.standard_normal((3, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match="col_lo"):
+        ColumnBlockLoader(X, 2, col_lo=5, col_hi=3)
+    with pytest.raises(ValueError, match="col_lo"):
+        ColumnBlockLoader(X, 2, col_lo=0, col_hi=9)
+    with pytest.raises(ValueError, match="block_size"):
+        ColumnBlockLoader(X, 0)
+
+
+def test_loader_split_covers_range(rng):
+    X = rng.standard_normal((3, 11)).astype(np.float32)
+    shards = ColumnBlockLoader(X, 4).split(3)
+    # 11 = 4 + 4 + 3: the first width % num_shards shards get the extra
+    assert [s.shape[1] for s in shards] == [4, 4, 3]
+    assert [(s.col_lo, s.col_hi) for s in shards] == [(0, 4), (4, 8),
+                                                      (8, 11)]
+    # more shards than columns: trailing shards are empty, still valid
+    shards = ColumnBlockLoader(X, 4, col_lo=9).split(4)
+    assert [s.shape[1] for s in shards] == [1, 1, 0, 0]
+
+
+def test_memmap_float64_source_canonicalizes_once(rng, tmp_path):
+    """A float64 on-disk matrix streams as float32 under x32 with no
+    per-call truncation warning — the dtype canonicalizes at the
+    operator boundary, and host-range slicing keeps that property."""
+    import warnings
+    from repro.core import BlockedOp
+    X64 = rng.standard_normal((6, 18))             # float64
+    path = tmp_path / "X.f64"
+    X64.tofile(path)
+    loader = open_memmap_matrix(path, X64.shape, "float64", block_size=5,
+                                col_lo=2, col_hi=14)
+    assert np.dtype(loader.dtype) == np.float64    # host dtype untouched
+    op = BlockedOp(loader)
+    assert op.dtype == jnp.float32                 # canonicalized once
+    B = jnp.asarray(rng.standard_normal((12, 3)).astype(np.float32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        out = op.matmat(B)
+        mu = op.col_mean()
+    assert out.dtype == jnp.float32 and mu.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), X64[:, 2:14] @
+                               np.asarray(B), rtol=1e-4, atol=1e-4)
 
 
 def test_zipf_tokens_distribution():

@@ -1,6 +1,5 @@
 """End-to-end driver tests: train with checkpoint/restart, serve with
 continuous batching.  Run in-process (single CPU device)."""
-import numpy as np
 import pytest
 
 from repro.ckpt import latest_step

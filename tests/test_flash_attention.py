@@ -81,7 +81,11 @@ def test_trainable_grads_match_ref(rng):
         return jnp.sum(flash_attention_ref(q, k, v) ** 2)
 
     orig = fa.flash_attention
-    fa.flash_attention = lambda *a, **kw: orig(*a, interpret=True, **kw)
+
+    def interp_fa(*a, **kw):
+        return orig(*a, interpret=True, **kw)
+
+    fa.flash_attention = interp_fa
     try:
         g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
     finally:

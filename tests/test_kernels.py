@@ -4,7 +4,6 @@ The kernel is TPU-targeted; ``interpret=True`` executes the kernel body
 in Python on CPU, which is how correctness is validated here (shape /
 dtype / transpose sweeps, non-128-aligned edges included).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

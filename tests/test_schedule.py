@@ -22,7 +22,7 @@ from jax.experimental import sparse as jsparse
 from repro.core import (PCA, BlockedOp, DecayingShift, DynamicShift,
                         FixedShift, SparseOp, as_schedule, get_engine, rsvd,
                         srsvd, svd_jit)
-from repro.core.schedule import FIXED, ShiftSchedule, resolve_shift
+from repro.core.schedule import FIXED, resolve_shift
 
 
 def _data(rng, m=60, n=300):
@@ -287,8 +287,8 @@ def test_compress_power_refinement_reduces_error(rng):
         return float(np.linalg.norm(np.asarray(gh["w"][0]) - base)
                      / np.linalg.norm(base))
 
-    mk = lambda **kw: CompressConfig(rank=6, min_dim=32, min_numel=1024,
-                                     **kw)
+    def mk(**kw):
+        return CompressConfig(rank=6, min_dim=32, min_numel=1024, **kw)
     e0 = run(mk())
     e2 = run(mk(power_q=2))
     e2d = run(mk(power_q=2, schedule=DynamicShift()))
@@ -310,7 +310,8 @@ def test_compress_comm_bytes_counts_power_iterations():
 # ---------------------------------------------------------------------------
 
 def test_schedule_bench_smoke_runs():
-    import sys, os
+    import os
+    import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import schedule_bench
     rows = []

@@ -51,7 +51,6 @@ def test_bf16_inputs(rng):
 
 
 def test_rejects_misaligned():
-    import jax
     rng = np.random.default_rng(0)
     args = _inputs(rng, 1, 100, 16, 4)
     with pytest.raises(ValueError):

@@ -11,9 +11,9 @@ import numpy as np
 import pytest
 from jax.experimental import sparse as jsparse
 
-from repro.core import (CallableOp, SparseOp, as_linop, expected_error_bound,
+from repro.core import (CallableOp, SparseOp, expected_error_bound,
                         rsvd, srsvd, svd_jit)
-from repro.core.ref import rsvd_ref, srsvd_ref
+from repro.core.ref import srsvd_ref
 
 
 def _data(rng, m=50, n=160, offset=3.0):

@@ -4,7 +4,6 @@ meshes lower through."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ShapeCfg, get_config, input_specs, SHAPES
 from repro.launch.steps import make_step
