@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import PCA, BlockedOp, ShardedBlockedOp
-from repro.data.pipeline import open_memmap_matrix
+from repro.data.pipeline import open_memmap_matrix, prefetch
 
 
 def main():
@@ -50,8 +50,12 @@ def main():
               "-> device working set "
               f"{(m * block + m * 2 * k) * 4 / 1e6:.1f} MB")
 
-        loader = open_memmap_matrix(path, (m, n), "float32",
-                                    block_size=block)
+        # prefetch(depth=2): a background thread reads block t+1 while
+        # the device is busy with block t's dot — same bytes, same
+        # factors, the disk and the device are never both idle
+        # (DESIGN.md §11).  Host memory cost: depth+1 blocks resident.
+        loader = prefetch(open_memmap_matrix(path, (m, n), "float32",
+                                             block_size=block), depth=2)
         key = jax.random.PRNGKey(0)
         pca_stream = PCA(k=k, q=1).fit(BlockedOp(loader), key=key)
         print("streamed  S[:5]: "
@@ -79,7 +83,8 @@ def main():
         mesh = jax.make_mesh((1, hosts), ("model", "data"),
                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
         sharded = ShardedBlockedOp.from_memmap(
-            path, (m, n), "float32", num_shards=hosts, block_size=block)
+            path, (m, n), "float32", num_shards=hosts, block_size=block,
+            prefetch_depth=2)   # each host overlaps its own reads
         pca_dist = PCA(k=k, q=1).fit(sharded, key=key, mesh=mesh,
                                      streamed=True)
         print(f"host-sharded ({hosts} hosts) S[:5]: "

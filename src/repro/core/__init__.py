@@ -18,7 +18,8 @@ from repro.core.contact import (ContactEngine, available_backends,
                                 default_backend, get_engine,
                                 register_backend)
 from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
-                              LinOp, ShardedBlockedOp, SparseOp, as_linop)
+                              LinOp, RowShardedBlockedOp,
+                              ShardedBlockedOp, SparseOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
@@ -31,7 +32,7 @@ from repro.core.distributed import (dist_col_mean, dist_pca_fit,
 
 __all__ = [
     "BlockedOp", "CallableOp", "ChainedOp", "DenseOp", "LinOp",
-    "ShardedBlockedOp", "SparseOp",
+    "RowShardedBlockedOp", "ShardedBlockedOp", "SparseOp",
     "as_linop", "ContactEngine", "available_backends", "default_backend",
     "get_engine", "register_backend", "qr_rank1_update", "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",

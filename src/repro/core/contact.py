@@ -314,6 +314,57 @@ class ContactEngine:
             s = s + Zt_blk.sum(axis=0)
         return G, s
 
+    # -- row-sharded (per-row-range) contact points --------------------
+    #    The m >> n transpose of the contacts above (DESIGN.md §11):
+    #    the input is a row-block source covering one host's row range
+    #    (range-local i0).  The sharding roles swap — matmat outputs
+    #    are rows the range *owns* (hosts concatenate), rmatmat outputs
+    #    are partials (hosts sum / psum).
+
+    def row_sharded_shifted_matmat(self, source, B, mu_loc):
+        """Owned rows ``(X_loc - mu_loc 1^T) @ B`` for one row range.
+
+        ``B`` is the full (n, K) right factor (replicated in the
+        distributed path — n is small in this regime); ``mu_loc`` is
+        this range's slice of the shifting vector, or None for the
+        unshifted product.  Each per-block product routes through the
+        backend primitive with the block's own mu rows as the rank-1
+        ``u`` — the fused pallas_tpu / xla / interpret kernels apply
+        per block, no call-site changes.
+        """
+        w = None if mu_loc is None else B.sum(axis=0)
+        parts = []
+        for i0, blk in source.iter_blocks():
+            blk = jnp.asarray(blk)
+            if mu_loc is None:
+                parts.append(blk @ B)
+            else:
+                parts.append(self.matmul_rank1(
+                    blk, B, mu_loc[i0:i0 + blk.shape[0]], w))
+        if not parts:
+            dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+            return jnp.zeros((int(source.shape[0]), B.shape[1]), dt)
+        return jnp.concatenate(parts, axis=0)
+
+    def row_sharded_rmatmat(self, source, B_loc):
+        """Local partial ``X_loc^T @ B_loc`` for one row range.
+
+        ``B_loc`` is the (m_loc, K) row slice of the left factor this
+        range owns.  Global ``X^T B`` = sum of partials over ranges (a
+        psum in the distributed path).  The shift's K-vector
+        ``mu_loc^T B_loc`` needs no disk contact, so the caller
+        computes it and rides it on the same collective — exactly like
+        the resident-shard body (DESIGN.md §5, §11).
+        """
+        n = int(source.shape[1])
+        acc = jnp.zeros((n, B_loc.shape[1]),
+                        jnp.promote_types(canonical_dtype(source.dtype),
+                                          B_loc.dtype))
+        for i0, blk in source.iter_blocks():
+            blk = jnp.asarray(blk)
+            acc = acc + blk.T @ B_loc[i0:i0 + blk.shape[0]]
+        return acc
+
     def col_mean(self, op):
         return op.col_mean()
 

@@ -39,7 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import contact
-from repro.core.linop import ShardedBlockedOp
+from repro.core.linop import RowShardedBlockedOp, ShardedBlockedOp
 from repro.core.schedule import ShiftSchedule, as_schedule
 from repro.core.srsvd import SVDResult
 
@@ -243,8 +243,8 @@ def _qr_replicated(A):
     return Q1 @ Q2, R
 
 
-def _col_axis_size(mesh: Mesh, col_axis) -> int:
-    axes = col_axis if isinstance(col_axis, (tuple, list)) else (col_axis,)
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
     size = 1
     for a in axes:
         if a not in mesh.shape:
@@ -272,20 +272,44 @@ def _streamed_sample(Xp, vp, mu, *, mesh, col_axis, shifted):
         out_specs=P(None, None), check_vma=False)(Xp, vp, mu)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "col_axis"))
-def _streamed_tsqr_cols(Zt, *, mesh, col_axis):
-    """TSQR of the col-sharded (n, K) iterate — the same collective the
-    resident-shard body runs (local QR -> all_gather R -> replicated QR
-    -> recombine)."""
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
+def _streamed_tsqr(A, *, mesh, axis):
+    """TSQR of a sharded tall factor over ``axis`` — the same collective
+    the resident-shard body runs (local QR -> all_gather R -> replicated
+    QR -> recombine).  The column-sharded path runs it on the (n, K)
+    iterate over the col axis; the row-sharded path on the (m, K)
+    iterate over the row axis (DESIGN.md §11)."""
 
-    def body(Zt_loc):
-        return tsqr(Zt_loc, col_axis)
+    def body(A_loc):
+        return tsqr(A_loc, axis)
 
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(col_axis, None),),
-        out_specs=(P(col_axis, None), P(None, None)),
-        check_vma=False)(Zt)
+        in_specs=(P(axis, None),),
+        out_specs=(P(axis, None), P(None, None)),
+        check_vma=False)(A)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "row_axis", "shifted"))
+def _streamed_rows_rmatmat_combine(Ap, bp, *, mesh, row_axis, shifted):
+    """psum the per-host (n, K) rmatmat partials of the row-sharded path
+    and fold the rank-1 shift: ``Zt = sum_p X_p^T Q_p - 1 (sum_p mu_p^T
+    Q_p)^T``.  The K-vector ``b`` rides the same collective as the main
+    partial; the output is replicated (n is small in this regime)."""
+
+    def body(Ap_loc, bp_loc):
+        A = lax.psum(Ap_loc[0], row_axis)
+        if shifted:
+            b = lax.psum(bp_loc[0], row_axis)
+            A = contact.rank1_correct(A, jnp.ones((A.shape[0],), A.dtype),
+                                      b)
+        return A
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, None, None), P(row_axis, None)),
+        out_specs=P(None, None), check_vma=False)(Ap, bp)
 
 
 @functools.partial(jax.jit,
@@ -339,18 +363,23 @@ def _put(x, mesh, spec):
 def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                         *, mesh: Mesh, key: jax.Array,
                         shift: ShiftSchedule | None = None,
-                        col_axis="data",
+                        col_axis="data", row_axis="model",
+                        shard_axis: str = "cols",
                         engine: contact.ContactEngine | None = None
                         ) -> SVDResult:
     """Distributed S-RSVD of ``X - mu 1^T`` where X never fully loads:
-    host ``p`` streams its own column range from disk, block by block.
+    host ``p`` streams its own column (or row) range from disk, block by
+    block.
 
     op: a :class:`repro.core.linop.ShardedBlockedOp` whose shard count
       equals the ``col_axis`` mesh size and whose column ranges are
       equal-width (the shard_map divisibility rule, same as the dense
-      path's).  Each per-block contact routes through the engine's
-      sharded contact points, so the pallas_tpu / xla / interpret
-      backends apply here with no call-site changes.
+      path's) — or, with ``shard_axis="rows"``, a
+      :class:`repro.core.linop.RowShardedBlockedOp` with equal-height
+      row ranges mapped one-per-device onto ``row_axis`` (the m >> n
+      regime, DESIGN.md §11).  Each per-block contact routes through
+      the engine's sharded contact points, so the pallas_tpu / xla /
+      interpret backends apply here with no call-site changes.
     mu: (m,) shifting vector (host or device array), or None.
     shift: power-iteration schedule; scalar profiles scale ``mu`` before
       it enters the per-block rank-1 corrections, spectral schedules
@@ -358,16 +387,32 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
       per iteration is unchanged from the resident-shard body.
 
     Factors come back laid out like ``dist_srsvd``'s: U (m, k) and S
-    replicated, Vt (k, n) sharded over ``col_axis``.  Same key => same
-    factors as the dense path up to blocked-accumulation fp noise (the
-    streamed-vs-dense parity check in ``tests/distributed_worker.py``).
+    replicated, Vt (k, n) sharded over ``col_axis`` (``shard_axis=
+    "cols"``); with ``shard_axis="rows"`` U is sharded over ``row_axis``
+    and Vt replicated.  Same key => same factors as the dense path up
+    to blocked-accumulation fp noise (the streamed-vs-dense parity
+    checks in ``tests/distributed_worker.py``).
     """
+    if shard_axis == "rows":
+        if not isinstance(op, RowShardedBlockedOp):
+            raise TypeError(
+                'dist_srsvd_streamed(shard_axis="rows") needs a '
+                "RowShardedBlockedOp (per-host row-range block "
+                f"sources), got {type(op).__name__}")
+        return _dist_srsvd_streamed_rows(
+            op, mu, k, K, q, mesh=mesh, key=key, shift=shift,
+            row_axis=row_axis, engine=engine)
+    if shard_axis != "cols":
+        raise ValueError(
+            f"shard_axis must be 'cols' or 'rows', got {shard_axis!r}")
     if not isinstance(op, ShardedBlockedOp):
         raise TypeError(
             "dist_srsvd_streamed needs a ShardedBlockedOp (per-host "
-            f"column-range block sources), got {type(op).__name__}")
+            f"column-range block sources), got {type(op).__name__}; "
+            'pass shard_axis="rows" with a RowShardedBlockedOp for '
+            "row-range sharding")
     m, n = op.shape
-    P_ = _col_axis_size(mesh, col_axis)
+    P_ = _mesh_axis_size(mesh, col_axis)
     if op.num_shards != P_:
         raise ValueError(
             f"operator has {op.num_shards} column shards but the mesh "
@@ -428,9 +473,9 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
             Zt = jnp.concatenate(
                 [eng.sharded_shifted_rmatmat(op.shards[p], Q, mu_t)
                  for p in range(P_)], axis=0)
-            Qp, _ = _streamed_tsqr_cols(
+            Qp, _ = _streamed_tsqr(
                 _put(Zt, mesh, P(col_axis, None)), mesh=mesh,
-                col_axis=col_axis)
+                axis=col_axis)
             Zp, sp = partial_sum_contact(
                 lambda p: (eng.sharded_matmat(
                     op.shards[p], Qp[starts[p]:starts[p + 1]]),
@@ -452,19 +497,137 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
     return SVDResult(U[:, :k], S[:k], Vt[:k, :])
 
 
+def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
+                              mesh: Mesh, key: jax.Array,
+                              shift: ShiftSchedule | None,
+                              row_axis="model",
+                              engine: contact.ContactEngine | None = None
+                              ) -> SVDResult:
+    """The row-sharded collective schedule (DESIGN.md §11): host ``p``
+    owns one *row* range of the on-disk matrix, so the §10 roles swap —
+    matmat contacts produce rows the host owns (partials concatenate,
+    no collective on the product itself) and rmatmat contacts produce
+    (n, K) partials that ride the psum together with the shift's
+    K-vector.  The iterate Q is genuinely row-sharded (m is the big
+    dimension here), so the basis QR is a real TSQR over ``row_axis`` —
+    the very collective the resident-shard body runs — while the small
+    (n, K) factors stay replicated and their QR degenerates to
+    ``_qr_replicated``.  The rank-1 shift correction and the DynamicShift
+    alpha update are unchanged from §10.
+    """
+    m, n = op.shape
+    P_ = _mesh_axis_size(mesh, row_axis)
+    if op.num_shards != P_:
+        raise ValueError(
+            f"operator has {op.num_shards} row shards but the mesh "
+            f"{row_axis!r} axis has {P_} devices — one host range per "
+            "device")
+    heights = {int(s.shape[0]) for s in op.shards}
+    if len(heights) != 1:
+        raise ValueError(
+            "shard_map needs equal-height row ranges, got heights "
+            f"{sorted(int(s.shape[0]) for s in op.shards)}; use "
+            "RowBlockLoader.split on a divisible m")
+
+    dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = jnp.result_type(dt, jnp.float32)
+    K = 2 * k if K is None else K
+    sched = as_schedule(shift)
+    eng = engine if engine is not None else contact.get_engine()
+    shifted = mu is not None
+    mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
+    starts = op.row_starts
+
+    def owned_rows(fn):
+        """Concatenate the per-host owned row blocks of a matmat
+        contact and lay them out over ``row_axis`` — the transpose of
+        the column path's partial-sum stacking: no psum ever happens on
+        these, the range boundary IS the shard boundary."""
+        return _put(jnp.concatenate([fn(p) for p in range(P_)], axis=0),
+                    mesh, P(row_axis, None))
+
+    def rmatmat_partials(B_sharded, mu_vec):
+        """Per-host (n, K) partials + the K-vector that rides the psum
+        (``mu_p^T B_p`` — no disk contact, DESIGN.md §11)."""
+        parts, vecs = [], []
+        for p in range(P_):
+            B_loc = B_sharded[starts[p]:starts[p + 1]]
+            parts.append(eng.row_sharded_rmatmat(op.shards[p], B_loc))
+            vecs.append(mu_vec[starts[p]:starts[p + 1]] @ B_loc
+                        if mu_vec is not None
+                        else jnp.zeros((B_loc.shape[1],), dt))
+        return (_put(jnp.stack(parts), mesh, P(row_axis, None, None)),
+                _put(jnp.stack(vecs), mesh, P(row_axis, None)))
+
+    # line 2: same global draw as the dense path (key parity); omega is
+    # (n, K) and replicated — n is the small dimension here.
+    omega = jax.random.normal(key, (n, K), dtype=dt)
+
+    # lines 3-7: the sample's rows are owned per host (no psum on the
+    # product); the only collective is the basis TSQR over the row axis.
+    X1 = owned_rows(lambda p: eng.row_sharded_shifted_matmat(
+        op.shards[p], omega,
+        mu[starts[p]:starts[p + 1]] if shifted else None))
+    Q, _ = _streamed_tsqr(X1, mesh=mesh, axis=row_axis)
+
+    # lines 8-11: rmatmat partials ride the psum, matmat rows are owned.
+    state = sched.init(dt)
+    for t in range(q):
+        mu_t = (jnp.asarray(sched.shift_at(mu, t), dt) if shifted
+                else None)
+        Zt = _streamed_rows_rmatmat_combine(
+            *rmatmat_partials(Q, mu_t), mesh=mesh, row_axis=row_axis,
+            shifted=shifted)                      # (n, K) replicated
+        if sched.spectral:
+            # dashSVD Gram body: the combine sits between the two Gram
+            # sides, so a row-sharded iteration takes two disk passes
+            # (rmatmat + matmat) — there is no single-pass slab trick
+            # here (DESIGN.md §11).
+            W = owned_rows(lambda p: eng.row_sharded_shifted_matmat(
+                op.shards[p], Zt,
+                mu_t[starts[p]:starts[p + 1]] if shifted else None))
+            W = W - sched.alpha(state) * Q
+            Q, R = _streamed_tsqr(W, mesh=mesh, axis=row_axis)
+        else:
+            Qp, _ = _qr_replicated(Zt)            # (n, K) replicated
+            Z = owned_rows(lambda p: eng.row_sharded_shifted_matmat(
+                op.shards[p], Qp,
+                mu_t[starts[p]:starts[p + 1]] if shifted else None))
+            Q, R = _streamed_tsqr(Z, mesh=mesh, axis=row_axis)
+        state = sched.update(state, R)
+
+    # line 12: Y^T = Xbar^T Q — one more psum'd rmatmat contact; the
+    # replicated small SVD consumes it transposed, so bind Y^T directly
+    # (bit-identical to the dense path's trivial-col-axis TSQR
+    # composition).
+    Yt = _streamed_rows_rmatmat_combine(
+        *rmatmat_partials(Q, mu if shifted else None), mesh=mesh,
+        row_axis=row_axis, shifted=shifted)       # (n, K) replicated
+    Qv, R = _qr_replicated(Yt)                    # line 13
+    U1, S, Wt = jnp.linalg.svd(R.T, full_matrices=False)
+    Vt = Wt @ Qv.T
+    U = Q @ U1                                    # line 14, row-sharded
+    return SVDResult(U[:, :k], S[:k], Vt[:k, :])
+
+
 def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,
                           key: jax.Array, q: int = 0,
                           shift: ShiftSchedule | None = None,
-                          col_axis="data", center: bool = True,
+                          col_axis="data", row_axis="model",
+                          shard_axis: str = "cols", center: bool = True,
                           engine: contact.ContactEngine | None = None):
     """Streamed distributed PCA: the column mean comes from one extra
-    disk pass over each host's range (a per-host (m,) partial — the
-    streamed analogue of ``dist_col_mean``'s single psum), then the
-    factorization streams the same ranges.  Returns ``(SVDResult, mu)``.
+    disk pass over each host's range (a per-host partial — the streamed
+    analogue of ``dist_col_mean``'s single psum), then the factorization
+    streams the same ranges.  ``shard_axis="rows"`` takes the m >> n
+    row-range layout (DESIGN.md §11).  Returns ``(SVDResult, mu)``.
     """
     mu = op.col_mean() if center else None
     res = dist_srsvd_streamed(op, mu, k, K, q, mesh=mesh, key=key,
                               shift=shift, col_axis=col_axis,
+                              row_axis=row_axis, shard_axis=shard_axis,
                               engine=engine)
     m = op.shape[0]
-    return res, (mu if mu is not None else jnp.zeros((m,), op.dtype))
+    return res, (mu if mu is not None
+                 else jnp.zeros((m,), res.S.dtype))

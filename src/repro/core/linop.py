@@ -32,6 +32,18 @@ Out-of-core operators (DESIGN.md §4):
     O(m·block + m·K + n·K/P).  Feeds ``dist_srsvd_streamed`` (the
     multi-host path); also a plain ``LinOp``, so the single-device
     algorithms accept it unchanged.
+
+``RowShardedBlockedOp``
+    the m >> n transpose of the above (DESIGN.md §11) — shard ``p``
+    owns one *row* range as a row-block source
+    (:class:`repro.data.pipeline.RowBlockLoader`), so matmat partials
+    are owned rows that concatenate and rmatmat partials sum.  Feeds
+    ``dist_srsvd_streamed(shard_axis="rows")``; also a plain ``LinOp``.
+
+Block sources declare which axis their blocks cover via a
+``block_axis`` attribute (1 = columns, the default for legacy sources;
+0 = rows); the operators validate it so a row source can never be
+silently consumed as a column source.
 """
 from __future__ import annotations
 
@@ -190,9 +202,21 @@ class BlockedOp(LinOp):
     device-resident.  This is the out-of-core regime of Halko et al.
     (2011) §6.  Not jit-traceable (the block loop runs in Python);
     each per-block product is an ordinary XLA dot.
+
+    Wrap the source with :func:`repro.data.pipeline.prefetch` (or pass
+    ``prefetch_depth`` to :meth:`from_array`) to overlap each block's
+    disk read with the previous block's dot (DESIGN.md §11).
     """
 
     source: Any
+
+    def __post_init__(self):
+        if getattr(self.source, "block_axis", 1) != 1:
+            raise TypeError(
+                "BlockedOp needs a column-block source (block_axis=1); "
+                f"got {type(self.source).__name__} with block_axis="
+                f"{getattr(self.source, 'block_axis', 1)} — wrap row "
+                "sources in RowShardedBlockedOp instead")
 
     @property
     def shape(self):
@@ -227,11 +251,17 @@ class BlockedOp(LinOp):
             [blk.T @ B for _, blk in self._blocks()], axis=0)
 
     def col_mean(self):
+        # Returned in the float accumulator dtype, NOT cast back to the
+        # operator dtype: an integer block source (e.g. int32 counts on
+        # disk) must produce a float mean, like the dense path's
+        # jnp.mean — the integer-operator promotion rule of srsvd.
         m, n = self.shape
         acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        if n == 0:
+            return acc          # mean over zero columns: zero partials
         for _, blk in self._blocks():
             acc = acc + blk.sum(axis=1)
-        return (acc / n).astype(self.dtype)
+        return acc / n
 
     def fro_norm2(self):
         acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
@@ -240,10 +270,13 @@ class BlockedOp(LinOp):
         return acc
 
     @classmethod
-    def from_array(cls, X, block_size: int) -> "BlockedOp":
-        """Convenience: wrap an in-host-memory array (numpy / memmap)."""
-        from repro.data.pipeline import ColumnBlockLoader
-        return cls(ColumnBlockLoader(X, block_size))
+    def from_array(cls, X, block_size: int, *,
+                   prefetch_depth: int = 0) -> "BlockedOp":
+        """Convenience: wrap an in-host-memory array (numpy / memmap).
+        ``prefetch_depth > 0`` overlaps block reads with compute."""
+        from repro.data.pipeline import ColumnBlockLoader, prefetch
+        return cls(prefetch(ColumnBlockLoader(X, block_size),
+                            prefetch_depth))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +310,12 @@ class ShardedBlockedOp(LinOp):
             if int(s.shape[0]) != m:
                 raise ValueError(
                     f"shard row counts disagree: {s.shape[0]} != {m}")
+            if getattr(s, "block_axis", 1) != 1:
+                raise TypeError(
+                    "ShardedBlockedOp shards must be column-block "
+                    f"sources (block_axis=1); {type(s).__name__} has "
+                    f"block_axis={getattr(s, 'block_axis', 1)} — use "
+                    "RowShardedBlockedOp for row-range shards")
 
     @property
     def num_shards(self) -> int:
@@ -331,12 +370,17 @@ class ShardedBlockedOp(LinOp):
         return jnp.concatenate(parts, axis=0)
 
     def col_mean(self):
+        # Float accumulator dtype, never cast back to an integer
+        # operator dtype (same rule as BlockedOp.col_mean); an all-empty
+        # operator (n == 0) yields zero partials, not a 0/0.
         m, n = self.shape
         acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        if n == 0:
+            return acc
         for _, op in self._shard_ops():
             if op.shape[1]:
                 acc = acc + op.col_mean() * op.shape[1]
-        return (acc / n).astype(self.dtype)
+        return acc / n
 
     def fro_norm2(self):
         acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
@@ -346,21 +390,156 @@ class ShardedBlockedOp(LinOp):
         return acc
 
     @classmethod
-    def from_array(cls, X, num_shards: int,
-                   block_size: int) -> "ShardedBlockedOp":
+    def from_array(cls, X, num_shards: int, block_size: int, *,
+                   prefetch_depth: int = 0) -> "ShardedBlockedOp":
         """Even column split of a host array into ``num_shards`` ranges."""
-        from repro.data.pipeline import ColumnBlockLoader
-        return cls(ColumnBlockLoader(X, block_size).split(num_shards))
+        from repro.data.pipeline import ColumnBlockLoader, prefetch
+        return cls(tuple(
+            prefetch(s, prefetch_depth)
+            for s in ColumnBlockLoader(X, block_size).split(num_shards)))
 
     @classmethod
     def from_memmap(cls, path, shape, dtype="float32", *,
-                    num_shards: int,
-                    block_size: int = 1024) -> "ShardedBlockedOp":
+                    num_shards: int, block_size: int = 1024,
+                    prefetch_depth: int = 0) -> "ShardedBlockedOp":
         """Every shard opens the same on-disk matrix, restricted to its
-        own column range — the multi-host shared-filesystem layout."""
-        from repro.data.pipeline import open_memmap_matrix
-        return cls(open_memmap_matrix(
-            path, shape, dtype, block_size=block_size).split(num_shards))
+        own column range — the multi-host shared-filesystem layout.
+        ``prefetch_depth > 0`` gives each shard its own read-ahead
+        thread while it is being iterated."""
+        from repro.data.pipeline import open_memmap_matrix, prefetch
+        return cls(tuple(
+            prefetch(s, prefetch_depth)
+            for s in open_memmap_matrix(
+                path, shape, dtype,
+                block_size=block_size).split(num_shards)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RowShardedBlockedOp(LinOp):
+    """Host-sharded out-of-core operator for the m >> n regime: shard
+    ``p`` owns the global *row* range ``[row_starts[p],
+    row_starts[p+1])`` as its own row-block source (DESIGN.md §11).
+
+    Each element of ``shards`` is a row-block source (``shape``/
+    ``dtype`` + range-local ``iter_blocks()`` with ``block_axis == 0``,
+    e.g. :class:`repro.data.pipeline.RowBlockLoader`).  The sharding
+    roles are the transpose of :class:`ShardedBlockedOp`'s: ``matmat``
+    outputs are *owned* row ranges that concatenate (no sum), while
+    ``rmatmat`` outputs are partial sums — which is exactly the
+    collective swap ``dist_srsvd_streamed(shard_axis="rows")`` runs on
+    the mesh.  As a plain ``LinOp`` it is accepted by the single-device
+    algorithms unchanged (the parity tests lean on that).
+    """
+
+    shards: tuple[Any, ...]
+
+    def __post_init__(self):
+        if not self.shards:
+            raise ValueError("RowShardedBlockedOp needs at least one shard")
+        n = int(self.shards[0].shape[1])
+        for s in self.shards:
+            if int(s.shape[1]) != n:
+                raise ValueError(
+                    f"shard column counts disagree: {s.shape[1]} != {n}")
+            if getattr(s, "block_axis", 1) != 0:
+                raise TypeError(
+                    "RowShardedBlockedOp shards must be row-block "
+                    f"sources (block_axis=0); {type(s).__name__} has "
+                    f"block_axis={getattr(s, 'block_axis', 1)} — use "
+                    "ShardedBlockedOp for column-range shards")
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def row_starts(self) -> tuple[int, ...]:
+        """Global row offsets: shard p covers
+        [row_starts[p], row_starts[p+1])."""
+        starts, lo = [0], 0
+        for s in self.shards:
+            lo += int(s.shape[0])
+            starts.append(lo)
+        return tuple(starts)
+
+    @property
+    def shape(self):
+        n = int(self.shards[0].shape[1])
+        return (self.row_starts[-1], n)
+
+    @property
+    def dtype(self):
+        from repro.core.contact import canonical_dtype
+        dt = canonical_dtype(self.shards[0].dtype)
+        for s in self.shards[1:]:
+            dt = jnp.promote_types(dt, canonical_dtype(s.dtype))
+        return dt
+
+    def _shard_blocks(self, src):
+        for i0, blk in src.iter_blocks():
+            yield int(i0), jnp.asarray(blk)
+
+    def matmat(self, B):
+        # owned rows: concatenate per-block products over every shard.
+        parts = [blk @ B
+                 for src in self.shards if src.shape[0]
+                 for _, blk in self._shard_blocks(src)]
+        if not parts:
+            return jnp.zeros((0, B.shape[1]),
+                             jnp.promote_types(self.dtype, B.dtype))
+        return jnp.concatenate(parts, axis=0)
+
+    def rmatmat(self, B):
+        # partial sums: each shard touches only its own rows of B.
+        _, n = self.shape
+        acc = jnp.zeros((n, B.shape[1]),
+                        jnp.promote_types(self.dtype, B.dtype))
+        for lo, src in zip(self.row_starts, self.shards):
+            for i0, blk in self._shard_blocks(src):
+                acc = acc + blk.T @ B[lo + i0:lo + i0 + blk.shape[0]]
+        return acc
+
+    def col_mean(self):
+        # owned rows again: each (block, n) slab yields its own row
+        # means directly; float accumulator dtype, n == 0 guarded.
+        m, n = self.shape
+        dt = jnp.promote_types(self.dtype, jnp.float32)
+        if n == 0 or m == 0:
+            return jnp.zeros((m,), dt)
+        parts = [jnp.asarray(blk.sum(axis=1), dt) / n
+                 for src in self.shards if src.shape[0]
+                 for _, blk in self._shard_blocks(src)]
+        return jnp.concatenate(parts, axis=0)
+
+    def fro_norm2(self):
+        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        for src in self.shards:
+            for _, blk in self._shard_blocks(src):
+                acc = acc + jnp.sum(jnp.square(blk))
+        return acc
+
+    @classmethod
+    def from_array(cls, X, num_shards: int, block_size: int, *,
+                   prefetch_depth: int = 0) -> "RowShardedBlockedOp":
+        """Even row split of a host array into ``num_shards`` ranges."""
+        from repro.data.pipeline import RowBlockLoader, prefetch
+        return cls(tuple(
+            prefetch(s, prefetch_depth)
+            for s in RowBlockLoader(X, block_size).split(num_shards)))
+
+    @classmethod
+    def from_memmap(cls, path, shape, dtype="float32", *,
+                    num_shards: int, block_size: int = 1024,
+                    prefetch_depth: int = 0) -> "RowShardedBlockedOp":
+        """Every shard opens the same on-disk matrix, restricted to its
+        own row range — for a C-order file each row block is one
+        contiguous extent."""
+        from repro.data.pipeline import open_memmap_matrix, prefetch
+        return cls(tuple(
+            prefetch(s, prefetch_depth)
+            for s in open_memmap_matrix(
+                path, shape, dtype, block_size=block_size,
+                axis="rows").split(num_shards)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -437,7 +616,10 @@ class ChainedOp(LinOp):
             return jnp.sum((L.T @ L) * (Rt.T @ Rt))
         probe_n = m <= n                           # probe the smaller side
         d = m if probe_n else n
-        acc = jnp.zeros((), jnp.float32)
+        # accumulate in the promoted chain dtype (like the split path
+        # above): a float64 chain under x64 must not round-trip through
+        # float32 here.
+        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
         for j0 in range(0, d, chunk):
             cols = jnp.arange(j0, min(j0 + chunk, d))
             E = jax.nn.one_hot(cols, d, dtype=self.dtype).T    # (d, c)

@@ -63,20 +63,40 @@ class PCA:
         """Fit on X.  ``streamed=True`` routes through the host-sharded
         distributed path (``dist_srsvd_streamed``): X must be a
         :class:`repro.core.linop.ShardedBlockedOp` (per-host column
-        ranges of an on-disk matrix) and ``mesh`` is required — each
-        host streams its own range, the full matrix never loads
-        (DESIGN.md §10).
+        ranges of an on-disk matrix) or a
+        :class:`repro.core.linop.RowShardedBlockedOp` (per-host row
+        ranges — the m >> n layout, DESIGN.md §11), and ``mesh`` is
+        required — each host streams its own range, the full matrix
+        never loads (DESIGN.md §10).
         """
         if streamed:
             if mesh is None:
                 raise ValueError(
                     "PCA.fit(streamed=True) needs a mesh — the streamed "
-                    "path shards column ranges over its col axis")
+                    "path shards host ranges over a mesh axis")
+            from repro.core.linop import (RowShardedBlockedOp,
+                                          ShardedBlockedOp)
+            if not isinstance(X, (ShardedBlockedOp, RowShardedBlockedOp)):
+                # Catch this up front with an actionable message — the
+                # streamed path needs per-host block sources, and a
+                # plain array / DenseOp / BlockedOp would otherwise die
+                # deep inside dist_pca_fit_streamed with an opaque
+                # AttributeError.
+                raise ValueError(
+                    "PCA.fit(streamed=True) needs a ShardedBlockedOp "
+                    "(per-host column ranges) or RowShardedBlockedOp "
+                    "(per-host row ranges) so each host can stream its "
+                    f"own range from disk; got {type(X).__name__}. "
+                    "Build one with ShardedBlockedOp.from_memmap(...) / "
+                    ".from_array(...), or drop streamed=True for the "
+                    "in-memory paths")
+            shard_axis = ("rows" if isinstance(X, RowShardedBlockedOp)
+                          else "cols")
             from repro.core.distributed import dist_pca_fit_streamed
             res, mu = dist_pca_fit_streamed(
                 X, self.k, self.K, mesh=mesh, key=key, q=self.q,
                 shift=self.shift, center=self.center,
-                engine=self._engine)
+                shard_axis=shard_axis, engine=self._engine)
             self.components_ = res.U.T
             self.singular_values_ = res.S
             self.mean_ = mu

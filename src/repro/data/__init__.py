@@ -1,4 +1,8 @@
-from repro.data.pipeline import DataPipeline
+from repro.data.pipeline import (ColumnBlockLoader, DataPipeline,
+                                 PrefetchingBlockSource, RowBlockLoader,
+                                 open_memmap_matrix, prefetch)
 from repro.data.cooccurrence import zipf_cooccurrence, zipf_tokens
 
-__all__ = ["DataPipeline", "zipf_cooccurrence", "zipf_tokens"]
+__all__ = ["ColumnBlockLoader", "DataPipeline", "PrefetchingBlockSource",
+           "RowBlockLoader", "open_memmap_matrix", "prefetch",
+           "zipf_cooccurrence", "zipf_tokens"]

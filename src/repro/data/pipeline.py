@@ -12,12 +12,17 @@ addressable shards.
 
 This module also owns the out-of-core block sources that feed
 :class:`repro.core.linop.BlockedOp` (DESIGN.md §4): a column-block
-loader over any host array (numpy, memmap) and a memmap opener for
-matrices that live on disk.
+loader over any host array (numpy, memmap), its row-block sibling for
+the m >> n regime (DESIGN.md §11), a memmap opener for matrices that
+live on disk, and :func:`prefetch` — a background-thread reader that
+overlaps the next disk read with the consumer's compute.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as _queue
+import threading
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +59,10 @@ class ColumnBlockLoader:
     block_size: int
     col_lo: int = 0
     col_hi: int | None = None
+
+    #: block-source protocol marker: blocks cover axis 1 (columns).
+    #: (plain class attribute, not a dataclass field)
+    block_axis = 1
 
     def __post_init__(self):
         if self.block_size <= 0:
@@ -109,19 +118,243 @@ class ColumnBlockLoader:
         return tuple(out)
 
 
+@dataclasses.dataclass(frozen=True)
+class RowBlockLoader:
+    """Row-block source over a host-resident array — the m >> n sibling
+    of :class:`ColumnBlockLoader` (DESIGN.md §11).
+
+    Yields ``(i0, X[lo+i0 : lo+i0+block_size, :])`` covering the rows of
+    the loader's range in order; each block spans the *full* column
+    width, so one slab is O(block·n) host/device bytes — the right
+    shape when the matrix is tall and thin.  ``i0`` is range-local, so a
+    loader over a host's row range ``[row_lo, row_hi)`` presents an
+    ``(row_hi - row_lo, n)`` matrix; that slicing is what the
+    row-sharded streaming path (:class:`repro.core.linop.
+    RowShardedBlockedOp`, ``dist_srsvd_streamed(shard_axis="rows")``)
+    builds on.  For a C-order on-disk matrix a row block is one
+    contiguous file extent — the friendliest possible read pattern.
+    """
+
+    X: "np.ndarray"
+    block_size: int
+    row_lo: int = 0
+    row_hi: int | None = None
+
+    #: block-source protocol marker: blocks cover axis 0 (rows).
+    block_axis = 0
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be > 0, got {self.block_size}")
+        if getattr(self.X, "ndim", None) != 2:
+            raise ValueError("RowBlockLoader needs a 2-D array")
+        m = self.X.shape[0]
+        hi = m if self.row_hi is None else self.row_hi
+        object.__setattr__(self, "row_hi", hi)
+        if not (0 <= self.row_lo <= hi <= m):
+            raise ValueError(
+                f"need 0 <= row_lo <= row_hi <= m={m}, got "
+                f"row_lo={self.row_lo} row_hi={hi}")
+
+    @property
+    def shape(self):
+        return (self.row_hi - self.row_lo, self.X.shape[1])
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def num_blocks(self) -> int:
+        return -(-(self.row_hi - self.row_lo) // self.block_size)
+
+    def iter_blocks(self):
+        height = self.row_hi - self.row_lo
+        for i0 in range(0, height, self.block_size):
+            lo = self.row_lo + i0
+            hi = self.row_lo + min(i0 + self.block_size, height)
+            yield i0, np.ascontiguousarray(self.X[lo:hi, :])
+
+    def split(self, num_shards: int) -> tuple["RowBlockLoader", ...]:
+        """Even row-range split into ``num_shards`` sub-loaders — the
+        canonical way to build a :class:`repro.core.linop.
+        RowShardedBlockedOp` from one on-disk matrix.  The first
+        ``height % num_shards`` shards get one extra row."""
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be > 0, got {num_shards}")
+        height = self.row_hi - self.row_lo
+        base, extra = divmod(height, num_shards)
+        out, lo = [], self.row_lo
+        for p in range(num_shards):
+            h = base + (1 if p < extra else 0)
+            out.append(dataclasses.replace(self, row_lo=lo, row_hi=lo + h))
+            lo += h
+        return tuple(out)
+
+
+class _ReaderFailure:
+    """Envelope for an exception raised on the prefetch reader thread —
+    re-raised on the consumer side, never silently dropped."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+#: end-of-stream marker on the prefetch queue.
+_DONE = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchingBlockSource:
+    """Wraps any block source so reads overlap the consumer's compute.
+
+    Each ``iter_blocks()`` call starts a daemon reader thread that pulls
+    blocks from the wrapped source into a bounded queue of ``depth``
+    entries; the consumer pops from the queue, so while it is busy with
+    block ``t`` (an XLA dot in the streaming operators) the thread is
+    already reading block ``t+1`` from disk.  Memory bound:
+    ``depth + 1`` blocks live at once (queue + the one the consumer
+    holds) — O((depth+1)·m·block) host bytes for a column source.
+
+    The overlap is real despite the GIL: the wrapped loaders force the
+    read via ``np.ascontiguousarray``, whose memcpy out of the memmap
+    releases the GIL, and the consumer's jax dispatch does too
+    (DESIGN.md §11).
+
+    Determinism: blocks flow through the FIFO queue in source order,
+    bytes untouched — prefetched iteration is indistinguishable from
+    synchronous iteration except in time.  A reader-thread exception is
+    forwarded and re-raised at the consumer's next block; abandoning the
+    iterator mid-stream (generator close) stops and joins the thread.
+    ``depth == 0`` is the synchronous degenerate case: iteration is
+    delegated directly, no thread, no queue.
+    """
+
+    source: Any
+    depth: int = 2
+
+    def __post_init__(self):
+        if self.depth < 0:
+            raise ValueError(f"depth must be >= 0, got {self.depth}")
+        if not hasattr(self.source, "iter_blocks"):
+            raise TypeError(
+                "prefetch needs a block source (shape/dtype + "
+                f"iter_blocks()), got {type(self.source).__name__}")
+
+    # -- block-source protocol: everything but timing delegates --------
+    @property
+    def shape(self):
+        return self.source.shape
+
+    @property
+    def dtype(self):
+        return self.source.dtype
+
+    @property
+    def block_axis(self):
+        return getattr(self.source, "block_axis", 1)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.source.num_blocks
+
+    def split(self, num_shards: int) -> tuple["PrefetchingBlockSource", ...]:
+        """Split the wrapped source; every sub-range keeps its own
+        prefetcher (one reader thread per active shard iteration)."""
+        return tuple(dataclasses.replace(self, source=s)
+                     for s in self.source.split(num_shards))
+
+    def iter_blocks(self):
+        if self.depth == 0:
+            yield from self.source.iter_blocks()
+            return
+        q: _queue.Queue = _queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+
+        def reader():
+            try:
+                for item in self.source.iter_blocks():
+                    if stop.is_set():
+                        return
+                    q.put(item)
+                    if stop.is_set():
+                        return
+                q.put(_DONE)
+            except BaseException as exc:  # noqa: BLE001 — forwarded, not
+                q.put(_ReaderFailure(exc))  # swallowed
+
+        t = threading.Thread(target=reader, daemon=True,
+                             name="prefetch-block-reader")
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _DONE:
+                    break
+                if isinstance(item, _ReaderFailure):
+                    raise item.exc
+                yield item
+        finally:
+            # Unblock a reader stuck on a full queue (early consumer
+            # exit), then reap the thread — no leak, no deadlock.
+            stop.set()
+            while t.is_alive():
+                try:
+                    q.get_nowait()
+                except _queue.Empty:
+                    pass
+                t.join(timeout=0.05)
+
+
+def prefetch(source, depth: int = 2):
+    """Wrap ``source`` so its blocks are read ``depth`` ahead on a
+    background thread (see :class:`PrefetchingBlockSource`).
+
+    ``depth=0`` returns ``source`` unchanged — the synchronous path,
+    byte-for-byte and object-for-object.
+    """
+    if depth < 0:
+        raise ValueError(f"depth must be >= 0, got {depth}")
+    if not hasattr(source, "iter_blocks"):
+        # validate at every depth, so depth=0 cannot smuggle a
+        # non-block-source through to an opaque downstream failure
+        raise TypeError(
+            "prefetch needs a block source (shape/dtype + "
+            f"iter_blocks()), got {type(source).__name__}")
+    if depth == 0:
+        return source
+    return PrefetchingBlockSource(source, depth)
+
+
 def open_memmap_matrix(path, shape: tuple[int, int], dtype="float32",
                        *, block_size: int = 1024, col_lo: int = 0,
-                       col_hi: int | None = None) -> ColumnBlockLoader:
+                       col_hi: int | None = None, axis: str = "cols",
+                       row_lo: int = 0, row_hi: int | None = None,
+                       prefetch_depth: int = 0):
     """Block loader over a raw on-disk matrix (C-order, no header).
 
     The file is opened read-only as a memmap — nothing is loaded until a
     block is iterated, so matrices far larger than RAM stream cleanly.
     ``col_lo``/``col_hi`` restrict the loader to one host's column range
     of a shared file (the multi-host streaming layout: every host opens
-    the same path, each reads only its own columns).
+    the same path, each reads only its own columns).  ``axis="rows"``
+    returns the :class:`RowBlockLoader` sibling over ``row_lo``/
+    ``row_hi`` instead — the m >> n layout, where a block is one
+    contiguous file extent.  ``prefetch_depth > 0`` wraps the loader in
+    :func:`prefetch` so reads overlap the consumer's compute.
     """
     mm = np.memmap(path, dtype=np.dtype(dtype), mode="r", shape=shape)
-    return ColumnBlockLoader(mm, block_size, col_lo=col_lo, col_hi=col_hi)
+    if axis == "cols":
+        loader = ColumnBlockLoader(mm, block_size, col_lo=col_lo,
+                                   col_hi=col_hi)
+    elif axis == "rows":
+        loader = RowBlockLoader(mm, block_size, row_lo=row_lo,
+                                row_hi=row_hi)
+    else:
+        raise ValueError(f"axis must be 'cols' or 'rows', got {axis!r}")
+    return prefetch(loader, prefetch_depth)
 
 
 @dataclasses.dataclass

@@ -47,6 +47,26 @@ def sharded_shifted_gram_matmat(source, B, mu, *,
         .sharded_shifted_gram_matmat(source, B, mu)
 
 
+def row_sharded_shifted_matmat(source, B, mu_loc, *,
+                               interpret: bool | None = None,
+                               backend: str | None = None):
+    """One row range's owned rows of ``(X_loc - mu_loc 1^T) @ B`` from a
+    row-block source — the m >> n streamed contact (DESIGN.md §11);
+    ranges concatenate, they do not sum."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .row_sharded_shifted_matmat(source, B, mu_loc)
+
+
+def row_sharded_rmatmat(source, B_loc, *,
+                        interpret: bool | None = None,
+                        backend: str | None = None):
+    """One row range's partial ``X_loc^T @ B_loc`` from a row-block
+    source; global product = sum of partials (the shift's K-vector
+    rides the same collective, computed without a disk pass)."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .row_sharded_rmatmat(source, B_loc)
+
+
 def matmul_rank1(A, B, u, w, *, transpose_a: bool = False,
                  interpret: bool | None = None,
                  backend: str | None = None):

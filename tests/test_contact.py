@@ -282,6 +282,72 @@ def test_expected_error_bound_rejects_k1():
     assert expected_error_bound(100, 2, 0, 1.0) > 1.0
 
 
+def test_blocked_col_mean_int_source_matches_dense(rng):
+    """col_mean of an integer block source must promote to float like
+    the dense path's jnp.mean — not truncate back to the int dtype
+    (int32 co-occurrence counts on disk are a first-class input)."""
+    from repro.core import ShardedBlockedOp
+    Xi = rng.integers(0, 100, size=(12, 30)).astype(np.int32)
+    dense_mean = np.asarray(jnp.mean(jnp.asarray(Xi), axis=1))
+    assert dense_mean.dtype == np.float32
+    for op in (BlockedOp.from_array(Xi, 7),
+               ShardedBlockedOp.from_array(Xi, 3, 7)):
+        mu = op.col_mean()
+        assert mu.dtype == jnp.float32, f"{type(op).__name__} truncated"
+        np.testing.assert_allclose(np.asarray(mu), dense_mean, rtol=1e-6)
+
+
+def test_blocked_pca_int_source_matches_dense(rng):
+    """Dense and blocked PCA agree on integer data end to end — the
+    col_mean truncation would have shifted the blocked factorization
+    by the whole fractional part of the mean."""
+    Xi = rng.integers(0, 50, size=(16, 40)).astype(np.int32)
+    key = jax.random.PRNGKey(0)
+    p_dense = PCA(k=4, q=1).fit(jnp.asarray(Xi), key=key)
+    p_blocked = PCA(k=4, q=1).fit(BlockedOp.from_array(Xi, 9), key=key)
+    np.testing.assert_allclose(np.asarray(p_blocked.mean_),
+                               np.asarray(p_dense.mean_), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_blocked.singular_values_),
+                               np.asarray(p_dense.singular_values_),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_chained_fro_norm2_probe_accumulates_in_chain_dtype(rng):
+    """The identity-probe path must accumulate in the promoted chain
+    dtype: a float64 chain under x64 returns float64, not a silent
+    float32 round-trip."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        A = jnp.asarray(rng.standard_normal((9, 7)))      # float64
+        B = jnp.asarray(rng.standard_normal((7, 11)))
+        op = ChainedOp((DenseOp(A), DenseOp(B)))
+        assert op.dtype == jnp.float64
+        truth = float((np.asarray(A @ B) ** 2).sum())
+        # chunk below every interface dim forces the probe path
+        out = op.fro_norm2(chunk=3)
+        assert out.dtype == jnp.float64
+        np.testing.assert_allclose(float(out), truth, rtol=1e-12)
+
+
+def test_sharded_op_all_empty_shards_finite(rng):
+    """A ShardedBlockedOp whose every shard is width 0 (n == 0) is
+    degenerate but valid: col_mean is zero partials, not a 0/0 NaN,
+    and matmat/fro_norm2 return empty-sum zeros."""
+    from repro.core import ShardedBlockedOp
+    from repro.data.pipeline import ColumnBlockLoader
+    X = rng.standard_normal((6, 10)).astype(np.float32)
+    empty = ColumnBlockLoader(X, 4, col_lo=5, col_hi=5)
+    op = ShardedBlockedOp((empty, empty))
+    assert op.shape == (6, 0)
+    mu = np.asarray(op.col_mean())
+    assert mu.shape == (6,) and np.isfinite(mu).all() and (mu == 0).all()
+    out = np.asarray(op.matmat(jnp.zeros((0, 3), jnp.float32)))
+    assert out.shape == (6, 3) and (out == 0).all()
+    assert float(op.fro_norm2()) == 0.0
+    # single-operator form of the same guard
+    assert np.isfinite(np.asarray(BlockedOp(empty).col_mean())).all()
+
+
 def test_blocked_float64_source_no_truncation_warning(rng):
     """A float64 host source (numpy default / memmap) must stream
     silently: the operator canonicalizes the dtype once instead of

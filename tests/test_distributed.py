@@ -76,6 +76,14 @@ def test_streamed_matches_dense_distributed():
     _run("streamed_matches_dense")
 
 
+def test_row_streamed_matches_dense_distributed():
+    """Row-sharded out-of-core streaming (`dist_srsvd_streamed(
+    shard_axis="rows")`, per-host row ranges of an on-disk memmap,
+    awkward block size, prefetch on and off) == the dense resident-shard
+    path on a mesh whose row axis carries all 8 devices (m >> n)."""
+    _run("row_streamed_matches_dense")
+
+
 def test_tsqr_orthonormal_and_exact():
     _run("tsqr")
 

@@ -80,6 +80,25 @@ def test_transform_is_implicitly_centered(rng):
     np.testing.assert_allclose(Y, expl, atol=1e-3)
 
 
+def test_streamed_fit_rejects_non_sharded_operator(rng):
+    """PCA.fit(streamed=True) with anything but a (Row)ShardedBlockedOp
+    fails up front with an actionable ValueError — not an opaque
+    AttributeError from deep inside dist_pca_fit_streamed."""
+    from repro.core import BlockedOp, DenseOp
+    X = rng.standard_normal((8, 16)).astype(np.float32)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    for bad in (X, jnp.asarray(X), DenseOp(jnp.asarray(X)),
+                BlockedOp.from_array(X, 4)):
+        with pytest.raises(ValueError,
+                           match="ShardedBlockedOp"):
+            PCA(k=2).fit(bad, key=key, mesh=mesh, streamed=True)
+    # no mesh is still its own clear error
+    with pytest.raises(ValueError, match="mesh"):
+        PCA(k=2).fit(X, key=key, streamed=True)
+
+
 def test_unfitted_pca_raises_clear_error(rng):
     """transform/inverse_transform/mse before fit must fail with an
     actionable message, not an opaque NoneType AttributeError."""

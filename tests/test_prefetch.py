@@ -1,0 +1,211 @@
+"""Prefetched block streaming (DESIGN.md §11): determinism, fault
+propagation, the depth=0 synchronous degradation, thread cleanup — and
+the row-block loader / row-sharded operator the same section introduces.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BlockedOp, DynamicShift, RowShardedBlockedOp,
+                        ShardedBlockedOp, srsvd)
+from repro.data.pipeline import (ColumnBlockLoader, PrefetchingBlockSource,
+                                 RowBlockLoader, open_memmap_matrix,
+                                 prefetch)
+
+
+def _block_bytes(source):
+    return [(j0, blk.tobytes(), blk.shape) for j0, blk in
+            source.iter_blocks()]
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_prefetched_blocks_byte_identical_memmap(rng, tmp_path):
+    """Prefetched iteration yields exactly the synchronous blocks —
+    same order, same offsets, same bytes — from a disk-backed memmap
+    with a block size that does not divide the width."""
+    X = rng.standard_normal((16, 37)).astype(np.float32)
+    path = tmp_path / "X.f32"
+    X.tofile(path)
+    loader = open_memmap_matrix(path, X.shape, "float32", block_size=5)
+    sync = _block_bytes(loader)
+    for depth in (1, 2, 7):
+        assert _block_bytes(prefetch(loader, depth)) == sync
+
+
+def test_prefetched_factors_identical(rng, tmp_path):
+    """srsvd over a prefetched BlockedOp returns bit-identical factors
+    to the synchronous path — fixed and dynamic shifts, memmap source,
+    non-dividing block size (same blocks => same accumulation order)."""
+    X = (rng.standard_normal((24, 50)) + 1.0).astype(np.float32)
+    path = tmp_path / "X.f32"
+    X.tofile(path)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(0)
+    loader = open_memmap_matrix(path, X.shape, "float32", block_size=7)
+    for sched in (None, DynamicShift()):
+        base = srsvd(BlockedOp(loader), mu, 6, q=2, key=key, shift=sched)
+        pf = srsvd(BlockedOp(prefetch(loader, 2)), mu, 6, q=2, key=key,
+                   shift=sched)
+        for a, b in zip((base.U, base.S, base.Vt), (pf.U, pf.S, pf.Vt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefetch_depth_zero_is_synchronous(rng):
+    """depth=0 degrades to the synchronous path: prefetch() returns the
+    source itself, and a zero-depth PrefetchingBlockSource iterates
+    without spawning a reader thread."""
+    X = rng.standard_normal((4, 12)).astype(np.float32)
+    loader = ColumnBlockLoader(X, 5)
+    assert prefetch(loader, 0) is loader
+    src = PrefetchingBlockSource(loader, 0)
+    before = threading.active_count()
+    assert _block_bytes(src) == _block_bytes(loader)
+    assert threading.active_count() == before
+
+
+def test_prefetch_delegates_protocol_and_split(rng):
+    X = rng.standard_normal((6, 20)).astype(np.float32)
+    src = prefetch(ColumnBlockLoader(X, 4, col_lo=2, col_hi=18), 3)
+    assert src.shape == (6, 16)
+    assert src.dtype == np.float32
+    assert src.num_blocks == 4
+    assert src.block_axis == 1
+    shards = src.split(3)
+    assert all(isinstance(s, PrefetchingBlockSource) and s.depth == 3
+               for s in shards)
+    assert [s.shape[1] for s in shards] == [6, 5, 5]
+    # split-then-prefetch and prefetch-then-split stream the same bytes
+    plain = ColumnBlockLoader(X, 4, col_lo=2, col_hi=18).split(3)
+    for a, b in zip(shards, plain):
+        assert _block_bytes(a) == _block_bytes(b)
+
+
+def test_prefetch_validation(rng):
+    X = rng.standard_normal((3, 6)).astype(np.float32)
+    with pytest.raises(ValueError, match="depth"):
+        prefetch(ColumnBlockLoader(X, 2), -1)
+    with pytest.raises(ValueError, match="depth"):
+        PrefetchingBlockSource(ColumnBlockLoader(X, 2), -2)
+    with pytest.raises(TypeError, match="block source"):
+        prefetch(X, 2)
+    with pytest.raises(TypeError, match="block source"):
+        prefetch(X, 0)          # depth=0 must validate too, not smuggle
+
+
+# ---------------------------------------------------------------------------
+# fault paths
+# ---------------------------------------------------------------------------
+
+class _FailingSource:
+    """Yields two good blocks, then dies — like a vanishing NFS mount."""
+
+    shape = (4, 12)
+    dtype = np.float32
+    block_axis = 1
+    num_blocks = 3
+
+    def iter_blocks(self):
+        yield 0, np.zeros((4, 4), np.float32)
+        yield 4, np.ones((4, 4), np.float32)
+        raise OSError("read failed: stale file handle")
+
+
+def test_reader_exception_propagates_not_hangs():
+    """An exception on the reader thread re-raises at the consumer's
+    next block — the stream does not hang and good blocks still arrive."""
+    src = prefetch(_FailingSource(), 2)
+    got = []
+    with pytest.raises(OSError, match="stale file handle"):
+        for j0, blk in src.iter_blocks():
+            got.append(j0)
+    assert got == [0, 4]
+
+
+def test_early_consumer_exit_reaps_reader_thread(rng):
+    """Abandoning a prefetched iteration mid-stream stops the reader:
+    no thread leak, no deadlock on the bounded queue."""
+    X = rng.standard_normal((8, 64)).astype(np.float32)
+    src = prefetch(ColumnBlockLoader(X, 2), 1)   # tiny queue: reader
+    it = src.iter_blocks()                       # will block on put
+    next(it)
+    time.sleep(0.05)                             # let the reader fill it
+    it.close()                                   # generator finally runs
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        if not any(t.name == "prefetch-block-reader"
+                   for t in threading.enumerate()):
+            break
+        time.sleep(0.02)
+    else:
+        raise AssertionError("prefetch reader thread leaked")
+
+
+# ---------------------------------------------------------------------------
+# row-block loader + row-sharded operator (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_row_loader_covers_range_and_splits(rng):
+    X = rng.standard_normal((23, 6)).astype(np.float32)
+    loader = RowBlockLoader(X, 4, row_lo=3, row_hi=20)
+    assert loader.shape == (17, 6)
+    assert loader.block_axis == 0
+    blocks = list(loader.iter_blocks())
+    assert [i0 for i0, _ in blocks] == [0, 4, 8, 12, 16]
+    np.testing.assert_array_equal(
+        np.concatenate([b for _, b in blocks], axis=0), X[3:20])
+    shards = loader.split(3)
+    assert [s.shape[0] for s in shards] == [6, 6, 5]
+    assert [(s.row_lo, s.row_hi) for s in shards] == [(3, 9), (9, 15),
+                                                      (15, 20)]
+    with pytest.raises(ValueError, match="row_lo"):
+        RowBlockLoader(X, 4, row_lo=9, row_hi=2)
+
+
+def test_row_sharded_op_matches_dense(rng, tmp_path):
+    """RowShardedBlockedOp is a plain LinOp: every contact agrees with
+    the dense matrix, from a memmap, awkward block size, prefetched."""
+    X = (rng.standard_normal((45, 12)) + 0.5).astype(np.float32)
+    path = tmp_path / "X.f32"
+    X.tofile(path)
+    op = RowShardedBlockedOp.from_memmap(path, X.shape, num_shards=4,
+                                         block_size=5, prefetch_depth=2)
+    assert op.shape == (45, 12)
+    assert op.row_starts == (0, 12, 23, 34, 45)
+    B = jnp.asarray(rng.standard_normal((12, 3)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((45, 3)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op.matmat(B)),
+                               X @ np.asarray(B), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(C)),
+                               X.T @ np.asarray(C), rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(op.col_mean()), X.mean(axis=1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(op.fro_norm2()),
+                               float((X ** 2).sum()), rtol=1e-5)
+    # full srsvd through the operator protocol
+    mu = jnp.asarray(X.mean(axis=1))
+    res = srsvd(op, mu, 5, q=1, key=jax.random.PRNGKey(2))
+    ref = srsvd(jnp.asarray(X), mu, 5, q=1, key=jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.asarray(res.S), np.asarray(ref.S),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_axis_mismatch_rejected(rng):
+    """A row source can never be consumed as a column source (and vice
+    versa) — the operators validate the block_axis protocol marker."""
+    X = rng.standard_normal((10, 8)).astype(np.float32)
+    with pytest.raises(TypeError, match="column-block source"):
+        BlockedOp(RowBlockLoader(X, 3))
+    with pytest.raises(TypeError, match="column-block"):
+        ShardedBlockedOp((RowBlockLoader(X, 3),))
+    with pytest.raises(TypeError, match="row-block"):
+        RowShardedBlockedOp((ColumnBlockLoader(X, 3),))
+    # prefetch preserves the marker
+    with pytest.raises(TypeError, match="column-block source"):
+        BlockedOp(prefetch(RowBlockLoader(X, 3), 2))
