@@ -13,6 +13,9 @@ Public API:
   ContactEngine / get_engine / register_backend   unified contact layer
   ShiftSchedule / FixedShift / DecayingShift / DynamicShift
                           power-iteration shift schedules (DESIGN.md §9)
+  StopRule / FixedIters / PVEStop / ResidualStop / ConvergenceReport
+                          convergence control: early stopping + posterior
+                          error certificates (DESIGN.md §12)
 """
 from repro.core.contact import (ContactEngine, available_backends,
                                 default_backend, get_engine,
@@ -23,6 +26,8 @@ from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
+from repro.core.stopping import (ConvergenceReport, FixedIters, PVEStop,
+                                 ResidualStop, StopRule, as_rule)
 from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
                               svd_jit)
 from repro.core.pca import PCA
@@ -40,4 +45,6 @@ __all__ = [
     "dist_srsvd_streamed", "tsqr",
     "ShiftSchedule", "FixedShift", "DecayingShift", "DynamicShift",
     "as_schedule",
+    "StopRule", "FixedIters", "PVEStop", "ResidualStop",
+    "ConvergenceReport", "as_rule",
 ]

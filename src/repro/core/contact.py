@@ -371,6 +371,24 @@ class ContactEngine:
     def fro_norm2(self, op):
         return op.fro_norm2()
 
+    def xbar_fro_norm2(self, op, mu):
+        """``||X - mu 1^T||_F^2`` without materializing the shift:
+
+            ||Xbar||_F^2 = ||X||_F^2 - 2 (X 1) . mu + n ||mu||^2
+
+        — the existing ``fro_norm2`` probe plus one K=1 ``matmat``
+        (both stream- and sparse-safe).  This is the setup probe behind
+        ``ResidualStop`` and the posterior error certificate
+        (:mod:`repro.core.stopping`), and the ``||Xbar||`` half of
+        ``PCA.mse`` — one home for the identity.
+        """
+        f = self.fro_norm2(op)
+        if mu is None:
+            return f
+        n = op.shape[1]
+        row_sum = self.matmat(op, jnp.ones((n, 1), op.dtype))[:, 0]
+        return f - 2.0 * (row_sum @ mu) + n * (mu @ mu)
+
 
 def get_engine(backend: str | None = None, *,
                interpret: bool | None = None) -> ContactEngine:

@@ -38,10 +38,11 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import contact
+from repro.core import contact, stopping as _stopping
 from repro.core.linop import RowShardedBlockedOp, ShardedBlockedOp
 from repro.core.schedule import ShiftSchedule, as_schedule
 from repro.core.srsvd import SVDResult
+from repro.core.stopping import StopRule
 
 
 def _axis_size(axis) -> int:
@@ -82,8 +83,8 @@ def _small_svd_from_cols(Y_loc: jax.Array, col_axis):
     return U1, S, Vt_loc
 
 
-def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted, sched,
-                     row_axis, col_axis):
+def _dist_srsvd_body(X_loc, mu_loc, omega_loc, fro2, *, k, K, q, shifted,
+                     sched, rule, row_axis, col_axis):
     """The full Algorithm 1, executed per-device inside shard_map."""
     m_loc, n_loc = X_loc.shape
     dt = omega_loc.dtype       # the float working dtype (operator may be int)
@@ -100,8 +101,7 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted, sched,
         X1 = contact.rank1_correct(X1, mu_loc, v)
     Q_loc, _ = tsqr(X1, row_axis)                        # basis of Xbar
 
-    state = sched.init(dt)
-    for t in range(q):                                   # lines 8-11
+    def power_iter(t, Q_loc, state):                     # lines 8-11
         # Per-iteration shift vector mu_t = c_t mu: the schedule scales
         # the *local* shard, so the K-vector correction rides the same
         # psum as the main product, exactly as the constant shift does
@@ -128,7 +128,38 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted, sched,
             if shifted:
                 Z = contact.rank1_correct(Z, mu_t, s)
             Q_loc, R = tsqr(Z, row_axis)
-        state = sched.update(state, R)
+        return Q_loc, R
+
+    state = sched.init(dt)
+    tstate = None
+    if rule is None:
+        for t in range(q):
+            Q_loc, R = power_iter(t, Q_loc, state)
+            state = sched.update(state, R)
+    else:
+        # Stop-ruled loop: the decision reads TSQR's *replicated* R, so
+        # every device computes the identical `done` flag and the
+        # while_loop condition agrees across the mesh with zero new
+        # collectives (DESIGN.md §12).  A rule that can fire early runs
+        # the loop as lax.while_loop — XLA executes only the
+        # iterations the rule allows, on every shard.
+        tstate = rule.init(dt, K, q, k, fro2)
+
+        def step(t, Q_loc, state, tstate):
+            a = sched.alpha(state) if sched.spectral else None
+            Q_loc, R = power_iter(t, Q_loc, state)
+            return Q_loc, sched.update(state, R), \
+                rule.update(tstate, R, a)
+
+        if rule.can_stop_early:
+            Q_loc, state, tstate = lax.while_loop(
+                lambda c: (c[2].t < q) & ~c[2].done,
+                lambda c: step(c[2].t, *c),
+                (Q_loc, state, tstate))
+        else:
+            Q_loc, state, tstate = lax.fori_loop(
+                0, q, lambda t, c: step(t, *c),
+                (Q_loc, state, tstate))
 
     # line 12: Y = Q^T X - (Q^T mu) 1^T,  (K, n_loc) col-sharded.
     YT, b = lax.psum((X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
@@ -138,7 +169,9 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, *, k, K, q, shifted, sched,
 
     U1, S, Vt_loc = _small_svd_from_cols(Y_loc, col_axis)  # line 13
     U_loc = Q_loc @ U1                                     # line 14
-    return U_loc[:, :k], S[:k], Vt_loc[:k, :]
+    if rule is None:
+        return U_loc[:, :k], S[:k], Vt_loc[:k, :]
+    return U_loc[:, :k], S[:k], Vt_loc[:k, :], tstate
 
 
 def dist_col_mean(X, mesh: Mesh, row_axis="model", col_axis="data"):
@@ -157,7 +190,8 @@ def dist_col_mean(X, mesh: Mesh, row_axis="model", col_axis="data"):
 def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
                mesh: Mesh, key: jax.Array,
                shift: ShiftSchedule | None = None,
-               row_axis="model", col_axis="data") -> SVDResult:
+               stop: StopRule | int | None = None,
+               row_axis="model", col_axis="data"):
     """Distributed shifted randomized SVD of ``X - mu 1^T``.
 
     X: (m, n) global array sharded P(row_axis, col_axis).
@@ -167,6 +201,12 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
       shift vectors ride the existing psums, and spectral schedules
       update their alpha from TSQR's replicated R factor — either way
       the collective count per iteration is unchanged.
+    stop: a :class:`~repro.core.stopping.StopRule` — the stop decision
+      reads TSQR's replicated R factor, so it is identical on every
+      device with zero new collectives; a rule that can fire early runs
+      the power loop as a ``lax.while_loop`` inside the shard_map body
+      (true early exit on every shard).  With a rule the return value
+      is ``(SVDResult, ConvergenceReport)``, as in ``srsvd``.
     """
     m, n = X.shape
     dt = X.dtype
@@ -178,28 +218,56 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     shifted = mu is not None
     if mu is None:
         mu = jnp.zeros((m,), dt)
+    rule = _stopping.as_rule(stop)
+    sched = as_schedule(shift)
+    _stopping.validate_rule_schedule(rule, sched, shifted)
+    qmax = q if rule is None else rule.resolve_q(q)
+    fro2 = None
+    if rule is not None and rule.needs_fro2:
+        # ||Xbar||_F^2 through the engine's probe on the sharded global
+        # array (XLA handles the sharded reductions); X is promoted to
+        # the float working dtype first so an integer operator's probe
+        # runs in float like everything else here.
+        from repro.core.linop import as_linop
+        fro2 = contact.get_engine().xbar_fro_norm2(
+            as_linop(X.astype(dt)), mu if shifted else None)
     omega = jax.random.normal(key, (n, K), dtype=dt)
 
     body = functools.partial(
-        _dist_srsvd_body, k=k, K=K, q=q, shifted=shifted,
-        sched=as_schedule(shift), row_axis=row_axis, col_axis=col_axis)
+        _dist_srsvd_body, k=k, K=K, q=qmax, shifted=shifted,
+        sched=sched, rule=rule, row_axis=row_axis, col_axis=col_axis)
 
-    U, S, Vt = shard_map(
+    fro2_in = jnp.zeros((), dt) if fro2 is None else jnp.asarray(fro2, dt)
+    out_specs = (P(row_axis, None), P(None), P(None, col_axis))
+    if rule is not None:
+        out_specs = out_specs + (P(),)       # StopState: replicated
+    outs = shard_map(
         body, mesh=mesh,
-        in_specs=(P(row_axis, col_axis), P(row_axis), P(col_axis, None)),
-        out_specs=(P(row_axis, None), P(None), P(None, col_axis)),
+        in_specs=(P(row_axis, col_axis), P(row_axis), P(col_axis, None),
+                  P()),
+        out_specs=out_specs,
         check_vma=False,
-    )(X, mu, omega)
-    return SVDResult(U, S, Vt)
+    )(X, mu, omega, fro2_in)
+    if rule is None:
+        U, S, Vt = outs
+        return SVDResult(U, S, Vt)
+    U, S, Vt, tstate = outs
+    report = _stopping.build_report(rule, tstate, S, m, qmax, fro2)
+    return SVDResult(U, S, Vt), report
 
 
 def dist_pca_fit(X, k, *, mesh, key, q: int = 0,
                  shift: ShiftSchedule | None = None,
+                 stop: StopRule | int | None = None,
                  row_axis="model", col_axis="data"):
-    """Distributed PCA: column mean + shifted factorization, one pass."""
+    """Distributed PCA: column mean + shifted factorization, one pass.
+
+    With ``stop`` the first element of the returned pair is itself the
+    ``(SVDResult, ConvergenceReport)`` pair, mirroring ``dist_srsvd``.
+    """
     mu = dist_col_mean(X, mesh, row_axis, col_axis)
     res = dist_srsvd(X, mu, k, q=q, mesh=mesh, key=key, shift=shift,
-                     row_axis=row_axis, col_axis=col_axis)
+                     stop=stop, row_axis=row_axis, col_axis=col_axis)
     return res, mu
 
 
@@ -363,10 +431,10 @@ def _put(x, mesh, spec):
 def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                         *, mesh: Mesh, key: jax.Array,
                         shift: ShiftSchedule | None = None,
+                        stop: StopRule | int | None = None,
                         col_axis="data", row_axis="model",
                         shard_axis: str = "cols",
-                        engine: contact.ContactEngine | None = None
-                        ) -> SVDResult:
+                        engine: contact.ContactEngine | None = None):
     """Distributed S-RSVD of ``X - mu 1^T`` where X never fully loads:
     host ``p`` streams its own column (or row) range from disk, block by
     block.
@@ -385,6 +453,14 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
       it enters the per-block rank-1 corrections, spectral schedules
       update alpha from the combine's replicated R — collective count
       per iteration is unchanged from the resident-shard body.
+    stop: a :class:`~repro.core.stopping.StopRule` — the per-iteration
+      combine already returns the replicated R factor to the host
+      driver, so the stop decision is a host-side O(K^3) computation
+      with zero new collectives, and a firing rule breaks the *Python*
+      block-loop driver: every skipped iteration saves a full disk
+      pass over every host's range (the biggest win of DESIGN.md §12).
+      With a rule the return value is ``(SVDResult,
+      ConvergenceReport)``.
 
     Factors come back laid out like ``dist_srsvd``'s: U (m, k) and S
     replicated, Vt (k, n) sharded over ``col_axis`` (``shard_axis=
@@ -400,7 +476,7 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                 "RowShardedBlockedOp (per-host row-range block "
                 f"sources), got {type(op).__name__}")
         return _dist_srsvd_streamed_rows(
-            op, mu, k, K, q, mesh=mesh, key=key, shift=shift,
+            op, mu, k, K, q, mesh=mesh, key=key, shift=shift, stop=stop,
             row_axis=row_axis, engine=engine)
     if shard_axis != "cols":
         raise ValueError(
@@ -435,6 +511,17 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
     mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
     mu_rep = _put(mu, mesh, P())
     starts = op.col_starts
+    rule = _stopping.as_rule(stop)
+    _stopping.validate_rule_schedule(rule, sched, shifted)
+    qmax = q if rule is None else rule.resolve_q(q)
+    tstate = None
+    # one extra pass over every host's range (the operator-level
+    # fro_norm2 probe + K=1 matmat) when the rule needs ||Xbar||_F^2;
+    # rules accept certificate=False to skip it when only PVE stopping
+    # is wanted on a disk-bound matrix.
+    fro2 = _stopping.resolve_fro2(rule, eng, op, mu if shifted else None)
+    if rule is not None:
+        tstate = rule.init(dt, K, qmax, k, fro2)
 
     # line 2: the same global draw as the dense path (key parity).
     omega = jax.random.normal(key, (n, K), dtype=dt)
@@ -455,8 +542,14 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                          shifted=shifted)
 
     # lines 8-11: per-iteration host block loops + one combine each.
+    # The combine hands the replicated R back to this host driver, so a
+    # stop rule decides *here*, between disk passes — a True decision
+    # breaks before the next pass ever touches disk.
     state = sched.init(dt)
-    for t in range(q):
+    for t in range(qmax):
+        if rule is not None and rule.can_stop_early \
+                and _stopping.concrete_done(tstate):
+            break
         mu_t = sched.shift_at(mu, t) if shifted else None
         mu_t_rep = _put(mu if mu_t is None else jnp.asarray(mu_t, dt),
                         mesh, P())
@@ -484,6 +577,9 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
         Q, R = _streamed_power_combine(
             Zp, sp, mu_t_rep, Q, alpha, mesh=mesh, col_axis=col_axis,
             shifted=shifted, spectral=bool(sched.spectral))
+        if rule is not None:
+            tstate = rule.update(tstate, R,
+                                 alpha if sched.spectral else None)
         state = sched.update(state, R)
 
     # line 12: Y = Q^T X - (Q^T mu) 1^T, rows owned per host.
@@ -494,15 +590,20 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
     U1, S, Vt = _streamed_small_svd(
         _put(Y, mesh, P(None, col_axis)), mesh=mesh, col_axis=col_axis)
     U = Q @ U1                                           # line 14
-    return SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    res = SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    if rule is None:
+        return res
+    return res, _stopping.build_report(rule, tstate, S[:k], m, qmax,
+                                       fro2)
 
 
 def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
                               mesh: Mesh, key: jax.Array,
                               shift: ShiftSchedule | None,
+                              stop: StopRule | int | None = None,
                               row_axis="model",
                               engine: contact.ContactEngine | None = None
-                              ) -> SVDResult:
+                              ):
     """The row-sharded collective schedule (DESIGN.md §11): host ``p``
     owns one *row* range of the on-disk matrix, so the §10 roles swap —
     matmat contacts produce rows the host owns (partials concatenate,
@@ -538,6 +639,13 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
     shifted = mu is not None
     mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
     starts = op.row_starts
+    rule = _stopping.as_rule(stop)
+    _stopping.validate_rule_schedule(rule, sched, shifted)
+    qmax = q if rule is None else rule.resolve_q(q)
+    tstate = None
+    fro2 = _stopping.resolve_fro2(rule, eng, op, mu if shifted else None)
+    if rule is not None:
+        tstate = rule.init(dt, K, qmax, k, fro2)
 
     def owned_rows(fn):
         """Concatenate the per-host owned row blocks of a matmat
@@ -572,8 +680,14 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
     Q, _ = _streamed_tsqr(X1, mesh=mesh, axis=row_axis)
 
     # lines 8-11: rmatmat partials ride the psum, matmat rows are owned.
+    # As in the column path, the TSQR hands its replicated R back to
+    # this host driver — a firing stop rule breaks before the next
+    # iteration's two disk passes start.
     state = sched.init(dt)
-    for t in range(q):
+    for t in range(qmax):
+        if rule is not None and rule.can_stop_early \
+                and _stopping.concrete_done(tstate):
+            break
         mu_t = (jnp.asarray(sched.shift_at(mu, t), dt) if shifted
                 else None)
         Zt = _streamed_rows_rmatmat_combine(
@@ -587,14 +701,18 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
             W = owned_rows(lambda p: eng.row_sharded_shifted_matmat(
                 op.shards[p], Zt,
                 mu_t[starts[p]:starts[p + 1]] if shifted else None))
-            W = W - sched.alpha(state) * Q
+            alpha_t = sched.alpha(state)
+            W = W - alpha_t * Q
             Q, R = _streamed_tsqr(W, mesh=mesh, axis=row_axis)
         else:
+            alpha_t = None
             Qp, _ = _qr_replicated(Zt)            # (n, K) replicated
             Z = owned_rows(lambda p: eng.row_sharded_shifted_matmat(
                 op.shards[p], Qp,
                 mu_t[starts[p]:starts[p + 1]] if shifted else None))
             Q, R = _streamed_tsqr(Z, mesh=mesh, axis=row_axis)
+        if rule is not None:
+            tstate = rule.update(tstate, R, alpha_t)
         state = sched.update(state, R)
 
     # line 12: Y^T = Xbar^T Q — one more psum'd rmatmat contact; the
@@ -608,12 +726,17 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
     U1, S, Wt = jnp.linalg.svd(R.T, full_matrices=False)
     Vt = Wt @ Qv.T
     U = Q @ U1                                    # line 14, row-sharded
-    return SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    res = SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    if rule is None:
+        return res
+    return res, _stopping.build_report(rule, tstate, S[:k], m, qmax,
+                                       fro2)
 
 
 def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,
                           key: jax.Array, q: int = 0,
                           shift: ShiftSchedule | None = None,
+                          stop: StopRule | int | None = None,
                           col_axis="data", row_axis="model",
                           shard_axis: str = "cols", center: bool = True,
                           engine: contact.ContactEngine | None = None):
@@ -621,13 +744,16 @@ def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,
     disk pass over each host's range (a per-host partial — the streamed
     analogue of ``dist_col_mean``'s single psum), then the factorization
     streams the same ranges.  ``shard_axis="rows"`` takes the m >> n
-    row-range layout (DESIGN.md §11).  Returns ``(SVDResult, mu)``.
+    row-range layout (DESIGN.md §11).  Returns ``(SVDResult, mu)`` —
+    with ``stop`` the first element is the ``(SVDResult,
+    ConvergenceReport)`` pair, as in ``dist_srsvd_streamed``.
     """
     mu = op.col_mean() if center else None
     res = dist_srsvd_streamed(op, mu, k, K, q, mesh=mesh, key=key,
-                              shift=shift, col_axis=col_axis,
+                              shift=shift, stop=stop, col_axis=col_axis,
                               row_axis=row_axis, shard_axis=shard_axis,
                               engine=engine)
     m = op.shape[0]
+    S = (res[0] if isinstance(res, tuple) else res).S
     return res, (mu if mu is not None
-                 else jnp.zeros((m,), res.S.dtype))
+                 else jnp.zeros((m,), S.dtype))

@@ -18,7 +18,12 @@ Out-of-core operators (DESIGN.md §4):
     column-block iteration over an on-host / on-disk array (numpy array,
     memmap, or any block source) — every product is accumulated
     block-wise, so peak *device* memory is O(m·block + m·K) regardless
-    of n.  Block sources live in :mod:`repro.data.pipeline`.
+    of n.  Block sources live in :mod:`repro.data.pipeline`.  Every
+    power iteration against a blocked operator costs 1-2 full passes
+    over the source, which is what makes convergence-controlled early
+    stopping (``srsvd(..., stop=PVEStop(...))``, DESIGN.md §12) the
+    biggest lever here: each iteration the rule skips is a disk pass
+    that never happens.
 
 ``ChainedOp``
     lazy operator composition ``A1 @ A2 @ ... @ Ap`` — the product

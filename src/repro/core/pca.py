@@ -20,6 +20,7 @@ from repro.core import contact
 from repro.core.linop import as_linop
 from repro.core.schedule import ShiftSchedule
 from repro.core.srsvd import SVDResult, srsvd
+from repro.core.stopping import ConvergenceReport, StopRule
 
 
 @dataclasses.dataclass
@@ -30,11 +31,18 @@ class PCA:
     the power iterations (e.g. ``PCA(k=10, q=2,
     shift=DynamicShift())`` — the Feng et al. accelerated iteration);
     the fitted factorization target is the centered matrix either way.
+    ``stop`` takes a :class:`~repro.core.stopping.StopRule` (e.g.
+    ``PCA(k=10, q=8, stop=PVEStop(1e-2))`` — ``q`` becomes the
+    iteration *ceiling* and the fit stops as soon as the monitored
+    components converge, DESIGN.md §12).
 
     Attributes after ``fit``:
       components_: (k, m) rows are principal axes (left singular vectors^T).
       mean_: (m,) column mean used as the shifting vector.
       singular_values_: (k,).
+      report_: the :class:`~repro.core.stopping.ConvergenceReport` when
+        a stop rule was attached (None otherwise).
+      n_iter_: power iterations actually run (None without a rule).
     """
 
     k: int
@@ -43,9 +51,12 @@ class PCA:
     center: bool = True
     backend: str | None = None
     shift: ShiftSchedule | None = None
+    stop: StopRule | None = None
     components_: jax.Array | None = None
     mean_: jax.Array | None = None
     singular_values_: jax.Array | None = None
+    report_: ConvergenceReport | None = None
+    n_iter_: int | None = None
 
     @property
     def _engine(self) -> contact.ContactEngine:
@@ -95,8 +106,11 @@ class PCA:
             from repro.core.distributed import dist_pca_fit_streamed
             res, mu = dist_pca_fit_streamed(
                 X, self.k, self.K, mesh=mesh, key=key, q=self.q,
-                shift=self.shift, center=self.center,
+                shift=self.shift, stop=self.stop, center=self.center,
                 shard_axis=shard_axis, engine=self._engine)
+            if self.stop is not None:
+                res, self.report_ = res
+                self.n_iter_ = int(self.report_.iters_run)
             self.components_ = res.U.T
             self.singular_values_ = res.S
             self.mean_ = mu
@@ -109,7 +123,11 @@ class PCA:
         eng = self._engine
         mu = eng.col_mean(op) if self.center else None
         res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key,
-                               shift=self.shift, engine=eng)
+                               shift=self.shift, stop=self.stop,
+                               engine=eng)
+        if self.stop is not None:
+            res, self.report_ = res
+            self.n_iter_ = int(self.report_.iters_run)
         self.components_ = res.U.T
         self.singular_values_ = res.S
         m = op.shape[0]
@@ -137,11 +155,9 @@ class PCA:
         self._check_fitted("mse")
         op = as_linop(X)
         eng = self._engine
-        m, n = op.shape
-        mu = self.mean_
-        # ||Xbar||_F^2 = ||X||_F^2 - 2 tr(X^T mu 1^T) + n ||mu||^2
-        #             = ||X||_F^2 - 2 (sum_cols X) . mu + n ||mu||^2
-        row_sum = eng.matmat(op, jnp.ones((n, 1), op.dtype))[:, 0]  # X @ 1
-        xbar2 = eng.fro_norm2(op) - 2.0 * row_sum @ mu + n * mu @ mu
+        n = op.shape[1]
+        # ||Xbar||_F^2 via the engine's shared probe (also the setup
+        # contact behind ResidualStop and the posterior certificate).
+        xbar2 = eng.xbar_fro_norm2(op, self.mean_)
         Y = self.transform(op)
         return (xbar2 - jnp.sum(Y * Y)) / n

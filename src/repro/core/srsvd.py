@@ -28,12 +28,12 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import contact, schedule as _schedule
+from repro.core import contact, schedule as _schedule, stopping as _stopping
 from repro.core.linop import as_linop
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import ShiftSchedule
+from repro.core.stopping import StopRule
 
 
 @jax.tree_util.register_pytree_node_class
@@ -68,8 +68,9 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
           key: jax.Array, use_qr_update: bool = True,
           shift_mode: ShiftMode = "exact",
           shift: ShiftSchedule | jax.Array | None = None,
+          stop: StopRule | int | None = None,
           loop: PowerLoop = "python",
-          engine: contact.ContactEngine | None = None) -> SVDResult:
+          engine: contact.ContactEngine | None = None):
     """Rank-k SVD of ``X - mu 1^T`` (Algorithm 1).
 
     Args:
@@ -91,10 +92,25 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         sample (lines 3-7) and final projection (line 12) always use the
         target ``mu``; the schedule governs lines 8-11 only, so every
         schedule factorizes the same matrix (DESIGN.md §9).
+      stop: a :class:`~repro.core.stopping.StopRule` governing *when
+        the power loop ends* (``FixedIters`` — exactly ``q``
+        iterations, bit-for-bit the unruled path; ``PVEStop`` — the
+        dashSVD per-vector-error early stop; ``ResidualStop`` — the
+        certified Frobenius-residual stop), or an int (shorthand for
+        ``FixedIters``), or None.  With a rule attached the return
+        value becomes the pair ``(SVDResult,``
+        :class:`~repro.core.stopping.ConvergenceReport```)`` —
+        iterations actually run, per-component PVE trace, posterior
+        error certificate (DESIGN.md §12).  ``q`` stays the iteration
+        ceiling unless the rule carries its own.
       loop: "python" unrolls the power loop (required for the streaming
-        ``BlockedOp``, whose block iteration is host-side); "fori" runs
-        it as a ``lax.fori_loop`` with ``(Q, schedule state)`` carry —
-        the jit-friendly form ``svd_jit`` uses.
+        ``BlockedOp``, whose block iteration is host-side; a firing
+        stop rule breaks the host loop, saving the skipped iterations'
+        disk passes); "fori" runs it as a ``lax.fori_loop`` with
+        ``(Q, schedule state)`` carry — the jit-friendly form
+        ``svd_jit`` uses — or, when a rule can fire early, a
+        ``lax.while_loop`` whose carry also holds the stop state, so
+        jit gets true early exit.
       engine: contact engine to route every product through (default:
         the hardware-resolved backend — Pallas on TPU, XLA elsewhere).
     """
@@ -127,39 +143,48 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     else:
         Q = Q1
 
-    # lines 8-11 under the shift schedule: line 9 / Eq. 7 then line 10 /
-    # Eq. 8 (or the spectral Gram body), every product through the
-    # engine's fused rank-1-epilogue contact points (Pallas on TPU).
+    # lines 8-11 under the shift schedule and the stop rule: line 9 /
+    # Eq. 7 then line 10 / Eq. 8 (or the spectral Gram body), every
+    # product through the engine's fused rank-1-epilogue contact points
+    # (Pallas on TPU).  One driver serves both loop spellings, so the
+    # (schedule state, stop state) init order is identical whichever
+    # loop runs — including the q = 0 degenerate case (pinned by
+    # tests/test_stopping.py parity tests).
+    rule = _stopping.as_rule(stop)
+    _stopping.validate_rule_schedule(rule, sched, mu is not None)
+    qmax = q if rule is None else rule.resolve_q(q)
     state = sched.init(dt)
-    if loop == "fori":
-        Q, state = lax.fori_loop(
-            0, q,
-            lambda t, c: _schedule.power_step(sched, eng, op, c[0], mu,
-                                              t, c[1]),
-            (Q, state))
-    elif loop == "python":
-        for t in range(q):
-            Q, state = _schedule.power_step(sched, eng, op, Q, mu, t, state)
-    else:
-        raise ValueError(f"loop must be 'python' or 'fori', got {loop!r}")
+    tstate = None
+    # ||Xbar||_F^2 for the residual criterion / the posterior
+    # certificate: the fro_norm2 probe + one K=1 matmat, once.
+    fro2 = _stopping.resolve_fro2(rule, eng, op, mu)
+    if rule is not None:
+        tstate = rule.init(dt, K, qmax, k, fro2)
+    Q, state, tstate = _stopping.run_power_loop(
+        sched, rule, eng, op, Q, mu, qmax, state, tstate, loop=loop)
 
     # line 12 / Eq. 10:  Y = Q^T X - (Q^T mu) 1^T  ==  ((Xbar)^T Q)^T.
     Y = eng.shifted_rmatmat(op, Q, mu).T                    # (K, n)
 
     U1, S, Vt = jnp.linalg.svd(Y, full_matrices=False)      # line 13
     U = Q @ U1                                              # line 14
-    return SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    res = SVDResult(U[:, :k], S[:k], Vt[:k, :])
+    if rule is None:
+        return res
+    return res, _stopping.build_report(rule, tstate, S[:k], m, qmax, fro2)
 
 
 def rsvd(X, k: int, K: int | None = None, q: int = 0, *,
          key: jax.Array, shift: ShiftSchedule | None = None,
-         engine: contact.ContactEngine | None = None) -> SVDResult:
+         stop: StopRule | int | None = None,
+         engine: contact.ContactEngine | None = None):
     """Halko et al. (2011) randomized SVD — the paper's baseline.
 
-    ``shift=DynamicShift()`` turns it into dashSVD proper (Feng et al.):
-    the spectral schedule needs no shifting vector.
+    ``shift=DynamicShift()`` turns it into dashSVD proper (Feng et al.),
+    and ``stop=PVEStop(...)`` adds its PVE early-stopping criterion.
     """
-    return srsvd(X, None, k, K, q, key=key, shift=shift, engine=engine)
+    return srsvd(X, None, k, K, q, key=key, shift=shift, stop=stop,
+                 engine=engine)
 
 
 def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
@@ -174,26 +199,39 @@ def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "K", "q", "shifted", "shift"))
-def _jit_svd_dense(X, mu, k, K, q, shifted, shift, key):
-    # the power loop is a lax.fori_loop with (Q, schedule state) carry,
-    # so q never unrolls into the HLO and dynamic schedules trace once.
+                   static_argnames=("k", "K", "q", "shifted", "shift",
+                                    "stop"))
+def _jit_svd_dense(X, mu, k, K, q, shifted, shift, stop, key):
+    # the power loop is a lax.fori_loop with (Q, schedule state, stop
+    # state) carry, so q never unrolls into the HLO and dynamic
+    # schedules trace once; a stop rule that can fire early swaps the
+    # fori_loop for a lax.while_loop — true early exit under jit.
     return srsvd(X, mu if shifted else None, k, K, q, key=key,
-                 shift=shift, loop="fori")
+                 shift=shift, stop=stop, loop="fori")
 
 
 def svd_jit(X, mu, k, K=None, q=0, *, key,
-            shift: ShiftSchedule | None = None):
+            shift: ShiftSchedule | None = None,
+            stop: StopRule | None = None):
     """jit'd convenience entry point for dense arrays.
 
-    ``shift`` takes a schedule (frozen/hashable — it rides the jit cache
-    key as a static argument); its per-iteration state is carried
-    through the ``lax.fori_loop`` power loop.
+    ``shift`` takes a schedule and ``stop`` a stop rule (both
+    frozen/hashable — they ride the jit cache key as static arguments);
+    their per-iteration state is carried through the power loop, which
+    is a ``lax.fori_loop`` — or a ``lax.while_loop`` when the rule can
+    fire early, so XLA executes only the iterations the rule allows.
+    With ``stop`` the return value is ``(SVDResult,
+    ConvergenceReport)``, like ``srsvd``'s.
     """
     K = 2 * k if K is None else K
     m = X.shape[0]
     if shift is not None and not isinstance(shift, ShiftSchedule):
         raise TypeError("svd_jit takes the shifting vector as mu and a "
                         "ShiftSchedule as shift")
+    if stop is not None and not isinstance(stop, StopRule):
+        raise TypeError("svd_jit takes stop as a StopRule (hashable "
+                        "static argument); ints/vectors are not "
+                        "accepted here")
     mu_arr = jnp.zeros((m,), X.dtype) if mu is None else mu
-    return _jit_svd_dense(X, mu_arr, k, K, q, mu is not None, shift, key)
+    return _jit_svd_dense(X, mu_arr, k, K, q, mu is not None, shift,
+                          stop, key)

@@ -67,6 +67,18 @@ def row_sharded_rmatmat(source, B_loc, *,
         .row_sharded_rmatmat(source, B_loc)
 
 
+def xbar_fro_norm2(X, mu, *, interpret: bool | None = None,
+                   backend: str | None = None):
+    """``||X - mu 1^T||_F^2`` without materializing the shift — the
+    existing ``fro_norm2`` probe plus one K=1 matmat.  The setup
+    contact behind ``ResidualStop`` and the posterior error
+    certificate (:mod:`repro.core.stopping`, DESIGN.md §12); accepts
+    anything ``as_linop`` does (dense, sparse, blocked/streamed)."""
+    from repro.core.linop import as_linop
+    return contact.get_engine(backend, interpret=interpret) \
+        .xbar_fro_norm2(as_linop(X), mu)
+
+
 def matmul_rank1(A, B, u, w, *, transpose_a: bool = False,
                  interpret: bool | None = None,
                  backend: str | None = None):

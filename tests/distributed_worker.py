@@ -211,6 +211,73 @@ def check_row_streamed_matches_dense():
                                     onp.asarray(p_d.mean_), atol=1e-6)
 
 
+def check_early_stop_matches_dense():
+    """PVEStop through the streamed out-of-core paths: on an 8-fake-
+    device mesh, both the column-sharded and the row-sharded
+    `dist_srsvd_streamed` stop at the SAME iteration as the single-host
+    `srsvd` loop (the decision reads the replicated TSQR R, zero new
+    collectives), and the early-stopped factors match the dense
+    `dist_srsvd` run under the same rule to 1e-5 — fixed and dynamic
+    shifts.  Every iteration the rule skips is a disk pass each host
+    never makes (DESIGN.md §12)."""
+    import tempfile
+    from repro.core import (DynamicShift, PVEStop, RowShardedBlockedOp,
+                            ShardedBlockedOp, dist_col_mean, dist_srsvd,
+                            dist_srsvd_streamed, srsvd)
+    rule = PVEStop(1e-2)
+    qmax = 6
+    rng = onp.random.default_rng(17)
+    with tempfile.TemporaryDirectory() as tmp:
+        for shard_axis, mesh_shape, (m, n) in (
+                ("cols", (1, 8), (64, 256)), ("rows", (8, 1), (256, 64))):
+            mesh = _mesh(mesh_shape, ("model", "data"))
+            # rank ~k + noise: fast-decay spectrum, so the rule fires
+            # strictly before the ceiling and the early exit is real.
+            X = (rng.standard_normal((m, 8)) @ rng.standard_normal((8, n))
+                 + 2.0 + 0.05 * rng.standard_normal((m, n))) \
+                .astype(onp.float32)
+            Xs = jax.device_put(jnp.asarray(X),
+                                NamedSharding(mesh, P("model", "data")))
+            mu = dist_col_mean(Xs, mesh, "model", "data")
+            path = os.path.join(tmp, f"X_{shard_axis}.f32")
+            X.tofile(path)
+            cls = (ShardedBlockedOp if shard_axis == "cols"
+                   else RowShardedBlockedOp)
+            # block 9 does not divide the 32-wide host ranges: the final
+            # partial block is exercised on every contact.
+            op = cls.from_memmap(path, (m, n), "float32", num_shards=8,
+                                 block_size=9)
+            for sched in (None, DynamicShift()):
+                key = jax.random.PRNGKey(3)
+                stream, srep = dist_srsvd_streamed(
+                    op, onp.asarray(mu), 8, q=qmax, mesh=mesh, key=key,
+                    shift=sched, stop=rule, shard_axis=shard_axis)
+                _, hrep = srsvd(jnp.asarray(X), jnp.asarray(X.mean(1)), 8,
+                                q=qmax, key=key, shift=sched, stop=rule)
+                dense, drep = dist_srsvd(Xs, mu, 8, q=qmax, mesh=mesh,
+                                         key=key, shift=sched, stop=rule)
+                it_s, it_h, it_d = (int(srep.iters_run),
+                                    int(hrep.iters_run),
+                                    int(drep.iters_run))
+                assert it_s == it_h == it_d, \
+                    f"{shard_axis}: streamed {it_s} / single {it_h} / " \
+                    f"dense {it_d} iterations disagree"
+                assert 2 <= it_s < qmax, \
+                    f"{shard_axis}: rule never fired (ran {it_s})"
+                rd = onp.asarray(dense.reconstruct())
+                rs = onp.asarray(stream.reconstruct())
+                rel = onp.linalg.norm(rs - rd) / onp.linalg.norm(rd)
+                assert rel <= 1e-5, \
+                    f"{shard_axis}: reconstruction rel gap {rel:.2e}"
+                onp.testing.assert_allclose(onp.asarray(stream.S),
+                                            onp.asarray(dense.S),
+                                            rtol=1e-5, atol=5e-5)
+                # the certificates agree across all three paths too
+                onp.testing.assert_allclose(
+                    float(srep.posterior_rel_err),
+                    float(drep.posterior_rel_err), rtol=1e-4, atol=1e-5)
+
+
 def check_tsqr():
     from repro.core import tsqr
     from jax import shard_map

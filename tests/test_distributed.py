@@ -84,6 +84,14 @@ def test_row_streamed_matches_dense_distributed():
     _run("row_streamed_matches_dense")
 
 
+def test_early_stop_matches_dense_distributed():
+    """PVEStop through the streamed col- and row-sharded paths stops at
+    the same iteration as the single-host loop (decision from the
+    replicated TSQR R, zero new collectives) and matches the dense
+    `dist_srsvd` factors under the same rule to 1e-5 (DESIGN.md §12)."""
+    _run("early_stop_matches_dense")
+
+
 def test_tsqr_orthonormal_and_exact():
     _run("tsqr")
 

@@ -1,0 +1,475 @@
+"""Convergence-control subsystem (DESIGN.md §12).
+
+Claims under test:
+  1. ``FixedIters`` is *exactly* today's fixed-q path — same factors,
+     bit for bit — on the xla / interpret backends and through the
+     blocked/streaming operator (the monitor reads R, never touches
+     factor math);
+  2. ``PVEStop`` stops strictly early on easy (fast-decay) spectra at
+     equal final error, and runs to the ceiling on hard ones — and on
+     the streaming operator every skipped iteration skips its disk
+     passes (pinned with a counting block source);
+  3. ``ResidualStop``'s criterion and the report's posterior
+     certificate are real bounds (the certificate ≥ the true error);
+  4. the stop state rides the jit carry: ``svd_jit(stop=...)`` runs a
+     ``lax.while_loop`` and stops at the same iteration as the eager
+     loop;
+  5. ``loop="python"`` and ``loop="fori"`` initialize schedule + stop
+     state identically — q = 0 included — pinned bit-for-bit (the
+     PR's q=0 unification fix).
+
+The seed-grid property tests at the bottom share their implementation
+with the hypothesis suite (tests/stopping_properties.py), so the CI
+fuzzing and this always-runnable grid can never drift apart.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import stopping_properties as props
+from repro.core import (PCA, BlockedOp, ConvergenceReport, DecayingShift,
+                        DynamicShift, FixedIters, PVEStop, ResidualStop,
+                        SparseOp, as_rule, get_engine, srsvd, svd_jit)
+from repro.core.stopping import (StopRule, build_report, posterior_rel_err,
+                                 sigma_estimates)
+
+
+def _easy(rng, m=50, n=160, r=5):
+    """Fast-decay spectrum: rank r + tiny noise — PVE converges fast."""
+    return (rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+            + 2.0 + 0.01 * rng.standard_normal((m, n))).astype(np.float32)
+
+
+def _hard(rng, m=50, n=160):
+    """Flat uniform spectrum — PVE keeps churning."""
+    return rng.random((m, n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# protocol / resolution
+# ---------------------------------------------------------------------------
+
+def test_as_rule_normalization():
+    r = PVEStop(1e-2)
+    assert as_rule(r) is r
+    assert as_rule(None) is None
+    assert as_rule(3) == FixedIters(3)
+    with pytest.raises(TypeError, match="StopRule"):
+        as_rule("pve")
+    with pytest.raises(TypeError, match="StopRule"):
+        as_rule(True)
+
+
+def test_rules_are_hashable_static_args():
+    assert hash(PVEStop(1e-2)) == hash(PVEStop(1e-2))
+    assert PVEStop(1e-2) != PVEStop(1e-3)
+    assert FixedIters() == FixedIters()
+    assert ResidualStop(0.1) == ResidualStop(0.1)
+
+
+def test_rule_validates_tol():
+    with pytest.raises(ValueError, match="tol"):
+        PVEStop(-1.0)
+    with pytest.raises(ValueError, match="tol"):
+        ResidualStop(-0.5)
+
+
+def test_resolve_q_precedence():
+    assert FixedIters().resolve_q(4) == 4
+    assert FixedIters(2).resolve_q(4) == 2
+    assert PVEStop(1e-2).resolve_q(4) == 4
+    assert PVEStop(1e-2, qmax=7).resolve_q(4) == 7
+
+
+def test_base_rule_never_fires():
+    rule = FixedIters()
+    assert not rule.can_stop_early
+    state = rule.init(jnp.float32, 4, 3, 2)
+    R = jnp.asarray(np.diag([3.0, 2.0, 1.0, 0.5]).astype(np.float32))
+    for _ in range(3):
+        state = rule.update(state, R)
+    assert not bool(state.done) and int(state.t) == 3
+
+
+def test_sigma_estimates_alpha_back_correction():
+    """Under the spectral Gram body svdvals(R) estimate sigma^2 - alpha;
+    the back-correction must restore sigma before any PVE ratio."""
+    R = jnp.asarray(np.diag([9.0, 4.0, 1.0]).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(sigma_estimates(R)), [9, 4, 1])
+    np.testing.assert_allclose(
+        np.asarray(sigma_estimates(R, alpha=jnp.asarray(7.0))),
+        [4.0, np.sqrt(11.0), np.sqrt(8.0)], rtol=1e-6)
+    # clipped at zero (defensive: alpha is nonnegative in DynamicShift,
+    # but a hand-rolled schedule may hand a negative one)
+    np.testing.assert_allclose(
+        np.asarray(sigma_estimates(R, alpha=jnp.asarray(-2.0))),
+        [np.sqrt(7.0), np.sqrt(2.0), 0.0], rtol=1e-6)
+
+
+def test_residual_stop_requires_fro2():
+    with pytest.raises(ValueError, match="fro_norm2"):
+        ResidualStop(0.1).init(jnp.float32, 4, 3, 2, fro2=None)
+
+
+# ---------------------------------------------------------------------------
+# FixedIters: bit-for-bit today's path + report
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "interpret", "blocked"])
+def test_fixed_iters_bitwise_parity(rng, backend):
+    props.check_fixed_iters_bitwise(40, 130, 6, 2, seed=0, backend=backend)
+
+
+def test_int_stop_shorthand(rng):
+    X = jnp.asarray(_hard(rng))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(1)
+    a, rep = srsvd(X, mu, 6, q=9, key=key, stop=2)
+    b = srsvd(X, mu, 6, q=2, key=key)
+    np.testing.assert_array_equal(np.asarray(a.U), np.asarray(b.U))
+    assert int(rep.iters_run) == 2 and rep.qmax == 2
+
+
+def test_report_shape_and_certificate(rng):
+    X = jnp.asarray(_hard(rng))
+    mu = X.mean(axis=1)
+    res, rep = srsvd(X, mu, 6, q=3, key=jax.random.PRNGKey(2),
+                     stop=FixedIters())
+    assert isinstance(rep, ConvergenceReport)
+    assert rep.pve_trace.shape == (3, 12)
+    assert np.isfinite(np.asarray(rep.pve_trace)).all()
+    s = np.asarray(rep.sigma_estimates)
+    assert (np.diff(s) <= 1e-6).all()          # descending estimates
+    # certificate matches the exact identity on the returned factors
+    Xb = np.asarray(X) - np.asarray(mu)[:, None]
+    true = np.linalg.norm(Xb - np.asarray(res.reconstruct())) \
+        / np.linalg.norm(Xb)
+    assert float(rep.posterior_rel_err) >= true
+    assert float(rep.posterior_rel_err) <= true + 1e-3
+    assert float(rep.xbar_fro2) == pytest.approx(
+        np.linalg.norm(Xb) ** 2, rel=1e-4)
+
+
+def test_certificate_opt_out(rng):
+    X = jnp.asarray(_hard(rng))
+    _, rep = srsvd(X, X.mean(axis=1), 6, q=2, key=jax.random.PRNGKey(3),
+                   stop=PVEStop(1e-3, certificate=False))
+    assert rep.posterior_rel_err is None and rep.xbar_fro2 is None
+
+
+# ---------------------------------------------------------------------------
+# PVEStop / ResidualStop: early stopping behaviour
+# ---------------------------------------------------------------------------
+
+def test_pve_stops_early_on_easy_spectrum(rng):
+    X = jnp.asarray(_easy(rng))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(4)
+    res, rep = srsvd(X, mu, 6, q=8, key=key, stop=PVEStop(1e-2))
+    assert int(rep.iters_run) < 8 and bool(rep.stopped_early)
+    # equal final error vs the blind fixed-q run
+    fixed = srsvd(X, mu, 6, q=8, key=key)
+    Xb = np.asarray(X) - np.asarray(mu)[:, None]
+    e_pve = np.linalg.norm(Xb - np.asarray(res.reconstruct()))
+    e_fix = np.linalg.norm(Xb - np.asarray(fixed.reconstruct()))
+    assert e_pve <= e_fix * (1.0 + 1e-3)
+    # trace rows after the stop never ran: NaN padding
+    tr = np.asarray(rep.pve_trace)
+    assert np.isfinite(tr[: int(rep.iters_run)]).all()
+    assert np.isnan(tr[int(rep.iters_run):]).all()
+
+
+def test_pve_runs_to_ceiling_on_hard_spectrum(rng):
+    X = jnp.asarray(_hard(rng))
+    _, rep = srsvd(X, X.mean(axis=1), 6, q=4, key=jax.random.PRNGKey(5),
+                   stop=PVEStop(1e-4))
+    assert int(rep.iters_run) == 4 and not bool(rep.stopped_early)
+
+
+def test_pve_never_fires_before_two_estimates(rng):
+    """prev_s starts at zero, so the first PVE row contains s1/s1 = 1 —
+    even tol=inf-ish rules need two looks at the head component."""
+    X = jnp.asarray(_easy(rng))
+    _, rep = srsvd(X, X.mean(axis=1), 6, q=8, key=jax.random.PRNGKey(6),
+                   stop=PVEStop(0.5))
+    assert int(rep.iters_run) >= 2
+
+
+def test_pve_spectral_schedule_stops_like_fixed_shift(rng):
+    """The alpha back-correction keeps the dynamic schedule's PVE on
+    the sigma scale: stopping under DynamicShift happens within one
+    iteration of the fixed-shift stop on the same matrix."""
+    X = jnp.asarray(_easy(rng))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(7)
+    _, r_fix = srsvd(X, mu, 6, q=8, key=key, stop=PVEStop(1e-2))
+    _, r_dyn = srsvd(X, mu, 6, q=8, key=key, stop=PVEStop(1e-2),
+                     shift=DynamicShift())
+    assert abs(int(r_fix.iters_run) - int(r_dyn.iters_run)) <= 1
+
+
+def test_residual_stop_certifies(rng):
+    """ResidualStop(tol) only stops once the posterior certificate is
+    actually below tol (the criterion is a bound, not a guess)."""
+    X = jnp.asarray(_easy(rng))
+    mu = X.mean(axis=1)
+    res, rep = srsvd(X, mu, 6, q=8, key=jax.random.PRNGKey(8),
+                     stop=ResidualStop(0.05))
+    assert bool(rep.stopped_early)
+    Xb = np.asarray(X) - np.asarray(mu)[:, None]
+    true = np.linalg.norm(Xb - np.asarray(res.reconstruct())) \
+        / np.linalg.norm(Xb)
+    assert true <= 0.05 + 1e-4
+    # an unreachable tolerance runs to the ceiling
+    _, rep2 = srsvd(jnp.asarray(_hard(rng)), None, 6, q=3,
+                    key=jax.random.PRNGKey(9), stop=ResidualStop(1e-6))
+    assert int(rep2.iters_run) == 3
+
+
+def test_residual_stop_rejects_annealed_schedule(rng):
+    """The mid-loop residual bound reads the iterate of X - c_t mu 1^T;
+    an annealed profile (c_t != 1) leaves (1 - c_t) of the mean's
+    energy in it, inflating the captured sum past ||Xbar||^2 — the rule
+    would certify garbage, so the pairing is rejected up front."""
+    X = jnp.asarray(_hard(rng))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(19)
+    with pytest.raises(ValueError, match="anneals"):
+        srsvd(X, mu, 5, q=4, key=key, shift=DecayingShift(gamma=0.5),
+              stop=ResidualStop(0.05))
+    # degenerate-constant profiles and spectral/unshifted runs are fine
+    srsvd(X, mu, 5, q=2, key=key, shift=DecayingShift(gamma=1.0),
+          stop=ResidualStop(0.9))
+    srsvd(X, mu, 5, q=2, key=key, shift=DynamicShift(),
+          stop=ResidualStop(0.9))
+    srsvd(X, None, 5, q=2, key=key, shift=DecayingShift(gamma=0.5),
+          stop=ResidualStop(0.9))
+
+
+def test_residual_stop_rejects_certificate_opt_out():
+    """certificate=False cannot skip a probe the criterion consumes —
+    accepting it silently would be a no-op flag."""
+    with pytest.raises(ValueError, match="certificate"):
+        ResidualStop(0.1, certificate=False)
+
+
+def test_blocked_early_stop_saves_disk_passes(rng):
+    """The whole point for BlockedOp: a firing rule breaks the host
+    block loop, so the skipped iterations' disk passes never happen."""
+    from repro.data.pipeline import ColumnBlockLoader
+
+    class CountingLoader:
+        block_axis = 1
+
+        def __init__(self, X, block):
+            self.inner = ColumnBlockLoader(X, block)
+            self.shape, self.dtype = self.inner.shape, self.inner.dtype
+            self.passes = 0
+
+        def iter_blocks(self):
+            self.passes += 1
+            return self.inner.iter_blocks()
+
+    X = _easy(rng)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(10)
+
+    src_fix = CountingLoader(X, 17)
+    srsvd(BlockedOp(src_fix), mu, 6, q=8, key=key)
+    src_pve = CountingLoader(X, 17)
+    _, rep = srsvd(BlockedOp(src_pve), mu, 6, q=8, key=key,
+                   stop=PVEStop(1e-2, certificate=False))
+    saved_iters = 8 - int(rep.iters_run)
+    assert saved_iters > 0
+    # two passes per skipped two-QR iteration (rmatmat + matmat)
+    assert src_fix.passes - src_pve.passes == 2 * saved_iters
+
+
+# ---------------------------------------------------------------------------
+# loop parity: python == fori (while_loop) == jit, q = 0 included
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [0, 2])
+@pytest.mark.parametrize("sched", [None, DynamicShift(),
+                                   DecayingShift(gamma=0.5)])
+@pytest.mark.parametrize("stop", [None, FixedIters(), PVEStop(1e-2),
+                                  ResidualStop(0.5)])
+def test_python_fori_parity(rng, q, sched, stop):
+    """One driver serves both loop spellings: schedule + stop state are
+    initialized and advanced identically, so factors agree — bit for
+    bit at q = 0 (the degenerate case that used to sit on two separate
+    code paths) and for the constant schedule at any q; scheduled
+    q > 0 loops agree to fp noise (a traced ``gamma ** t`` rounds
+    differently from the Python-float one, by design of the carry)."""
+    X = jnp.asarray(_hard(rng, m=30, n=90))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(11)
+    if isinstance(stop, ResidualStop) and isinstance(sched, DecayingShift):
+        # invalid pairing (annealed shift breaks the residual bound):
+        # both loop spellings must reject it identically, up front.
+        for loop in ("python", "fori"):
+            with pytest.raises(ValueError, match="anneals"):
+                srsvd(X, mu, 5, q=q, key=key, shift=sched, stop=stop,
+                      loop=loop)
+        return
+    a = srsvd(X, mu, 5, q=q, key=key, shift=sched, stop=stop,
+              loop="python")
+    b = srsvd(X, mu, 5, q=q, key=key, shift=sched, stop=stop,
+              loop="fori")
+    (ra, pa), (rb, pb) = (a if stop else (a, None)), \
+        (b if stop else (b, None))
+    if q == 0 or sched is None:
+        np.testing.assert_array_equal(np.asarray(ra.U), np.asarray(rb.U))
+        np.testing.assert_array_equal(np.asarray(ra.S), np.asarray(rb.S))
+        np.testing.assert_array_equal(np.asarray(ra.Vt),
+                                      np.asarray(rb.Vt))
+    else:
+        np.testing.assert_allclose(np.asarray(ra.S), np.asarray(rb.S),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ra.reconstruct()),
+                                   np.asarray(rb.reconstruct()),
+                                   rtol=1e-3, atol=1e-3)
+    if stop is not None:
+        assert int(pa.iters_run) == int(pb.iters_run)
+        np.testing.assert_allclose(np.asarray(pa.pve_trace),
+                                   np.asarray(pb.pve_trace),
+                                   rtol=1e-3, atol=1e-5, equal_nan=True)
+
+
+def test_svd_jit_while_loop_matches_eager(rng):
+    X = jnp.asarray(_easy(rng))
+    mu = X.mean(axis=1)
+    key = jax.random.PRNGKey(12)
+    for sched in (None, DynamicShift()):
+        jres, jrep = svd_jit(X, mu, 6, q=8, key=key, shift=sched,
+                             stop=PVEStop(1e-2))
+        eres, erep = srsvd(X, mu, 6, q=8, key=key, shift=sched,
+                           stop=PVEStop(1e-2))
+        assert int(jrep.iters_run) == int(erep.iters_run) < 8
+        np.testing.assert_allclose(np.asarray(jres.S), np.asarray(eres.S),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(jrep.pve_trace), np.asarray(erep.pve_trace),
+            rtol=1e-3, atol=1e-5, equal_nan=True)
+
+
+def test_svd_jit_rejects_non_rule_stop(rng):
+    X = jnp.asarray(_hard(rng))
+    with pytest.raises(TypeError, match="StopRule"):
+        svd_jit(X, None, 4, key=jax.random.PRNGKey(0), stop=3)
+
+
+# ---------------------------------------------------------------------------
+# operator coverage: sparse + engine probe
+# ---------------------------------------------------------------------------
+
+def test_sparse_operator_stops_like_dense(rng):
+    from jax.experimental import sparse as jsparse
+    X = _easy(rng)
+    X[rng.random(X.shape) < 0.5] = 0.0
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(13)
+    _, rd = srsvd(jnp.asarray(X), mu, 6, q=8, key=key, stop=PVEStop(1e-2))
+    _, rs = srsvd(SparseOp(jsparse.BCOO.fromdense(jnp.asarray(X))), mu, 6,
+                  q=8, key=key, stop=PVEStop(1e-2))
+    assert int(rd.iters_run) == int(rs.iters_run)
+
+
+def test_engine_xbar_fro_norm2(rng):
+    from repro.core.linop import as_linop
+    eng = get_engine("xla")
+    X = _hard(rng, m=30, n=70)
+    mu = X.mean(axis=1)
+    want = np.linalg.norm(X - mu[:, None]) ** 2
+    got = eng.xbar_fro_norm2(as_linop(jnp.asarray(X)), jnp.asarray(mu))
+    np.testing.assert_allclose(float(got), want, rtol=1e-5)
+    got_b = eng.xbar_fro_norm2(BlockedOp.from_array(X, 13),
+                               jnp.asarray(mu))
+    np.testing.assert_allclose(float(got_b), want, rtol=1e-5)
+    # mu=None falls back to the plain probe
+    np.testing.assert_allclose(
+        float(eng.xbar_fro_norm2(as_linop(jnp.asarray(X)), None)),
+        np.linalg.norm(X) ** 2, rtol=1e-5)
+
+
+def test_callable_op_without_probe_gets_actionable_error(rng):
+    """A bare CallableOp has no fro_norm2 probe: the default
+    certificate must fail with advice (certificate=False), not an
+    opaque NotImplementedError — and certificate=False must work."""
+    from repro.core import CallableOp
+    X = jnp.asarray(_easy(rng))
+    op = CallableOp((X.shape[0], X.shape[1]), X.dtype,
+                    lambda B: X @ B, lambda B: X.T @ B,
+                    lambda: X.mean(axis=1))
+    key = jax.random.PRNGKey(16)
+    with pytest.raises(ValueError, match="certificate=False"):
+        srsvd(op, X.mean(axis=1), 5, q=4, key=key, stop=PVEStop(1e-2))
+    _, rep = srsvd(op, X.mean(axis=1), 5, q=4, key=key,
+                   stop=PVEStop(1e-2, certificate=False))
+    assert rep.posterior_rel_err is None and int(rep.iters_run) <= 4
+
+
+def test_posterior_rel_err_helper_zero_matrix():
+    # degenerate fro2=0 must not divide by zero
+    out = posterior_rel_err(jnp.zeros((3,)), jnp.zeros(()), m=10)
+    assert np.isfinite(float(out))
+
+
+def test_build_report_without_fro2():
+    rule = PVEStop(1e-2, certificate=False)
+    state = rule.init(jnp.float32, 4, 2, 2)
+    rep = build_report(rule, state, jnp.ones((2,)), 10, 2, None)
+    assert rep.posterior_rel_err is None and rep.qmax == 2
+
+
+# ---------------------------------------------------------------------------
+# PCA front door
+# ---------------------------------------------------------------------------
+
+def test_pca_threads_stop(rng):
+    X = _easy(rng)
+    p = PCA(k=5, q=8, stop=PVEStop(1e-2)).fit(X, key=jax.random.PRNGKey(14))
+    assert p.n_iter_ is not None and p.n_iter_ < 8
+    assert isinstance(p.report_, ConvergenceReport)
+    assert float(p.report_.posterior_rel_err) < 0.2
+    # without a rule nothing is reported (and fit stays a single return)
+    p2 = PCA(k=5, q=2).fit(X, key=jax.random.PRNGKey(14))
+    assert p2.report_ is None and p2.n_iter_ is None
+
+
+def test_pca_stop_agrees_with_mse(rng):
+    """The certificate and PCA's own mse metric measure the same
+    residual: ||Xbar - UU^T Xbar||_F^2 / n == rel_err^2 * ||Xbar||^2/n."""
+    X = _easy(rng)
+    p = PCA(k=6, q=8, stop=ResidualStop(0.05)).fit(
+        X, key=jax.random.PRNGKey(15))
+    mse = float(p.mse(X))
+    fro2 = float(p.report_.xbar_fro2)
+    # mse uses U^T Xbar of the *fitted* k components; the certificate
+    # bounds the same quantity from S — they agree to fp noise.
+    certified = float(p.report_.posterior_rel_err) ** 2 * fro2 / X.shape[1]
+    assert mse <= certified * 1.02 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# seed-grid property checks (shared with the hypothesis suite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pve_monotone_on_psd_grid(seed):
+    rng = np.random.default_rng(seed)
+    props.check_pve_monotone_on_psd(
+        mdim=int(rng.integers(20, 50)),
+        decay=float(rng.uniform(0.5, 0.95)),
+        k=int(rng.integers(2, 6)), seed=seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_posterior_bound_grid(seed):
+    rng = np.random.default_rng(100 + seed)
+    props.check_posterior_bound_covers_true_error(
+        m=int(rng.integers(20, 60)), n=int(rng.integers(60, 150)),
+        k=int(rng.integers(3, 8)), q=int(rng.integers(0, 3)),
+        r=int(rng.integers(2, 10)), noise=float(rng.uniform(0.05, 0.5)),
+        seed=seed)
