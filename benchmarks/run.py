@@ -20,8 +20,8 @@ import sys
 import time
 
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
-                        roofline, schedule_bench, stream_bench,
-                        table1_images, table1_words)
+                        roofline, schedule_bench, sparse_bench,
+                        stream_bench, table1_images, table1_words)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -31,6 +31,7 @@ SECTIONS = {
     "dist_svd": dist_svd_bench.main,
     "roofline": roofline.main,
     "schedule": schedule_bench.main,
+    "sparse": sparse_bench.main,
     "stream": stream_bench.main,
 }
 

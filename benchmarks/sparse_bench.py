@@ -1,0 +1,175 @@
+"""Sparse CSR contacts vs densified dense contacts — the dashSVD
+workload (paper §5.3: sparse probability co-occurrence matrices) at its
+native density, never materializing the dense matrix on the device.
+
+The matrix is the repo's synthetic Zipf co-occurrence generator emitted
+directly as CSR (``zipf_cooccurrence_csr`` — the dense count grid never
+exists) at the acceptance geometry: 2000 x 8000, k=10 (K=20), q=2,
+density ~1e-3.  At that density the dense Gram contact moves and
+multiplies ~1000x more zeros than payload; the sparse engine contacts
+(DESIGN.md §13) run one fused SpMM + rank-1-epilogue per column slab
+instead.  Reported rows:
+
+  - density / nnz of the generated matrix (context row);
+  - wall time of the power-iteration Gram contact, sparse vs densified,
+    and their ratio — the regression-gated speedup (min 3x; the
+    arithmetic headroom at 1e-3 density is ~1000x, the gate carries
+    slack for BLAS efficiency on the dense side and slab overheads on
+    the sparse side);
+  - end-to-end rank-k S-RSVD wall time, sparse vs dense operand, and
+    the (gated) ratio;
+  - singular-value parity: max |S_sparse - S_dense| / S_dense[0] must
+    sit at fp32 noise (gated at 1e-5 — the acceptance bound);
+  - rank-k relative Frobenius reconstruction error of the centered
+    matrix for both paths (gated equal bounds: sparsity must not cost
+    accuracy);
+  - analytic peak device bytes for the X-contact working set, dense vs
+    sparse (exact for this allocator-free access pattern), and the
+    shrink factor;
+  - distributed parity: ``dist_srsvd_streamed`` over a
+    ``CSRShardedBlockedOp`` vs the same call over the densified
+    resident matrix, same key/mesh — gated at the same 1e-5.
+
+Sizes are NOT reduced under ``--smoke``: the acceptance geometry is the
+bench, and it runs in seconds on the CI box.  ``--smoke`` only trims
+timing repeats.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only sparse [--smoke]``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import (CSRBlockedOp, CSRShardedBlockedOp, dist_srsvd,
+                        srsvd)
+from repro.core import contact
+from repro.core.linop import DenseOp
+from repro.data.cooccurrence import zipf_cooccurrence_csr
+
+ITEM = 4    # float32
+IDX = 4     # int32 column indices
+M, N, RANK_K, Q = 2000, 8000, 10, 2
+N_PAIRS = 17_000      # tuned: ~1.0e-3 density at this geometry
+BLOCK = 2048
+
+
+def _peak_dense_bytes(m: int, n: int, K: int) -> int:
+    # X resident + (n, K) right factor + (m, K) product
+    return (m * n + n * K + m * K) * ITEM
+
+
+def _peak_sparse_bytes(op: CSRBlockedOp, K: int) -> int:
+    # one slab's CSR payload (f32 values + int32 indices, both
+    # orientations resident during the single-pass Gram contact) + the
+    # dense K-vector working set; the m*n term is gone entirely.
+    m, n = op.shape
+    max_blk = max(blk.csr.data.size for _, blk in op.source.iter_blocks())
+    return 2 * max_blk * (ITEM + IDX) + (m * K + n * K) * ITEM
+
+
+def _rel_err(Xbar: np.ndarray, res) -> float:
+    return float(np.linalg.norm(Xbar - np.asarray(res.reconstruct()))
+                 / np.linalg.norm(Xbar))
+
+
+def main(rows, smoke: bool = False):
+    repeats = 2 if smoke else 3
+    m, n, k, q = M, N, RANK_K, Q
+    K = 2 * k
+
+    csr, density = zipf_cooccurrence_csr(m, n, n_pairs=N_PAIRS, rank=20,
+                                         seed=0)
+    nnz = int(csr.data.size)
+    rows.append(("sparse_density", f"{density:.2e}",
+                 f"m={m} n={n} nnz={nnz}"))
+
+    op = CSRBlockedOp.from_csr(csr, block_size=BLOCK)
+    X = csr.to_dense()
+    Xj = jnp.asarray(X)
+    mu = op.col_mean()
+    Xbar = X - np.asarray(mu)[:, None]
+    key = jax.random.PRNGKey(0)
+    eng = contact.get_engine()
+
+    # --- the hot contact: one power-iteration Gram product
+    B = jax.random.normal(jax.random.PRNGKey(1), (m, K), jnp.float32)
+    dense_op = DenseOp(Xj)
+    t_dense_us = time_call(
+        lambda: eng.shifted_gram_matmat(dense_op, B, mu), repeats=repeats)
+    t_sparse_us = time_call(
+        lambda: eng.sparse_shifted_gram_matmat(op.source, B, mu),
+        repeats=repeats)
+    gd = np.asarray(eng.shifted_gram_matmat(dense_op, B, mu))
+    gs = np.asarray(eng.sparse_shifted_gram_matmat(op.source, B, mu))
+    contact_gap = float(np.abs(gd - gs).max() / np.abs(gd).max())
+    rows.append(("sparse_gram_dense_ms", f"{t_dense_us / 1e3:.2f}",
+                 "densified (X - mu 1^T)(X - mu 1^T)^T B"))
+    rows.append(("sparse_gram_sparse_ms", f"{t_sparse_us / 1e3:.2f}",
+                 "fused CSR slab contacts, single pass"))
+    rows.append(("sparse_gram_speedup", f"{t_dense_us / t_sparse_us:.2f}",
+                 "dense/sparse contact wall (gated min 3x)"))
+    rows.append(("sparse_gram_relgap", f"{contact_gap:.2e}",
+                 "contact output parity, rel to max |entry| (gated)"))
+
+    # --- end-to-end rank-k factorization, same key
+    t_e2e_dense_us = time_call(
+        lambda: srsvd(Xj, mu, k, q=q, key=key).S, repeats=repeats)
+    t_e2e_sparse_us = time_call(
+        lambda: srsvd(op, mu, k, q=q, key=key).S, repeats=repeats)
+    dres = srsvd(Xj, mu, k, q=q, key=key)
+    sres = srsvd(op, mu, k, q=q, key=key)
+    S_gap = float(np.abs(np.asarray(dres.S) - np.asarray(sres.S)).max()
+                  / float(np.asarray(dres.S)[0]))
+    rows.append(("sparse_e2e_dense_ms", f"{t_e2e_dense_us / 1e3:.1f}",
+                 f"in-memory dense srsvd k={k} q={q}"))
+    rows.append(("sparse_e2e_sparse_ms", f"{t_e2e_sparse_us / 1e3:.1f}",
+                 "CSRBlockedOp srsvd, same key"))
+    rows.append(("sparse_e2e_speedup",
+                 f"{t_e2e_dense_us / t_e2e_sparse_us:.2f}",
+                 "dense/sparse end-to-end wall (gated)"))
+    rows.append(("sparse_parity_maxS_relgap", f"{S_gap:.2e}",
+                 "max |S_sparse - S_dense| / S[0] (gated 1e-5)"))
+    rows.append(("sparse_relerr_dense", f"{_rel_err(Xbar, dres):.5f}",
+                 "rank-k rel Frobenius err, dense path (gated)"))
+    rows.append(("sparse_relerr_sparse", f"{_rel_err(Xbar, sres):.5f}",
+                 "rank-k rel Frobenius err, sparse path (gated)"))
+
+    # --- analytic peak device bytes for the X-contact working set
+    peak_d = _peak_dense_bytes(m, n, K)
+    peak_s = _peak_sparse_bytes(op, K)
+    rows.append(("sparse_peak_dense_MB", f"{peak_d / 1e6:.1f}",
+                 "X resident + (n,K) + (m,K)"))
+    rows.append(("sparse_peak_sparse_MB", f"{peak_s / 1e6:.1f}",
+                 f"CSR slab (both orientations) + K-vectors, "
+                 f"block={BLOCK}"))
+    rows.append(("sparse_peak_mem_shrink", f"{peak_d / peak_s:.1f}x",
+                 "dense/sparse working set"))
+
+    # --- distributed: streamed sharded CSR vs resident dense, same
+    # mesh/key (1 device in the CI bench process; 8 under the
+    # multidevice job's XLA_FLAGS).  Hosts clamp to the largest divisor
+    # of n, as in stream_bench.
+    hosts = max(d for d in range(1, jax.device_count() + 1) if n % d == 0)
+    mesh = jax.make_mesh((1, hosts), ("model", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    Xs = jax.device_put(Xj, jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("model", "data")))
+    ddres = dist_srsvd(Xs, mu, k, q=q, mesh=mesh, key=key,
+                       row_axis="model", col_axis="data")
+    sop = CSRShardedBlockedOp.from_csr(csr, num_shards=hosts,
+                                       block_size=BLOCK)
+    from repro.core import dist_srsvd_streamed
+    t_dist_us = time_call(
+        lambda: dist_srsvd_streamed(sop, mu, k, q=q, mesh=mesh,
+                                    key=key).S, repeats=repeats)
+    sdres = dist_srsvd_streamed(sop, mu, k, q=q, mesh=mesh, key=key)
+    dist_gap = float(
+        np.abs(np.asarray(ddres.S) - np.asarray(sdres.S)).max()
+        / float(np.asarray(ddres.S)[0]))
+    rows.append(("sparse_dist_streamed_ms", f"{t_dist_us / 1e3:.1f}",
+                 f"hosts={hosts} streamed sharded CSR"))
+    rows.append(("sparse_dist_parity_maxS_relgap", f"{dist_gap:.2e}",
+                 "streamed CSR vs resident dense dist (gated 1e-5)"))

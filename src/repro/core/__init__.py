@@ -18,9 +18,11 @@ Public API:
                           error certificates (DESIGN.md §12)
 """
 from repro.core.contact import (ContactEngine, available_backends,
+                                available_sparse_backends,
                                 default_backend, get_engine,
-                                register_backend)
-from repro.core.linop import (BlockedOp, CallableOp, ChainedOp, DenseOp,
+                                register_backend, register_sparse_backend)
+from repro.core.linop import (BlockedOp, CallableOp, ChainedOp,
+                              CSRBlockedOp, CSRShardedBlockedOp, DenseOp,
                               LinOp, RowShardedBlockedOp,
                               ShardedBlockedOp, SparseOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
@@ -36,10 +38,13 @@ from repro.core.distributed import (dist_col_mean, dist_pca_fit,
                                     dist_srsvd_streamed, tsqr)
 
 __all__ = [
-    "BlockedOp", "CallableOp", "ChainedOp", "DenseOp", "LinOp",
+    "BlockedOp", "CallableOp", "ChainedOp", "CSRBlockedOp",
+    "CSRShardedBlockedOp", "DenseOp", "LinOp",
     "RowShardedBlockedOp", "ShardedBlockedOp", "SparseOp",
-    "as_linop", "ContactEngine", "available_backends", "default_backend",
-    "get_engine", "register_backend", "qr_rank1_update", "SVDResult",
+    "as_linop", "ContactEngine", "available_backends",
+    "available_sparse_backends", "default_backend",
+    "get_engine", "register_backend", "register_sparse_backend",
+    "qr_rank1_update", "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",
     "dist_col_mean", "dist_pca_fit", "dist_pca_fit_streamed", "dist_srsvd",
     "dist_srsvd_streamed", "tsqr",

@@ -86,7 +86,13 @@ def canonical_dtype(src_dtype) -> jnp.dtype:
 # (A, B, u, w, transpose_a) -> op(A) @ B - u w^T
 MatmulRank1 = Callable[..., jax.Array]
 
+# (data, indices, indptr, B, u, w, shape) -> A @ B - u w^T, A in CSR form.
+# The sparse twin of the dense primitive (DESIGN.md §13): no transpose
+# flag — the transposed contact passes the transposed CSR arrays.
+SparseMatmulRank1 = Callable[..., jax.Array]
+
 _REGISTRY: dict[str, MatmulRank1] = {}
+_SPARSE_REGISTRY: dict[str, SparseMatmulRank1] = {}
 _ENGINES: dict[str, "ContactEngine"] = {}
 
 
@@ -99,8 +105,26 @@ def register_backend(name: str, matmul_rank1: MatmulRank1,
     _ENGINES.pop(name, None)
 
 
+def register_sparse_backend(name: str, csr_matmul_rank1: SparseMatmulRank1,
+                            *, overwrite: bool = False) -> None:
+    """Register the CSR rank-1-corrected SpMM primitive under ``name``.
+
+    A backend without a sparse entry falls back to the XLA BCSR
+    composition at sparse contact points (so a custom dense backend
+    still accepts CSR operators, just without a fused sparse kernel).
+    """
+    if name in _SPARSE_REGISTRY and not overwrite:
+        raise ValueError(f"sparse backend {name!r} already registered")
+    _SPARSE_REGISTRY[name] = csr_matmul_rank1
+    _ENGINES.pop(name, None)
+
+
 def available_backends() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def available_sparse_backends() -> tuple[str, ...]:
+    return tuple(sorted(_SPARSE_REGISTRY))
 
 
 def default_backend() -> str:
@@ -186,6 +210,66 @@ class ContactEngine:
         u, w = shift_vectors_rmatmat(B, mu, X.shape[1], X.dtype)
         return self.matmul_rank1(X, B, u, w, transpose_a=True)
 
+    # -- sparse contact points (DESIGN.md §13) -------------------------
+    #    CSR operands route through the sparse backend primitive; the
+    #    rank-1 shift correction stays dense K-vectors fused into the
+    #    primitive's epilogue, so sparsity is never destroyed.  Backends
+    #    without a registered sparse primitive fall back to the XLA
+    #    BCSR composition.
+
+    def sparse_matmul_rank1(self, data, indices, indptr, B, u, w, *,
+                            shape):
+        """``A @ B - u w^T`` for host CSR arrays ``A`` of ``shape``.
+
+        ``u``/``w`` both None means the plain SpMM.  The transposed
+        contact is expressed by passing the transposed CSR — there is
+        no transpose flag (a CSR transpose is a different CSR, and the
+        block sources hold both orientations).
+        """
+        fn = _SPARSE_REGISTRY.get(self.backend)
+        if fn is None:
+            fn = _SPARSE_REGISTRY["xla"]
+        return fn(data, indices, indptr, B, u, w, shape=shape)
+
+    def _sparse_block_product(self, csr, B, u, w):
+        """Primitive call for one cached CSR block orientation."""
+        return self.sparse_matmul_rank1(csr.data, csr.indices, csr.indptr,
+                                        B, u, w, shape=csr.shape)
+
+    def sparse_shifted_matmat(self, source, B, mu):
+        """(X - mu 1^T) @ B streamed over a CSR column-block source.
+
+        The rank-1 correction decomposes over column blocks —
+        ``(X - mu 1^T) B = sum_blk (X_blk B_blk - mu (1^T B_blk))`` —
+        so each slab's share is fused into its primitive's epilogue
+        with ``u = mu``, ``w = 1^T B_blk``; nothing is corrected after
+        the loop.  ``mu=None`` means unshifted, as everywhere.
+        """
+        m = int(source.shape[0])
+        dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+        acc = jnp.zeros((m, B.shape[1]), dt)
+        for j0, blk in source.iter_blocks():
+            Bs = B[j0:j0 + blk.shape[1]]
+            u, w = (None, None) if mu is None else (mu, Bs.sum(axis=0))
+            acc = acc + self._sparse_block_product(blk.csr, Bs, u, w)
+        return acc
+
+    def sparse_shifted_rmatmat(self, source, B, mu):
+        """(X - mu 1^T)^T @ B over a CSR column-block source — each
+        block's rows come from its transposed orientation (the free CSC
+        slice) with the ``1 (mu^T B)`` correction fused per block; the
+        per-range variant of this contact IS ``sharded_shifted_rmatmat``
+        (sparse-aware below), which this delegates to."""
+        return self.sharded_shifted_rmatmat(source, B, mu)
+
+    def sparse_shifted_gram_matmat(self, source, B, mu):
+        """(X - mu 1^T)(X - mu 1^T)^T @ B over a CSR column-block
+        source, one pass per slab: both orientations of each block are
+        touched while it is resident (csr_t for the ``X^T``-side, csr
+        for the ``X``-side), via the single-pass sharded partials."""
+        G, s = self.sharded_shifted_gram_matmat(source, B, mu)
+        return G if mu is None else rank1_correct(G, mu, s)
+
     # -- operator-level contact points ---------------------------------
     def matmat(self, op, B):
         return op.matmat(B)
@@ -207,6 +291,10 @@ class ContactEngine:
         X = getattr(op, "contact_array", None)
         if X is not None:
             return self.dense_shifted_matmat(X, B, mu)
+        source = getattr(op, "source", None)
+        if source is not None \
+                and getattr(source, "sparse_format", None) == "csr":
+            return self.sparse_shifted_matmat(source, B, mu)
         return rank1_correct(op.matmat(B), *shift_vectors_matmat(B, mu))
 
     def shifted_rmatmat(self, op, B, mu):
@@ -216,6 +304,10 @@ class ContactEngine:
         X = getattr(op, "contact_array", None)
         if X is not None:
             return self.dense_shifted_rmatmat(X, B, mu)
+        source = getattr(op, "source", None)
+        if source is not None \
+                and getattr(source, "sparse_format", None) == "csr":
+            return self.sparse_shifted_rmatmat(source, B, mu)
         u, w = shift_vectors_rmatmat(B, mu, op.shape[1], op.dtype)
         return rank1_correct(op.rmatmat(B), u, w)
 
@@ -257,7 +349,12 @@ class ContactEngine:
                         jnp.promote_types(canonical_dtype(source.dtype),
                                           B_loc.dtype))
         for j0, blk in source.iter_blocks():
-            acc = acc + jnp.asarray(blk) @ B_loc[j0:j0 + blk.shape[1]]
+            Bs = B_loc[j0:j0 + blk.shape[1]]
+            if getattr(blk, "is_sparse", False):
+                acc = acc + self._sparse_block_product(blk.csr, Bs,
+                                                       None, None)
+            else:
+                acc = acc + jnp.asarray(blk) @ Bs
         return acc
 
     def sharded_shifted_rmatmat(self, source, B, mu):
@@ -270,6 +367,12 @@ class ContactEngine:
         w = None if mu is None else mu @ B
         parts = []
         for _, blk in source.iter_blocks():
+            if getattr(blk, "is_sparse", False):
+                u = None if mu is None else jnp.ones((blk.shape[1],),
+                                                     w.dtype)
+                parts.append(self._sparse_block_product(blk.csr_t, B,
+                                                        u, w))
+                continue
             blk = jnp.asarray(blk)
             if mu is None:
                 parts.append(blk.T @ B)
@@ -304,13 +407,25 @@ class ContactEngine:
         G = jnp.zeros((m, B.shape[1]), dt)
         s = jnp.zeros((B.shape[1],), dt)
         for _, blk in source.iter_blocks():
-            blk = jnp.asarray(blk)
-            if mu is None:
-                Zt_blk = blk.T @ B
+            if getattr(blk, "is_sparse", False):
+                # both orientations of the slab while it is resident:
+                # csr_t (the free CSC slice) for the X^T side, csr (the
+                # cached per-block transpose) for the X side — still a
+                # single pass over the source.
+                u = None if mu is None else jnp.ones((blk.shape[1],),
+                                                     w.dtype)
+                Zt_blk = self._sparse_block_product(blk.csr_t, B, u, w)
+                G = G + self._sparse_block_product(blk.csr, Zt_blk,
+                                                   None, None)
             else:
-                u = jnp.ones((blk.shape[1],), w.dtype)
-                Zt_blk = self.matmul_rank1(blk, B, u, w, transpose_a=True)
-            G = G + blk @ Zt_blk
+                blk = jnp.asarray(blk)
+                if mu is None:
+                    Zt_blk = blk.T @ B
+                else:
+                    u = jnp.ones((blk.shape[1],), w.dtype)
+                    Zt_blk = self.matmul_rank1(blk, B, u, w,
+                                               transpose_a=True)
+                G = G + blk @ Zt_blk
             s = s + Zt_blk.sum(axis=0)
         return G, s
 
@@ -423,6 +538,46 @@ def _interpret_matmul_rank1(A, B, u, w, *, transpose_a: bool = False):
                         interpret=True)
 
 
+def _xla_csr_matmul_rank1(data, indices, indptr, B, u, w, *, shape):
+    """BCSR SpMM + rank-1 correction — the sparse composition baseline
+    (CPU/GPU, and the fallback for backends without a sparse kernel).
+    Index arrays are cast to int32 host-side so the x64-truncation
+    warning never fires; integer data promotes through the dot."""
+    import numpy as np
+    from jax.experimental import sparse as jsp
+    data = np.asarray(data)
+    B = jnp.asarray(B)
+    out_dtype = jnp.promote_types(canonical_dtype(data.dtype), B.dtype)
+    m = int(shape[0])
+    if data.size == 0 or shape[1] == 0:
+        P = jnp.zeros((m, B.shape[1]), out_dtype)
+    else:
+        A = jsp.BCSR((jnp.asarray(data),
+                      jnp.asarray(np.asarray(indices, dtype=np.int32)),
+                      jnp.asarray(np.asarray(indptr, dtype=np.int32))),
+                     shape=(m, int(shape[1])))
+        P = (A @ B).astype(out_dtype)
+    if u is None:
+        return P
+    return rank1_correct(P, jnp.asarray(u, out_dtype),
+                         jnp.asarray(w, out_dtype))
+
+
+def _pallas_csr_matmul_rank1(data, indices, indptr, B, u, w, *, shape):
+    from repro.kernels.sparse_matmul import csr_matmul_rank1
+    return csr_matmul_rank1(data, indices, indptr, B, u, w, shape=shape,
+                            interpret=False)
+
+
+def _interpret_csr_matmul_rank1(data, indices, indptr, B, u, w, *, shape):
+    from repro.kernels.sparse_matmul import csr_matmul_rank1
+    return csr_matmul_rank1(data, indices, indptr, B, u, w, shape=shape,
+                            interpret=True)
+
+
 register_backend("xla", _xla_matmul_rank1)
 register_backend("pallas_tpu", _pallas_matmul_rank1)
 register_backend("interpret", _interpret_matmul_rank1)
+register_sparse_backend("xla", _xla_csr_matmul_rank1)
+register_sparse_backend("pallas_tpu", _pallas_csr_matmul_rank1)
+register_sparse_backend("interpret", _interpret_csr_matmul_rank1)

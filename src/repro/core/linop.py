@@ -285,6 +285,82 @@ class BlockedOp(LinOp):
 
 
 @dataclasses.dataclass(frozen=True)
+class CSRBlockedOp(BlockedOp):
+    """Column-block streaming operator over a CSR matrix (DESIGN.md §13).
+
+    ``source`` is a sparse column-block source
+    (:class:`repro.data.sparse.CSRColumnBlockSource`: ``sparse_format
+    == "csr"``, blocks are :class:`~repro.data.sparse.SparseBlock`
+    slabs holding both CSR orientations).  Every product routes through
+    the engine's sparse contacts, so each slab is one SpMM on the
+    backend's CSR primitive — O(nnz_blk·K) instead of O(m·block·K) —
+    and the rank-1 shift correction stays dense K-vectors fused into
+    the primitive's epilogue; the sparse structure is never densified.
+    ``col_mean`` / ``fro_norm2`` are host-side O(nnz) passes over the
+    stored values (no device contact at all).
+
+    Integer CSR data (count matrices) follows the PR 2 integer-operator
+    rule: products promote to the float result type, ``col_mean`` is
+    float, and ``srsvd`` draws omega in the promoted dtype.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        if getattr(self.source, "sparse_format", None) != "csr":
+            raise TypeError(
+                "CSRBlockedOp needs a sparse CSR column-block source "
+                "(repro.data.sparse.CSRColumnBlockSource); got "
+                f"{type(self.source).__name__} — wrap dense sources in "
+                "BlockedOp instead")
+
+    def matmat(self, B):
+        from repro.core import contact
+        return contact.get_engine().sharded_matmat(self.source, B)
+
+    def rmatmat(self, B):
+        from repro.core import contact
+        return contact.get_engine().sharded_shifted_rmatmat(
+            self.source, B, None)
+
+    def col_mean(self):
+        # Host-side: X's row sums are per-block column sums of the
+        # transposed orientation — one bincount per slab over stored
+        # values, float64 exact, no device work.  Float result dtype
+        # (never the integer operator dtype), n == 0 guarded — the same
+        # rules as BlockedOp.col_mean.
+        import numpy as np
+        m, n = self.shape
+        dt = jnp.promote_types(self.dtype, jnp.float32)
+        if n == 0:
+            return jnp.zeros((m,), dt)
+        acc = np.zeros((m,), np.float64)
+        for _, blk in self.source.iter_blocks():
+            t = blk.csr_t
+            if t.nnz:
+                acc += np.bincount(np.asarray(t.indices),
+                                   weights=np.asarray(t.data,
+                                                      dtype=np.float64),
+                                   minlength=m)
+        return jnp.asarray(acc / n, dt)
+
+    def fro_norm2(self):
+        # ||X||_F^2 over stored values only — never densify.
+        import numpy as np
+        acc = 0.0
+        for _, blk in self.source.iter_blocks():
+            d = np.asarray(blk.csr_t.data, dtype=np.float64)
+            acc += float(d @ d)
+        return jnp.asarray(acc, jnp.promote_types(self.dtype, jnp.float32))
+
+    @classmethod
+    def from_csr(cls, csr, block_size: int) -> "CSRBlockedOp":
+        """Wrap an (m, n) :class:`repro.data.sparse.CSRMatrix` (one
+        O(nnz) transpose to the CSC master layout)."""
+        from repro.data.sparse import CSRColumnBlockSource
+        return cls(CSRColumnBlockSource.from_csr(csr, block_size))
+
+
+@dataclasses.dataclass(frozen=True)
 class ShardedBlockedOp(LinOp):
     """Host-sharded out-of-core operator: shard ``p`` owns the global
     column range ``[col_starts[p], col_starts[p+1])`` as its own block
@@ -417,6 +493,46 @@ class ShardedBlockedOp(LinOp):
             for s in open_memmap_matrix(
                 path, shape, dtype,
                 block_size=block_size).split(num_shards)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRShardedBlockedOp(ShardedBlockedOp):
+    """Host-sharded column ranges of one CSR matrix (DESIGN.md §13).
+
+    The sparse variant of :class:`ShardedBlockedOp`: shard ``p`` owns a
+    column range as a :class:`repro.data.sparse.CSRColumnBlockSource`
+    (an ``indptr`` slice of the shared CSC master — on a memmap each
+    host reads only its own contiguous extent).  ``dist_srsvd_streamed``
+    accepts it unchanged: the sharded engine contacts dispatch per block
+    on the sparse marker, so per-range partials are SpMMs and the
+    K-vector shift corrections ride the existing psums.  As a plain
+    ``LinOp`` it is equivalent to a :class:`CSRBlockedOp` with grouped
+    blocks — the single-device algorithms and parity tests use it
+    directly.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        for s in self.shards:
+            if getattr(s, "sparse_format", None) != "csr":
+                raise TypeError(
+                    "CSRShardedBlockedOp shards must be sparse CSR "
+                    "column-block sources (sparse_format='csr'); got "
+                    f"{type(s).__name__} — use ShardedBlockedOp for "
+                    "dense sources")
+
+    def _shard_ops(self):
+        for lo, src in zip(self.col_starts, self.shards):
+            yield lo, CSRBlockedOp(src)
+
+    @classmethod
+    def from_csr(cls, csr, *, num_shards: int,
+                 block_size: int) -> "CSRShardedBlockedOp":
+        """Even column split of an (m, n) CSR matrix into per-host
+        ranges of the shared CSC master."""
+        from repro.data.sparse import CSRColumnBlockSource
+        return cls(CSRColumnBlockSource.from_csr(
+            csr, block_size).split(num_shards))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -638,4 +754,8 @@ def as_linop(X) -> LinOp:
         return X
     if isinstance(X, jsparse.BCOO):
         return SparseOp(X)
+    from repro.data.sparse import CSRMatrix
+    if isinstance(X, CSRMatrix):
+        n = X.shape[1]
+        return CSRBlockedOp.from_csr(X, block_size=max(1, min(n, 4096)))
     return DenseOp(jnp.asarray(X))

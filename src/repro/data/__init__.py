@@ -1,8 +1,12 @@
 from repro.data.pipeline import (ColumnBlockLoader, DataPipeline,
                                  PrefetchingBlockSource, RowBlockLoader,
                                  open_memmap_matrix, prefetch)
-from repro.data.cooccurrence import zipf_cooccurrence, zipf_tokens
+from repro.data.sparse import (CSRColumnBlockSource, CSRMatrix,
+                               SparseBlock, open_csr)
+from repro.data.cooccurrence import (zipf_cooccurrence,
+                                     zipf_cooccurrence_csr, zipf_tokens)
 
 __all__ = ["ColumnBlockLoader", "DataPipeline", "PrefetchingBlockSource",
            "RowBlockLoader", "open_memmap_matrix", "prefetch",
-           "zipf_cooccurrence", "zipf_tokens"]
+           "CSRColumnBlockSource", "CSRMatrix", "SparseBlock", "open_csr",
+           "zipf_cooccurrence", "zipf_cooccurrence_csr", "zipf_tokens"]

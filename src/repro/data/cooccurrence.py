@@ -6,12 +6,24 @@ this container, so we generate a corpus-free equivalent: draw target and
 context words from a Zipf law, accumulate co-occurrence counts through a
 latent low-dimensional topic model (so the matrix has genuine low-rank
 structure for PCA to find), and normalize columns to probabilities.
+
+:func:`zipf_cooccurrence_csr` is the native entry point: it never
+materializes the dense (m, n) count grid — pairs are accumulated by one
+vectorized ``np.unique`` pass over encoded (row, col) codes (whose sorted
+output *is* CSR row-major order), column totals by one ``bincount`` — and
+it returns a :class:`repro.data.sparse.CSRMatrix` ready for
+``CSRBlockedOp`` (DESIGN.md §13).  :func:`zipf_cooccurrence` keeps the
+legacy dense/BCOO return contract, densified from the same CSR; both are
+bit-equal to the original ``np.add.at``-per-topic dense accumulation
+under a fixed seed (pinned by tests/test_sparse.py).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 from jax.experimental import sparse as jsparse
+
+from repro.data.sparse import CSRMatrix
 
 
 def zipf_tokens(n_tokens: int, vocab: int, a: float = 1.2, seed: int = 0
@@ -20,12 +32,14 @@ def zipf_tokens(n_tokens: int, vocab: int, a: float = 1.2, seed: int = 0
     return ((rng.zipf(a, size=n_tokens) - 1) % vocab).astype(np.int64)
 
 
-def zipf_cooccurrence(m: int, n: int, *, n_pairs: int = 2_000_000,
-                      rank: int = 20, a: float = 1.2, seed: int = 0,
-                      dtype=np.float32):
-    """(m context-words x n target-words) probability co-occurrence matrix.
+def _topic_pair_codes(m: int, n: int, n_pairs: int, rank: int, a: float,
+                      seed: int) -> np.ndarray:
+    """Encoded ``row * n + col`` pair draws, one int64 code per pair.
 
-    Returns (dense ndarray, BCOO sparse copy, density).
+    The draw sequence (topic assignment, then per-topic context/target
+    choices) is kept identical to the original loop, so the counts —
+    and therefore the normalized matrix — are bit-equal under a fixed
+    seed; only the *accumulation* is vectorized.
     """
     rng = np.random.default_rng(seed)
     # latent topics give the matrix low-rank structure
@@ -33,18 +47,57 @@ def zipf_cooccurrence(m: int, n: int, *, n_pairs: int = 2_000_000,
     topic_tgt = rng.dirichlet(np.ones(n) * 0.05, size=rank)     # (r, n)
     zipf_w = 1.0 / np.arange(1, rank + 1) ** a
     zipf_w /= zipf_w.sum()
-    counts = np.zeros((m, n), dtype=np.float64)
     topics = rng.choice(rank, size=n_pairs, p=zipf_w)
+    codes = []
     for r in range(rank):
         k = int((topics == r).sum())
         if k == 0:
             continue
         ci = rng.choice(m, size=k, p=topic_ctx[r])
         ti = rng.choice(n, size=k, p=topic_tgt[r])
-        np.add.at(counts, (ci, ti), 1.0)
-    col_tot = counts.sum(axis=0, keepdims=True)
-    probs = counts / np.maximum(col_tot, 1.0)
-    X = probs.astype(dtype)
-    density = float((X != 0).mean())
+        codes.append(ci.astype(np.int64) * n + ti)
+    if not codes:
+        return np.zeros((0,), dtype=np.int64)
+    return np.concatenate(codes)
+
+
+def zipf_cooccurrence_csr(m: int, n: int, *, n_pairs: int = 2_000_000,
+                          rank: int = 20, a: float = 1.2, seed: int = 0,
+                          dtype=np.float32) -> tuple[CSRMatrix, float]:
+    """(m context-words x n target-words) probability co-occurrence
+    matrix, emitted directly as CSR — the dense count grid never exists.
+
+    Returns ``(CSRMatrix, density)``.  One ``np.unique`` pass turns the
+    encoded pair draws into sorted (row-major) unique coordinates with
+    counts — exactly the CSR layout — and one weighted ``bincount``
+    produces the column totals for the probability normalization.
+    """
+    codes = _topic_pair_codes(m, n, n_pairs, rank, a, seed)
+    uniq, cnt = np.unique(codes, return_counts=True)
+    rows = (uniq // n).astype(np.int64)
+    cols = (uniq % n).astype(np.int32)
+    # column totals are exact integer sums in float64, matching the
+    # dense path's float64 accumulation bit for bit.
+    col_tot = np.bincount(cols, weights=cnt.astype(np.float64),
+                          minlength=n)
+    data = (cnt / np.maximum(col_tot[cols], 1.0)).astype(dtype)
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=m), out=indptr[1:])
+    csr = CSRMatrix(indptr, cols, data, (m, n), validate=False)
+    return csr, csr.density
+
+
+def zipf_cooccurrence(m: int, n: int, *, n_pairs: int = 2_000_000,
+                      rank: int = 20, a: float = 1.2, seed: int = 0,
+                      dtype=np.float32):
+    """Legacy dense entry point (kept for the dense benches/tests).
+
+    Returns (dense ndarray, BCOO sparse copy, density) — densified from
+    the CSR that :func:`zipf_cooccurrence_csr` builds, bit-equal to the
+    original dense accumulation under a fixed seed.
+    """
+    csr, density = zipf_cooccurrence_csr(m, n, n_pairs=n_pairs, rank=rank,
+                                         a=a, seed=seed, dtype=dtype)
+    X = csr.to_dense()
     X_sp = jsparse.BCOO.fromdense(jnp.asarray(X))
     return X, X_sp, density

@@ -1,0 +1,362 @@
+"""CSR sparse matrices and the column-block source behind ``CSRBlockedOp``.
+
+The paper's word co-occurrence matrices are ~1e-3 dense; densifying them
+before every contact throws away the biggest asymptotic win the
+products-only formulation offers — an SpMM contact costs O(nnz·K)
+instead of O(m·n·K), and the rank-1 centering correction is dense
+K-vectors that never touch the sparse structure (DESIGN.md §13; Feng et
+al., arXiv:2404.09276, target exactly this regime).
+
+Everything here is host-side numpy (scipy-free), so sources can wrap
+memmap-resident index/value arrays and stream a billion-nonzero matrix
+through one host:
+
+``CSRMatrix``
+    frozen (indptr, indices, data, shape) triple-array CSR container
+    with validation (sorted, duplicate-free column indices per row — an
+    unsorted input fails with an actionable ValueError, not a silently
+    wrong product), an O(nnz) transpose, dense round-trips, and
+    ``save``/``open_csr`` for the on-disk ``.npy``-triple layout
+    (opened with ``mmap_mode="r"`` so nothing loads until sliced).
+
+``CSRColumnBlockSource``
+    the block source :class:`repro.core.linop.CSRBlockedOp` consumes.
+    The master is stored as **CSC** — i.e. the CSR of ``X^T`` — so a
+    column range ``[col_lo, col_hi)`` is a pure ``indptr`` slice: no
+    copy for in-memory arrays, a contiguous extent read for memmaps.
+    ``iter_blocks()`` yields ``(j0, SparseBlock)`` pairs satisfying the
+    column-block protocol (``blk.shape == (m, width)``, range-local
+    ``j0``), and ``split(P)`` produces per-host ranges exactly like
+    :class:`repro.data.pipeline.ColumnBlockLoader.split`.
+
+``SparseBlock``
+    one (m, width) column slab, held in both orientations: ``csr_t``
+    (the slab's transpose — the free CSC slice, what ``X^T B`` contacts
+    want) and ``csr`` (the (m, width) orientation for ``X B`` contacts,
+    computed once per block by an O(nnz) transpose and cached, so
+    repeated power-iteration passes pay it once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import numpy as np
+
+
+def _as_1d(a, name: str) -> np.ndarray:
+    a = np.asarray(a) if not isinstance(a, np.ndarray) else a
+    if a.ndim != 1:
+        raise ValueError(f"{name} must be 1-D, got shape {a.shape}")
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Compressed-sparse-row matrix over host numpy (or memmap) arrays.
+
+    Row ``i`` stores columns ``indices[indptr[i]:indptr[i+1]]`` with
+    values ``data[indptr[i]:indptr[i+1]]``; column indices must be
+    strictly increasing within each row (sorted, duplicate-free) — the
+    layout every consumer (the BCSR device path, the Pallas ELL pack,
+    the counting-sort transpose) assumes.  ``validate=False`` skips the
+    O(nnz) structure check for slices of an already-validated master.
+    """
+
+    indptr: np.ndarray     # (m + 1,) int
+    indices: np.ndarray    # (nnz,) int, sorted strictly increasing per row
+    data: np.ndarray       # (nnz,) numeric
+    shape: tuple[int, int]
+    validate: dataclasses.InitVar[bool] = True
+
+    def __post_init__(self, validate: bool):
+        m, n = self.shape
+        object.__setattr__(self, "shape", (int(m), int(n)))
+        indptr = _as_1d(self.indptr, "indptr")
+        indices = _as_1d(self.indices, "indices")
+        data = _as_1d(self.data, "data")
+        object.__setattr__(self, "indptr", indptr)
+        object.__setattr__(self, "indices", indices)
+        object.__setattr__(self, "data", data)
+        if indptr.shape[0] != self.shape[0] + 1:
+            raise ValueError(
+                f"indptr must have m + 1 = {self.shape[0] + 1} entries, "
+                f"got {indptr.shape[0]}")
+        if indices.shape[0] != data.shape[0]:
+            raise ValueError(
+                f"indices ({indices.shape[0]}) and data "
+                f"({data.shape[0]}) lengths disagree")
+        if validate:
+            self._validate_structure(indptr, indices)
+
+    def _validate_structure(self, indptr, indices):
+        m, n = self.shape
+        if m and (int(indptr[0]) != 0
+                  or int(indptr[-1]) != indices.shape[0]):
+            raise ValueError(
+                f"indptr must run 0..nnz={indices.shape[0]}, got "
+                f"[{indptr[0]}, ..., {indptr[-1]}]")
+        if np.any(np.diff(indptr) < 0):
+            raise ValueError("indptr must be non-decreasing")
+        if indices.size:
+            if int(indices.min()) < 0 or int(indices.max()) >= n:
+                raise ValueError(
+                    f"column indices must lie in [0, {n}), got range "
+                    f"[{indices.min()}, {indices.max()}]")
+            # sorted + duplicate-free within each row, vectorized: a
+            # non-increasing step is only legal at a row boundary.
+            step = np.diff(indices)
+            boundary = np.zeros(indices.shape[0], dtype=bool)
+            starts = np.asarray(indptr[1:-1])    # start of rows 1..m-1
+            boundary[starts[starts < indices.shape[0]]] = True
+            bad = (step <= 0) & ~boundary[1:]
+            if np.any(bad):
+                pos = int(np.argmax(bad)) + 1
+                row = int(np.searchsorted(indptr, pos, side="right")) - 1
+                raise ValueError(
+                    f"column indices within row {row} are not sorted "
+                    f"strictly increasing (indices[{pos - 1}]="
+                    f"{indices[pos - 1]} -> indices[{pos}]="
+                    f"{indices[pos]}); CSR consumers (BCSR dot, the "
+                    "Pallas ELL pack, transpose) require sorted, "
+                    "duplicate-free rows — sort each row's indices and "
+                    "sum duplicate entries before constructing "
+                    "CSRMatrix")
+
+    # -- properties ----------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def density(self) -> float:
+        m, n = self.shape
+        return self.nnz / (m * n) if m and n else 0.0
+
+    def row_nnz(self) -> np.ndarray:
+        return np.asarray(self.indptr[1:]) - np.asarray(self.indptr[:-1])
+
+    # -- conversions ---------------------------------------------------
+    @classmethod
+    def from_dense(cls, X) -> "CSRMatrix":
+        X = np.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f"from_dense needs a 2-D array, got {X.shape}")
+        m, n = X.shape
+        rows, cols = np.nonzero(X)               # C-order: CSR-sorted
+        indptr = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(np.bincount(rows, minlength=m), out=indptr[1:])
+        return cls(indptr, cols.astype(np.int32), X[rows, cols],
+                   (m, n), validate=False)
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=self.data.dtype)
+        rows = np.repeat(np.arange(m), self.row_nnz())
+        out[rows, np.asarray(self.indices)] = np.asarray(self.data)
+        return out
+
+    def transpose(self) -> "CSRMatrix":
+        """CSR of ``X^T`` in O(nnz): a stable sort by column index keeps
+        the old row order within each new row, so the result is sorted
+        and duplicate-free by construction."""
+        m, n = self.shape
+        indices = np.asarray(self.indices)
+        order = np.argsort(indices, kind="stable")
+        rows = np.repeat(np.arange(m, dtype=np.int32), self.row_nnz())
+        indptr_t = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(indices, minlength=n), out=indptr_t[1:])
+        return CSRMatrix(indptr_t, rows[order],
+                         np.asarray(self.data)[order], (n, m),
+                         validate=False)
+
+    def row_sums(self) -> np.ndarray:
+        """Per-row value sums in float64 (exact for count data) — the
+        host-side half of ``col_mean`` on CSR operators."""
+        cs = np.concatenate([[0.0],
+                             np.cumsum(np.asarray(self.data,
+                                                  dtype=np.float64))])
+        return cs[np.asarray(self.indptr[1:])] \
+            - cs[np.asarray(self.indptr[:-1])]
+
+    # -- on-disk layout ------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Write the triple-array layout ``{indptr,indices,data}.npy``
+        under ``directory`` (created if missing); reopen with
+        :func:`open_csr`, optionally memmap-resident."""
+        os.makedirs(directory, exist_ok=True)
+        np.save(os.path.join(directory, "indptr.npy"),
+                np.asarray(self.indptr))
+        np.save(os.path.join(directory, "indices.npy"),
+                np.asarray(self.indices))
+        np.save(os.path.join(directory, "data.npy"),
+                np.asarray(self.data))
+        with open(os.path.join(directory, "shape.txt"), "w") as f:
+            f.write(f"{self.shape[0]} {self.shape[1]}\n")
+        return directory
+
+
+def open_csr(directory: str, *, mmap: bool = True,
+             validate: bool = False) -> CSRMatrix:
+    """Reopen a :meth:`CSRMatrix.save` directory.  ``mmap=True`` leaves
+    the three arrays on disk (nothing loads until a range is sliced —
+    the billion-nonzero single-host layout); ``validate=True`` runs the
+    full O(nnz) structure check on open."""
+    mode = "r" if mmap else None
+    with open(os.path.join(directory, "shape.txt")) as f:
+        m, n = (int(x) for x in f.read().split())
+    return CSRMatrix(
+        np.load(os.path.join(directory, "indptr.npy"), mmap_mode=mode),
+        np.load(os.path.join(directory, "indices.npy"), mmap_mode=mode),
+        np.load(os.path.join(directory, "data.npy"), mmap_mode=mode),
+        (m, n), validate=validate)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseBlock:
+    """One (m, width) column slab of a sparse matrix, both orientations.
+
+    ``csr_t`` is the slab's transpose — a (width, m) CSR that comes for
+    free as an ``indptr`` slice of the CSC master and is what the
+    ``X^T B`` side of every contact consumes.  ``csr`` is the (m, width)
+    orientation for the ``X B`` side, computed lazily by an O(nnz)
+    transpose and cached on the block (the source caches blocks, so
+    repeated passes — one per power iteration — pay the transpose once).
+    """
+
+    csr_t: CSRMatrix
+
+    #: engine dispatch marker (duck-typed so core.contact never has to
+    #: import this module): a block with ``is_sparse`` routes through
+    #: the sparse backend primitive instead of ``jnp.asarray(blk)``.
+    is_sparse = True
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        w, m = self.csr_t.shape
+        return (m, w)
+
+    @property
+    def dtype(self):
+        return self.csr_t.dtype
+
+    @property
+    def nnz(self) -> int:
+        return self.csr_t.nnz
+
+    @functools.cached_property
+    def csr(self) -> CSRMatrix:
+        return self.csr_t.transpose()
+
+    def toarray(self) -> np.ndarray:
+        return self.csr_t.to_dense().T
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRColumnBlockSource:
+    """Column-block source over a CSR matrix (the sparse sibling of
+    :class:`repro.data.pipeline.ColumnBlockLoader`).
+
+    ``csc`` holds the master as the CSR of ``X^T`` (row ``j`` of ``csc``
+    = column ``j`` of ``X``), so restricting to a host's column range
+    ``[col_lo, col_hi)`` — and every block within it — is an ``indptr``
+    slice: zero-copy in memory, one contiguous extent per array on a
+    memmap.  Blocks are :class:`SparseBlock` instances cached per
+    ``j0`` (the cache holds the sliced arrays plus the per-block
+    transposed orientation; host memory stays nnz-bound).
+    """
+
+    csc: CSRMatrix
+    block_size: int
+    col_lo: int = 0
+    col_hi: int | None = None
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                     compare=False)
+
+    #: block-source protocol marker: blocks cover axis 1 (columns).
+    block_axis = 1
+    #: sparse-source marker the engine and CSRBlockedOp dispatch on.
+    sparse_format = "csr"
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError(
+                f"block_size must be > 0, got {self.block_size}")
+        n = self.csc.shape[0]
+        hi = n if self.col_hi is None else self.col_hi
+        object.__setattr__(self, "col_hi", hi)
+        if not (0 <= self.col_lo <= hi <= n):
+            raise ValueError(
+                f"need 0 <= col_lo <= col_hi <= n={n}, got "
+                f"col_lo={self.col_lo} col_hi={hi}")
+
+    @classmethod
+    def from_csr(cls, csr: CSRMatrix, block_size: int,
+                 **kw) -> "CSRColumnBlockSource":
+        """Build from the natural (m, n) CSR orientation — one O(nnz)
+        transpose to the CSC master layout."""
+        return cls(csr.transpose(), block_size, **kw)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.csc.shape[1], self.col_hi - self.col_lo)
+
+    @property
+    def dtype(self):
+        return self.csc.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Nonzeros inside this source's column range."""
+        return int(np.asarray(self.csc.indptr[self.col_hi])
+                   - np.asarray(self.csc.indptr[self.col_lo]))
+
+    @property
+    def num_blocks(self) -> int:
+        return -(-(self.col_hi - self.col_lo) // self.block_size)
+
+    def _block(self, j0: int) -> SparseBlock:
+        blk = self._cache.get(j0)
+        if blk is None:
+            width = self.col_hi - self.col_lo
+            lo = self.col_lo + j0
+            hi = self.col_lo + min(j0 + self.block_size, width)
+            p0 = int(np.asarray(self.csc.indptr[lo]))
+            p1 = int(np.asarray(self.csc.indptr[hi]))
+            # np.ascontiguousarray forces the memmap read here, like the
+            # dense loaders, and keeps the slices plain ndarrays.
+            csr_t = CSRMatrix(
+                np.asarray(self.csc.indptr[lo:hi + 1]) - p0,
+                np.ascontiguousarray(self.csc.indices[p0:p1]),
+                np.ascontiguousarray(self.csc.data[p0:p1]),
+                (hi - lo, self.csc.shape[1]), validate=False)
+            blk = self._cache[j0] = SparseBlock(csr_t)
+        return blk
+
+    def iter_blocks(self):
+        width = self.col_hi - self.col_lo
+        for j0 in range(0, width, self.block_size):
+            yield j0, self._block(j0)
+
+    def split(self, num_shards: int) -> tuple["CSRColumnBlockSource", ...]:
+        """Even column-range split into ``num_shards`` sub-sources (the
+        first ``width % num_shards`` get one extra column) — the sparse
+        route into :class:`repro.core.linop.CSRShardedBlockedOp`.  An
+        all-zero column range is a valid shard: its blocks simply carry
+        zero nonzeros."""
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be > 0, got {num_shards}")
+        width = self.col_hi - self.col_lo
+        base, extra = divmod(width, num_shards)
+        out, lo = [], self.col_lo
+        for p in range(num_shards):
+            w = base + (1 if p < extra else 0)
+            out.append(dataclasses.replace(self, col_lo=lo, col_hi=lo + w,
+                                           _cache={}))
+            lo += w
+        return tuple(out)

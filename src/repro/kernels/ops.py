@@ -67,6 +67,45 @@ def row_sharded_rmatmat(source, B_loc, *,
         .row_sharded_rmatmat(source, B_loc)
 
 
+def sparse_shifted_matmat(source, B, mu, *, interpret: bool | None = None,
+                          backend: str | None = None):
+    """(X - mu 1^T) @ B from a CSR column-block source, one fused sparse
+    contact per slab (DESIGN.md §13) — the rank-1 shift correction is
+    decomposed per column block (``w_blk = 1^T B_blk``) and fused into
+    each slab's SpMM epilogue."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sparse_shifted_matmat(source, B, mu)
+
+
+def sparse_shifted_rmatmat(source, B, mu, *, interpret: bool | None = None,
+                           backend: str | None = None):
+    """(X - mu 1^T)^T @ B from a CSR column-block source; each slab's
+    transposed contact runs on its native (transpose-free) CSR-of-X^T
+    arrays with the shift fused as ``u = 1, w = mu^T B``."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sparse_shifted_rmatmat(source, B, mu)
+
+
+def sparse_shifted_gram_matmat(source, B, mu, *,
+                               interpret: bool | None = None,
+                               backend: str | None = None):
+    """(X - mu 1^T)(X - mu 1^T)^T @ B from a CSR column-block source —
+    both orientations of each slab run while it is resident (single
+    pass), with the shift applied once via ``rank1_correct``."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sparse_shifted_gram_matmat(source, B, mu)
+
+
+def csr_matmul_rank1(data, indices, indptr, B, u, w, *, shape,
+                     interpret: bool | None = None,
+                     backend: str | None = None):
+    """The raw fused sparse primitive ``A @ B - u w^T`` for host CSR
+    arrays (sorted, duplicate-free); transposed contacts pass the
+    transposed CSR.  ``u``/``w`` both None skips the correction."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sparse_matmul_rank1(data, indices, indptr, B, u, w, shape=shape)
+
+
 def xbar_fro_norm2(X, mu, *, interpret: bool | None = None,
                    backend: str | None = None):
     """``||X - mu 1^T||_F^2`` without materializing the shift — the

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: CSR SpMM with rank-1 epilogue ``C = A @ B - u w^T``.
+
+The sparse twin of :mod:`repro.kernels.shifted_matmul` (DESIGN.md §13):
+every sparse contact S-RSVD makes has the form ``A @ B - u w^T`` where A
+is a CSR matrix (a column slab of X, in either orientation) and the
+rank-1 term carries the shift — dense K-vectors that never touch the
+sparse structure.  A naive lowering materializes ``A @ B`` in HBM, reads
+it back and subtracts the outer product; here the f32 accumulator tile
+stays in VMEM across the nonzero contraction and the rank-1 tile is
+subtracted in the epilogue before the single HBM write-back — the same
+accumulator/epilogue structure as the dense kernel.
+
+Layout: the host packs the CSR rows into ELL form — a dense
+``(m, L)`` grid of column indices and values, ``L`` the max row
+population rounded up to ``bl`` (absent slots hold ``col=0, val=0``, so
+they contribute exactly nothing).  The kernel grid is
+``(m / bm, L / bl)``: each step gathers the ``bl`` B-rows its index tile
+names (``jnp.take``), scales by the value tile and accumulates
+``(bm, K)`` partial products in VMEM; the last ``l``-step subtracts
+``u w^T`` and writes back once.  B rides whole (sparse contacts have
+K ≤ a few dozen columns, so the (n, K) block fits VMEM comfortably at
+the problem sizes this repo targets; a giant-n variant would tile B and
+re-gather per tile).
+
+The ELL pack is O(nnz) host numpy per call; the streaming operators
+cache their blocks, so per power-iteration pass the pack runs once per
+slab — in the same cost class as the per-block transpose the CSR source
+already performs.  Values are packed as f32: the device path promotes
+integer CSR data to the float result type anyway (the PR 2
+integer-operator rule), so packing does it once on the host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU-only helpers; fall back cleanly when running interpret-mode.
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+    _COMPILER_PARAMS = None
+
+
+def _round_up(x: int, t: int) -> int:
+    return -(-x // t) * t
+
+
+def _kernel(cols_ref, vals_ref, b_ref, u_ref, w_ref, o_ref, acc_ref, *,
+            nl: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cols = cols_ref[...]                         # (bm, bl) int32
+    vals = vals_ref[...].astype(jnp.float32)     # (bm, bl)
+    b = b_ref[...].astype(jnp.float32)           # (n_p, Kp)
+    gathered = jnp.take(b, cols, axis=0)         # (bm, bl, Kp)
+    acc_ref[...] += (gathered * vals[..., None]).sum(axis=1)
+
+    @pl.when(pl.program_id(1) == nl - 1)
+    def _epilogue():
+        rank1 = u_ref[...].astype(jnp.float32) * w_ref[...].astype(
+            jnp.float32)                         # (bm,1)*(1,Kp) outer
+        o_ref[...] = (acc_ref[...] - rank1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nl", "bm", "bl", "out_dtype",
+                                    "interpret"))
+def _spmm_rank1(cols, vals, B_p, u_p, w_p, *, nl: int, bm: int, bl: int,
+                out_dtype, interpret: bool):
+    mp, L = cols.shape
+    Kp = B_p.shape[1]
+    grid = (mp // bm, nl)
+    kwargs = {}
+    if _COMPILER_PARAMS is not None and not interpret:
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_kernel, nl=nl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bl), lambda i, l: (i, l)),     # noqa: E741
+            pl.BlockSpec((bm, bl), lambda i, l: (i, l)),     # noqa: E741
+            pl.BlockSpec(B_p.shape, lambda i, l: (0, 0)),    # noqa: E741
+            pl.BlockSpec((bm, 1), lambda i, l: (i, 0)),      # noqa: E741
+            pl.BlockSpec((1, Kp), lambda i, l: (0, 0)),      # noqa: E741
+        ],
+        out_specs=pl.BlockSpec((bm, Kp), lambda i, l: (i, 0)),  # noqa: E741
+        out_shape=jax.ShapeDtypeStruct((mp, Kp), out_dtype),
+        scratch_shapes=[
+            _VMEM((bm, Kp), jnp.float32) if _VMEM is not None
+            else pl.MemorySpace.ANY  # pragma: no cover
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(cols, vals, B_p, u_p, w_p)
+
+
+def _ell_pack(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+              m: int, bm: int, bl: int):
+    """CSR -> ELL: (mp, L) index/value grids, absent slots (0, 0.0)."""
+    indptr = np.asarray(indptr)
+    row_nnz = indptr[1:] - indptr[:-1]
+    L = int(row_nnz.max()) if row_nnz.size else 0
+    L = max(_round_up(L, bl), bl)
+    mp = _round_up(max(m, 1), bm)
+    cols = np.zeros((mp, L), dtype=np.int32)
+    vals = np.zeros((mp, L), dtype=np.float32)
+    if indices.size:
+        rows_of = np.repeat(np.arange(m), row_nnz)
+        offs = np.arange(indices.size) - np.repeat(indptr[:-1], row_nnz)
+        cols[rows_of, offs] = np.asarray(indices)
+        vals[rows_of, offs] = np.asarray(data)
+    return cols, vals
+
+
+def csr_matmul_rank1(data, indices, indptr, B, u, w, *,
+                     shape: tuple[int, int], bm: int = 256, bl: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """``A @ B - u w^T`` for a CSR matrix A of ``shape`` (m, n).
+
+    ``data``/``indices``/``indptr`` are the host CSR arrays (sorted,
+    duplicate-free rows); B is (n, K); ``u`` (m,) / ``w`` (K,) carry the
+    rank-1 shift correction, or both None for the plain product.  The
+    transposed contact is expressed by passing the transposed CSR — the
+    kernel itself has no transpose flag.  Returns (m, K) in the promoted
+    result dtype, matching the XLA BCSR composition to fp32 noise.
+    """
+    m, n = int(shape[0]), int(shape[1])
+    B = jnp.asarray(B)
+    K = int(B.shape[1])
+    data = np.asarray(data)
+    out_dtype = jnp.promote_types(
+        jax.dtypes.canonicalize_dtype(data.dtype), B.dtype)
+    if m == 0 or K == 0:
+        return jnp.zeros((m, K), out_dtype)
+    if data.size == 0 or n == 0:
+        out = jnp.zeros((m, K), out_dtype)
+        if u is None:
+            return out
+        from repro.core.contact import rank1_correct
+        return rank1_correct(out, jnp.asarray(u, out_dtype),
+                             jnp.asarray(w, out_dtype))
+    bm = min(bm, _round_up(m, 8))
+    cols, vals = _ell_pack(indptr, indices, data, m, bm, bl)
+    mp, L = cols.shape
+    Kp = _round_up(K, 128)
+    n_p = _round_up(n, 8)
+    B_p = jnp.pad(B, ((0, n_p - n), (0, Kp - K)))
+    if u is None:
+        u_p = jnp.zeros((mp, 1), jnp.float32)
+        w_p = jnp.zeros((1, Kp), jnp.float32)
+    else:
+        u_p = jnp.pad(jnp.asarray(u, out_dtype).reshape(m, 1),
+                      ((0, mp - m), (0, 0)))
+        w_p = jnp.pad(jnp.asarray(w, out_dtype).reshape(1, K),
+                      ((0, 0), (0, Kp - K)))
+    out = _spmm_rank1(jnp.asarray(cols), jnp.asarray(vals), B_p, u_p, w_p,
+                      nl=L // bl, bm=bm, bl=bl, out_dtype=out_dtype,
+                      interpret=interpret)
+    return out[:m, :K]

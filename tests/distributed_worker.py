@@ -211,6 +211,89 @@ def check_row_streamed_matches_dense():
                                     onp.asarray(p_d.mean_), atol=1e-6)
 
 
+def check_sparse_streamed_matches_dense():
+    """The sparse out-of-core path (`dist_srsvd_streamed` over a
+    `CSRShardedBlockedOp`, 8 column ranges, awkward block size — every
+    contact runs the fused sparse slab primitives, DESIGN.md §13)
+    produces the same factors as the dense resident-shard `dist_srsvd`
+    of the densified matrix — same key, fixed and dynamic shifts,
+    8-device mesh, ≤1e-5 relative on reconstruction and S.  Also
+    covers integer CSR payloads (counts matrices): products must
+    promote to float32 and match the float operator exactly."""
+    from repro.core import (CSRShardedBlockedOp, DynamicShift, PCA,
+                            dist_col_mean, dist_srsvd,
+                            dist_srsvd_streamed)
+    from repro.data.sparse import CSRMatrix
+    mesh = _mesh((1, 8), ("model", "data"))
+    rng = onp.random.default_rng(23)
+    m, n, k = 64, 256, 8
+    # low-rank + sparse noise at ~8% density, so the spectrum is real
+    # but most slab rows are empty — the sparse kernels' padding and
+    # empty-row handling are on the hot path, not an edge case.
+    X = (rng.standard_normal((m, 8)) @ rng.standard_normal((8, n))) \
+        .astype(onp.float32)
+    X[rng.random((m, n)) > 0.08] = 0.0
+    csr = CSRMatrix.from_dense(X)
+    Xs = jax.device_put(jnp.asarray(X),
+                        NamedSharding(mesh, P("model", "data")))
+    mu = dist_col_mean(Xs, mesh, "model", "data")
+    # block 9 does not divide the 32-column host ranges: the final
+    # partial block per host is exercised on every sparse contact.
+    op = CSRShardedBlockedOp.from_csr(csr, num_shards=8, block_size=9)
+    onp.testing.assert_allclose(onp.asarray(op.col_mean()),
+                                onp.asarray(mu), atol=1e-6)
+    for sched in (None, DynamicShift()):
+        dense = dist_srsvd(Xs, mu, k, q=2, mesh=mesh,
+                           key=jax.random.PRNGKey(3), shift=sched,
+                           row_axis="model", col_axis="data")
+        stream = dist_srsvd_streamed(op, onp.asarray(mu), k, q=2,
+                                     mesh=mesh,
+                                     key=jax.random.PRNGKey(3),
+                                     shift=sched)
+        rd = onp.asarray(dense.reconstruct())
+        rs = onp.asarray(stream.reconstruct())
+        rel = onp.linalg.norm(rs - rd) / onp.linalg.norm(rd)
+        assert rel <= 1e-5, f"reconstruction rel gap {rel:.2e}"
+        onp.testing.assert_allclose(onp.asarray(stream.S),
+                                    onp.asarray(dense.S),
+                                    rtol=1e-5, atol=5e-5)
+        onp.testing.assert_allclose(onp.asarray(stream.U),
+                                    onp.asarray(dense.U),
+                                    rtol=1e-5, atol=2e-4)
+        onp.testing.assert_allclose(onp.asarray(stream.Vt),
+                                    onp.asarray(dense.Vt),
+                                    rtol=1e-5, atol=2e-4)
+    # PCA front door: a CSRShardedBlockedOp routes through the
+    # streamed column-sharded schedule with the sparse contacts.
+    p_s = PCA(k=5, q=1).fit(op, key=jax.random.PRNGKey(4), mesh=mesh,
+                            streamed=True)
+    p_d = PCA(k=5, q=1).fit(jnp.asarray(X), key=jax.random.PRNGKey(4))
+    onp.testing.assert_allclose(onp.asarray(p_s.singular_values_),
+                                onp.asarray(p_d.singular_values_),
+                                rtol=1e-5, atol=5e-5)
+    onp.testing.assert_allclose(onp.asarray(p_s.mean_),
+                                onp.asarray(p_d.mean_), atol=1e-6)
+    # integer CSR payload (a counts matrix): the sparse contacts
+    # promote to float32 (the PR 2 integer-operator rule) and match
+    # the densified float operator exactly.
+    Xi = (X * 50).astype(onp.int32)
+    opi = CSRShardedBlockedOp.from_csr(CSRMatrix.from_dense(Xi),
+                                       num_shards=8, block_size=9)
+    mui = opi.col_mean()
+    assert mui.dtype == jnp.float32
+    res_i = dist_srsvd_streamed(opi, onp.asarray(mui), k, q=1, mesh=mesh,
+                                key=jax.random.PRNGKey(5))
+    Xif = jax.device_put(jnp.asarray(Xi.astype(onp.float32)),
+                         NamedSharding(mesh, P("model", "data")))
+    res_f = dist_srsvd(Xif, jnp.asarray(mui), k, q=1, mesh=mesh,
+                       key=jax.random.PRNGKey(5),
+                       row_axis="model", col_axis="data")
+    assert res_i.S.dtype == jnp.float32
+    onp.testing.assert_allclose(onp.asarray(res_i.S),
+                                onp.asarray(res_f.S),
+                                rtol=1e-5, atol=5e-4)
+
+
 def check_early_stop_matches_dense():
     """PVEStop through the streamed out-of-core paths: on an 8-fake-
     device mesh, both the column-sharded and the row-sharded

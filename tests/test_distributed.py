@@ -84,6 +84,15 @@ def test_row_streamed_matches_dense_distributed():
     _run("row_streamed_matches_dense")
 
 
+def test_sparse_streamed_matches_dense_distributed():
+    """Sparse out-of-core streaming (`dist_srsvd_streamed` over a
+    `CSRShardedBlockedOp`, per-host column ranges of a CSR matrix,
+    awkward block size, fused sparse slab contacts — DESIGN.md §13)
+    == the dense resident-shard path of the densified matrix, fixed
+    and dynamic shifts, 8 devices; integer CSR payloads promote."""
+    _run("sparse_streamed_matches_dense")
+
+
 def test_early_stop_matches_dense_distributed():
     """PVEStop through the streamed col- and row-sharded paths stops at
     the same iteration as the single-host loop (decision from the

@@ -1,0 +1,333 @@
+"""Sparse CSR containers, operators, fused contacts, and the CSR-native
+co-occurrence generator (DESIGN.md §13)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contact, srsvd
+from repro.core.linop import CSRBlockedOp, CSRShardedBlockedOp, as_linop
+from repro.core.pca import PCA
+from repro.core.schedule import DynamicShift
+from repro.data.cooccurrence import zipf_cooccurrence, zipf_cooccurrence_csr
+from repro.data.sparse import (CSRColumnBlockSource, CSRMatrix, SparseBlock,
+                               open_csr)
+
+
+def _random_sparse(m, n, density=0.15, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, n)).astype(dtype)
+    X[rng.random((m, n)) > density] = 0
+    return X
+
+
+# ---------------------------------------------------------------- CSRMatrix
+
+def test_csr_dense_roundtrip():
+    X = _random_sparse(23, 57)
+    csr = CSRMatrix.from_dense(X)
+    assert csr.shape == (23, 57)
+    assert csr.nnz == int((X != 0).sum())
+    np.testing.assert_array_equal(csr.to_dense(), X)
+    # rows with no nonzeros at the top, middle and bottom
+    X2 = X.copy()
+    X2[[0, 11, 22], :] = 0
+    csr2 = CSRMatrix.from_dense(X2)
+    np.testing.assert_array_equal(csr2.to_dense(), X2)
+    assert csr2.row_nnz()[[0, 11, 22]].sum() == 0
+
+
+def test_csr_transpose_exact():
+    X = _random_sparse(31, 18, seed=3)
+    t = CSRMatrix.from_dense(X).transpose()
+    assert t.shape == (18, 31)
+    np.testing.assert_array_equal(t.to_dense(), X.T)
+    # transpose output is itself a valid sorted CSR
+    CSRMatrix(t.indptr, t.indices, t.data, t.shape, validate=True)
+
+
+def test_csr_row_sums_exact_for_counts():
+    X = np.zeros((5, 9), dtype=np.int64)
+    rng = np.random.default_rng(0)
+    X[rng.random((5, 9)) > 0.5] = 7
+    csr = CSRMatrix.from_dense(X)
+    np.testing.assert_array_equal(csr.row_sums(), X.sum(axis=1))
+
+
+def test_csr_validation_rejects_bad_structure():
+    # unsorted within a row: actionable message, names the row
+    with pytest.raises(ValueError, match="row 0.*not sorted"):
+        CSRMatrix(np.array([0, 2]), np.array([3, 1]),
+                  np.ones(2, np.float32), (1, 5))
+    # duplicates are "not strictly increasing" too
+    with pytest.raises(ValueError, match="sort each row"):
+        CSRMatrix(np.array([0, 2]), np.array([1, 1]),
+                  np.ones(2, np.float32), (1, 5))
+    # a non-increasing step at a row boundary is fine
+    CSRMatrix(np.array([0, 1, 2]), np.array([4, 0]),
+              np.ones(2, np.float32), (2, 5))
+    with pytest.raises(ValueError, match="indptr"):
+        CSRMatrix(np.array([0, 3]), np.array([0]),
+                  np.ones(1, np.float32), (1, 5))
+    with pytest.raises(ValueError, match=r"lie in \[0, 5\)"):
+        CSRMatrix(np.array([0, 1]), np.array([5]),
+                  np.ones(1, np.float32), (1, 5))
+    with pytest.raises(ValueError, match="lengths disagree"):
+        CSRMatrix(np.array([0, 1]), np.array([0]),
+                  np.ones(2, np.float32), (1, 5))
+
+
+def test_csr_save_open_memmap(tmp_path):
+    X = _random_sparse(12, 40, seed=5)
+    csr = CSRMatrix.from_dense(X)
+    d = csr.save(str(tmp_path / "csr"))
+    re = open_csr(d, mmap=True, validate=True)
+    assert isinstance(re.data, np.memmap)
+    np.testing.assert_array_equal(re.to_dense(), X)
+    # a memmap-resident master feeds the block source unchanged
+    op = CSRBlockedOp(CSRColumnBlockSource.from_csr(re, block_size=7))
+    B = np.random.default_rng(0).standard_normal((40, 3)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matmat(jnp.asarray(B))),
+                               X @ B, atol=1e-5)
+
+
+# ------------------------------------------------------------ block source
+
+def test_block_source_blocks_and_split():
+    X = _random_sparse(9, 20, seed=1)
+    src = CSRColumnBlockSource.from_csr(CSRMatrix.from_dense(X),
+                                        block_size=6)
+    assert src.shape == (9, 20) and src.num_blocks == 4
+    seen = np.zeros_like(X)
+    for j0, blk in src.iter_blocks():
+        assert isinstance(blk, SparseBlock) and blk.is_sparse
+        seen[:, j0:j0 + blk.shape[1]] = blk.toarray()
+        np.testing.assert_array_equal(blk.csr.to_dense(),
+                                      blk.csr_t.to_dense().T)
+    np.testing.assert_array_equal(seen, X)
+    # split covers the range; widths differ by at most one
+    shards = src.split(3)
+    widths = [s.shape[1] for s in shards]
+    assert sum(widths) == 20 and max(widths) - min(widths) <= 1
+    assert sum(s.nnz for s in shards) == src.nnz
+    rebuilt = np.concatenate(
+        [np.concatenate([b.toarray() for _, b in s.iter_blocks()], axis=1)
+         for s in shards], axis=1)
+    np.testing.assert_array_equal(rebuilt, X)
+
+
+def test_block_source_edge_cases():
+    # block size >= n: one block, the whole matrix
+    X = _random_sparse(7, 5, seed=2)
+    src = CSRColumnBlockSource.from_csr(CSRMatrix.from_dense(X),
+                                        block_size=64)
+    blocks = list(src.iter_blocks())
+    assert len(blocks) == 1 and blocks[0][1].shape == (7, 5)
+    # an all-zero column range after split is a valid (0-nnz) shard
+    X2 = np.zeros((4, 12), dtype=np.float32)
+    X2[:, :4] = 1.0
+    shards = CSRColumnBlockSource.from_csr(
+        CSRMatrix.from_dense(X2), block_size=2).split(3)
+    assert shards[-1].nnz == 0
+    B = jnp.ones((4, 2), jnp.float32)
+    zero = contact.get_engine().sharded_shifted_rmatmat(shards[-1], B,
+                                                        None)
+    np.testing.assert_array_equal(np.asarray(zero), 0.0)
+    with pytest.raises(ValueError, match="block_size"):
+        CSRColumnBlockSource.from_csr(CSRMatrix.from_dense(X2),
+                                      block_size=0)
+
+
+# -------------------------------------------------------------- operators
+
+def test_csr_blocked_op_matches_dense():
+    X = _random_sparse(23, 57, seed=4)
+    csr = CSRMatrix.from_dense(X)
+    op = CSRBlockedOp.from_csr(csr, block_size=9)
+    rng = np.random.default_rng(0)
+    B = jnp.asarray(rng.standard_normal((57, 6)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((23, 6)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op.matmat(B)), X @ np.asarray(B),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(C)),
+                               X.T @ np.asarray(C), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(op.col_mean()), X.mean(axis=1),
+                               atol=1e-6)
+    assert op.fro_norm2() == pytest.approx(
+        float((X.astype(np.float64) ** 2).sum()), rel=1e-6)
+    mu = jnp.asarray(X.mean(axis=1))
+    eng = contact.get_engine()
+    Xb64 = (X - X.mean(axis=1, keepdims=True)).astype(np.float64)
+    assert eng.xbar_fro_norm2(op, mu) == pytest.approx(
+        float((Xb64 ** 2).sum()), rel=1e-4)
+    # as_linop routes a CSRMatrix to the sparse operator
+    assert isinstance(as_linop(csr), CSRBlockedOp)
+    with pytest.raises(TypeError, match="sparse"):
+        from repro.data.pipeline import ColumnBlockLoader
+        CSRBlockedOp(ColumnBlockLoader(np.zeros((2, 2), np.float32), 1))
+
+
+def test_engine_sparse_contacts_match_dense():
+    X = _random_sparse(23, 57, seed=6)
+    src = CSRColumnBlockSource.from_csr(CSRMatrix.from_dense(X),
+                                        block_size=9)
+    rng = np.random.default_rng(1)
+    B = jnp.asarray(rng.standard_normal((57, 5)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((23, 5)).astype(np.float32))
+    mu = jnp.asarray(X.mean(axis=1))
+    Xb = X - X.mean(axis=1, keepdims=True)
+    eng = contact.get_engine()
+    np.testing.assert_allclose(
+        np.asarray(eng.sparse_shifted_matmat(src, B, mu)),
+        Xb @ np.asarray(B), atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(eng.sparse_shifted_rmatmat(src, C, mu)),
+        Xb.T @ np.asarray(C), atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(eng.sparse_shifted_gram_matmat(src, C, mu)),
+        Xb @ (Xb.T @ np.asarray(C)), atol=2e-4)
+    # mu=None: the unshifted contacts
+    np.testing.assert_allclose(
+        np.asarray(eng.sparse_shifted_matmat(src, B, None)),
+        X @ np.asarray(B), atol=2e-5)
+
+
+def test_sparse_backend_interpret_matches_xla():
+    """The Pallas ELL kernel (interpret mode on CPU) agrees with the
+    BCSR/XLA sparse backend on every contact orientation."""
+    X = _random_sparse(19, 41, seed=7)
+    src = CSRColumnBlockSource.from_csr(CSRMatrix.from_dense(X),
+                                        block_size=8)
+    rng = np.random.default_rng(2)
+    B = jnp.asarray(rng.standard_normal((41, 4)).astype(np.float32))
+    C = jnp.asarray(rng.standard_normal((19, 4)).astype(np.float32))
+    mu = jnp.asarray(X.mean(axis=1))
+    xla, interp = contact.get_engine("xla"), contact.get_engine("interpret")
+    for name, args in (("sparse_shifted_matmat", (src, B, mu)),
+                       ("sparse_shifted_rmatmat", (src, C, mu)),
+                       ("sparse_shifted_gram_matmat", (src, C, mu))):
+        np.testing.assert_allclose(np.asarray(getattr(interp, name)(*args)),
+                                   np.asarray(getattr(xla, name)(*args)),
+                                   atol=2e-5)
+    assert "xla" in contact.available_sparse_backends()
+    assert "interpret" in contact.available_sparse_backends()
+
+
+def test_srsvd_and_pca_sparse_parity():
+    rng = np.random.default_rng(8)
+    m, n, k = 40, 96, 5
+    X = (rng.standard_normal((m, 8)) @ rng.standard_normal((8, n))) \
+        .astype(np.float32)
+    X[rng.random((m, n)) > 0.2] = 0
+    csr = CSRMatrix.from_dense(X)
+    mu = jnp.asarray(X.mean(axis=1))
+    key = jax.random.PRNGKey(0)
+    for shift in (None, DynamicShift()):
+        d = srsvd(jnp.asarray(X), mu, k, q=2, key=key, shift=shift)
+        s = srsvd(CSRBlockedOp.from_csr(csr, block_size=17), mu, k, q=2,
+                  key=key, shift=shift)
+        rel = np.abs(np.asarray(d.S) - np.asarray(s.S)).max() \
+            / float(np.asarray(d.S)[0])
+        assert rel <= 1e-5, f"shift={shift}: S rel gap {rel:.2e}"
+        np.testing.assert_allclose(np.asarray(s.reconstruct()),
+                                   np.asarray(d.reconstruct()), atol=1e-4)
+    p_d = PCA(k=k, q=2).fit(jnp.asarray(X), key=key)
+    p_s = PCA(k=k, q=2).fit(CSRBlockedOp.from_csr(csr, block_size=17),
+                            key=key)
+    np.testing.assert_allclose(np.asarray(p_s.singular_values_),
+                               np.asarray(p_d.singular_values_),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p_s.mean_), np.asarray(p_d.mean_),
+                               atol=1e-6)
+
+
+def test_sparse_integer_data_promotes_and_matches_dense():
+    """Integer CSR payloads (counts matrices) follow the PR 2 rule:
+    col_mean is float, products promote to the float result type, and
+    everything matches the densified float operator."""
+    rng = np.random.default_rng(9)
+    m, n = 26, 63
+    Xi = rng.integers(0, 5, size=(m, n)).astype(np.int32)
+    Xi[rng.random((m, n)) > 0.12] = 0
+    op = CSRBlockedOp.from_csr(CSRMatrix.from_dense(Xi), block_size=11)
+    mu = op.col_mean()
+    assert mu.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(mu), Xi.mean(axis=1), atol=1e-6)
+    B = jnp.asarray(rng.standard_normal((n, 4)).astype(np.float32))
+    out = op.matmat(B)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), Xi @ np.asarray(B),
+                               atol=2e-4)
+    key = jax.random.PRNGKey(1)
+    ri = srsvd(op, mu, 4, q=1, key=key)
+    rd = srsvd(jnp.asarray(Xi.astype(np.float32)), mu, 4, q=1, key=key)
+    assert ri.S.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(ri.S), np.asarray(rd.S),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_csr_sharded_op_validates_and_splits():
+    X = _random_sparse(10, 24, seed=10)
+    sop = CSRShardedBlockedOp.from_csr(CSRMatrix.from_dense(X),
+                                       num_shards=4, block_size=3)
+    assert len(sop.shards) == 4 and sop.shape == (10, 24)
+    B = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((24, 3)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(sop.matmat(B)),
+                               X @ np.asarray(B), atol=2e-5)
+    from repro.data.pipeline import ColumnBlockLoader
+    with pytest.raises(TypeError, match="sparse"):
+        CSRShardedBlockedOp(
+            shards=(ColumnBlockLoader(np.zeros((2, 2), np.float32), 1),))
+
+
+# ------------------------------------------------------------ cooccurrence
+
+def _legacy_zipf(m, n, *, n_pairs, rank=20, a=1.2, seed=0,
+                 dtype=np.float32):
+    """The original per-topic np.add.at dense accumulation — kept here
+    verbatim as the bit-equality pin for the vectorized generator."""
+    rng = np.random.default_rng(seed)
+    topic_ctx = rng.dirichlet(np.ones(m) * 0.05, size=rank)
+    topic_tgt = rng.dirichlet(np.ones(n) * 0.05, size=rank)
+    zipf_w = 1.0 / np.arange(1, rank + 1) ** a
+    zipf_w /= zipf_w.sum()
+    counts = np.zeros((m, n), dtype=np.float64)
+    topics = rng.choice(rank, size=n_pairs, p=zipf_w)
+    for r in range(rank):
+        k = int((topics == r).sum())
+        if k == 0:
+            continue
+        ci = rng.choice(m, size=k, p=topic_ctx[r])
+        ti = rng.choice(n, size=k, p=topic_tgt[r])
+        np.add.at(counts, (ci, ti), 1.0)
+    col_tot = counts.sum(axis=0, keepdims=True)
+    X = (counts / np.maximum(col_tot, 1.0)).astype(dtype)
+    return X, float((X != 0).mean())
+
+
+def test_zipf_cooccurrence_bit_equal_to_legacy_loop():
+    for m, n, pairs, seed in ((50, 120, 30_000, 0), (80, 40, 9_000, 7)):
+        Xo, do = _legacy_zipf(m, n, n_pairs=pairs, seed=seed)
+        Xn, _, dn = zipf_cooccurrence(m, n, n_pairs=pairs, seed=seed)
+        np.testing.assert_array_equal(Xn, Xo)
+        assert dn == do
+        csr, dc = zipf_cooccurrence_csr(m, n, n_pairs=pairs, seed=seed)
+        np.testing.assert_array_equal(csr.to_dense(), Xo)
+        assert dc == do
+        # the emitted CSR is valid sorted/duplicate-free structure
+        CSRMatrix(csr.indptr, csr.indices, csr.data, csr.shape,
+                  validate=True)
+
+
+def test_zipf_cooccurrence_csr_feeds_sparse_pca():
+    csr, density = zipf_cooccurrence_csr(60, 150, n_pairs=40_000, seed=3)
+    assert 0 < density < 1
+    op = CSRBlockedOp.from_csr(csr, block_size=32)
+    p = PCA(k=4, q=1).fit(op, key=jax.random.PRNGKey(2))
+    p_d = PCA(k=4, q=1).fit(jnp.asarray(csr.to_dense()),
+                            key=jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.asarray(p.singular_values_),
+                               np.asarray(p_d.singular_values_),
+                               rtol=1e-5, atol=1e-5)
