@@ -52,7 +52,7 @@ def fig1a(rows):
     X = _sample("uniform", M, 1000, rng)
     for k in (1, 2, 5, 10, 20, 50):
         mse_s, mse_r, _, _ = run_pair(X, k, seed=k)
-        rows.append(("fig1a_k%d" % k, f"{mse_s:.4f}", f"{mse_r:.4f}"))
+        rows.append((f"fig1a_k{k}", f"{mse_s:.4f}", f"{mse_r:.4f}"))
 
 
 def fig1b(rows):

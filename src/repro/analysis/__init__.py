@@ -1,0 +1,43 @@
+"""repro.analysis — repo-specific static analysis (DESIGN.md §14).
+
+Six PRs concentrated every matrix contact behind the ``ContactEngine``
+registries, the sharded per-block contacts and the ``kernels/ops.py``
+wrappers — but the load-bearing invariants (single rank-1 shift
+algebra, registry parity, float64 host reductions, ``block_axis``
+discipline, strict-promotion-clean dtype rules) were enforced only by
+convention and runtime parity tests.  This package enforces them at
+lint time, with two engines:
+
+1. **Architectural AST lint** (:mod:`repro.analysis.lint`,
+   :mod:`repro.analysis.rules`): rule classes with stable IDs (RC001,
+   RS002, BA003, DT004, DT005, IM006, OW007, DE008) over the source
+   tree, each with a per-line ``# repro-lint: disable=RULE`` escape
+   hatch.
+
+2. **Abstract contract checker** (:mod:`repro.analysis.contracts`):
+   every registered ``(backend x contact)`` pair — dense and sparse
+   registries plus the sharded/streamed engine contacts — is abstractly
+   interpreted with ``jax.eval_shape`` on a representative shape/dtype
+   grid (integer promotion, non-dividing block sizes) under *strict*
+   dtype promotion, and its output shapes/dtypes are compared against
+   the ``interpret`` reference backend.  No kernel executes.
+   :mod:`repro.analysis.kernelspec` statically validates the Pallas
+   kernel block-spec structure (grid divisibility, f32 VMEM
+   accumulator, single HBM write-back) for ``shifted_matmul.py`` and
+   ``sparse_matmul.py``.
+
+Run ``python -m repro.analysis`` from a checkout (exit 0 = clean);
+pass file/directory arguments to lint only those (the violation-
+fixture mode the analyzer's own tests use).
+"""
+from repro.analysis.contracts import (check_contracts, coverage_report,
+                                      expected_pairs)
+from repro.analysis.kernelspec import check_kernel_specs
+from repro.analysis.lint import (LintError, ModuleFile, Violation,
+                                 all_rules, load_file, run_lint)
+
+__all__ = [
+    "LintError", "ModuleFile", "Violation", "all_rules", "load_file",
+    "run_lint", "check_contracts", "coverage_report", "expected_pairs",
+    "check_kernel_specs",
+]

@@ -1,0 +1,108 @@
+"""``python -m repro.analysis`` — the repo's static gate.
+
+No arguments: lint ``src/repro`` (with tests/benchmarks/examples as the
+reference corpus for cross-file rules), validate the Pallas kernel
+specs, and abstractly check every registered (backend x contact) pair.
+Exit 0 when clean, 1 on findings, 2 on an internal error.
+
+With path arguments: lint only those files/directories (fixture mode —
+cross-file rules still run, scoped to the given files; contracts and
+kernel specs are skipped unless forced).  This is how the analyzer's
+own test suite feeds it single-violation fixtures.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import contracts as _contracts
+from repro.analysis import kernelspec as _kernelspec
+from repro.analysis.lint import LintError, all_rules, run_lint
+
+
+def _repo_paths():
+    """(lint root, reference corpus) resolved from the installed package
+    — works from any working directory."""
+    import repro
+    src = Path(repro.__file__).parent
+    repo = src.parent.parent
+    reference = [p for p in (repo / "tests", repo / "benchmarks",
+                             repo / "examples") if p.is_dir()]
+    return [src], reference
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="architectural lint + abstract contract checker")
+    parser.add_argument("paths", nargs="*",
+                        help="files/dirs to lint (default: src/repro "
+                             "plus kernel specs plus contracts)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--no-contracts", action="store_true",
+                        help="skip the abstract contract sweep")
+    parser.add_argument("--no-kernelspec", action="store_true",
+                        help="skip the Pallas kernel spec validation")
+    parser.add_argument("--contracts", action="store_true",
+                        help="force the contract sweep in fixture mode")
+    parser.add_argument("--kernelspec", action="store_true",
+                        help="force kernel spec validation over the "
+                             "given paths in fixture mode")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.title}")
+        return 0
+
+    fixture_mode = bool(args.paths)
+    if fixture_mode:
+        paths, reference = args.paths, []
+    else:
+        paths, reference = _repo_paths()
+
+    failures = 0
+
+    try:
+        violations = run_lint(paths, reference_paths=reference)
+    except LintError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for v in violations:
+        print(v.format())
+    failures += len(violations)
+
+    if (not fixture_mode and not args.no_kernelspec) or args.kernelspec:
+        kpaths = [Path(p) for p in args.paths] if fixture_mode else None
+        issues = _kernelspec.check_kernel_specs(kpaths)
+        for issue in issues:
+            print(issue.format())
+        failures += len(issues)
+
+    if (not fixture_mode and not args.no_contracts) or args.contracts:
+        results = _contracts.check_contracts()
+        bad = [r for r in results if not r.ok]
+        for r in bad:
+            print(r.format())
+        failures += len(bad)
+        covered, missing = _contracts.coverage_report(results)
+        if missing:
+            for pair in sorted(missing):
+                print(f"[FAIL] uncovered (backend x contact) pair: "
+                      f"{pair[0]}.{pair[1]}")
+            failures += len(missing)
+        print(f"contracts: {len(results)} cases over "
+              f"{len(covered)} (backend x contact) pairs"
+              f"{'' if not bad and not missing else ' — FAILURES above'}")
+
+    if failures:
+        print(f"repro.analysis: {failures} finding(s)")
+        return 1
+    print("repro.analysis: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,306 @@
+"""Abstract contract checker: every registered (backend x contact) pair.
+
+For each backend in the dense and sparse registries, every engine
+contact is abstractly interpreted with :func:`jax.eval_shape` — under
+``jax_numpy_dtype_promotion='strict'``, so any implicit promotion a
+backend still relies on surfaces as a static failure — and the
+resulting output shapes/dtypes are compared against the ``interpret``
+reference backend on the same case.  Nothing executes: Pallas kernels
+are traced (their block specs, grids and in-kernel dtype rules are all
+exercised by abstract evaluation) but never lowered or run, so the
+whole sweep takes O(seconds) on any host.
+
+The case grid is deliberately adversarial along the axes previous PRs
+broke on:
+
+* **integer promotion** — an int32 operator against a float32 right
+  factor (the integer-operator rule: products promote, casts explicit);
+* **mixed precision** — bfloat16 x bfloat16 (the accumulate-f32 /
+  round-once rule);
+* **non-dividing blocks** — block sizes that do not divide the streamed
+  axis, and a CSR matrix with an empty row;
+* **mu=None** — the unshifted branch of every shifted contact.
+
+Block sources are concrete host arrays (their ``iter_blocks`` loops run
+at trace time, exactly as in production); only the device-side operands
+(``B``, ``mu``, ``u``, ``w``) are abstract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import contact
+from repro.data.pipeline import ColumnBlockLoader, RowBlockLoader
+from repro.data.sparse import CSRColumnBlockSource, CSRMatrix
+
+REFERENCE_BACKEND = "interpret"
+
+#: Contact points checked against the *dense* registry, per backend.
+DENSE_CONTACTS = ("matmul_rank1", "dense_shifted_matmat",
+                  "dense_shifted_rmatmat")
+#: Contact points checked against the *sparse* registry, per backend.
+SPARSE_CONTACTS = ("sparse_matmul_rank1", "sparse_shifted_matmat",
+                   "sparse_shifted_rmatmat", "sparse_shifted_gram_matmat")
+#: The three sharded (per-column-range) streamed contacts plus their
+#: row-sharded siblings — dense-registry backed (per-block products
+#: route through the dense primitive).
+SHARDED_CONTACTS = ("sharded_matmat", "sharded_shifted_rmatmat",
+                    "sharded_shifted_gram_matmat",
+                    "row_sharded_shifted_matmat", "row_sharded_rmatmat")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractResult:
+    backend: str
+    contact: str
+    case: str
+    ok: bool
+    detail: str = ""
+
+    def format(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        msg = f"[{status}] {self.backend}.{self.contact} {self.case}"
+        return msg if self.ok else f"{msg}: {self.detail}"
+
+
+def expected_pairs() -> set[tuple[str, str]]:
+    """Every (backend, contact) pair the checker must cover: the full
+    dense registry x (dense + sharded contacts) plus the full sparse
+    registry x sparse contacts."""
+    pairs: set[tuple[str, str]] = set()
+    for b in contact.available_backends():
+        for c in DENSE_CONTACTS + SHARDED_CONTACTS:
+            pairs.add((b, c))
+    for b in contact.available_sparse_backends():
+        for c in SPARSE_CONTACTS:
+            pairs.add((b, c))
+    return pairs
+
+
+def _abstract(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _eval_strict(fn, *args):
+    """eval_shape under strict dtype promotion — the static proof that a
+    contact is strict-clean (DT005's runtime twin)."""
+    with jax.numpy_dtype_promotion("strict"):
+        return jax.eval_shape(fn, *args)
+
+
+def _tree_sig(tree):
+    return jax.tree_util.tree_map(
+        lambda s: (tuple(s.shape), jnp.dtype(s.dtype).name), tree)
+
+
+def _compare(backend, name, case, fn_backend, fn_reference, args,
+             results):
+    """Abstractly evaluate one case on ``backend`` and on the reference,
+    recording a ContractResult (failures carry the mismatch or the
+    tracing error)."""
+    try:
+        got = _tree_sig(_eval_strict(fn_backend, *args))
+    except Exception as e:  # noqa: BLE001 - any trace failure is a finding
+        results.append(ContractResult(backend, name, case, False,
+                                      f"{type(e).__name__}: {e}"))
+        return
+    try:
+        want = _tree_sig(_eval_strict(fn_reference, *args))
+    except Exception as e:  # noqa: BLE001
+        results.append(ContractResult(backend, name, case, False,
+                                      f"reference failed: {e}"))
+        return
+    if got != want:
+        results.append(ContractResult(
+            backend, name, case, False,
+            f"shape/dtype disagreement: got {got}, reference {want}"))
+    else:
+        results.append(ContractResult(backend, name, case, True))
+
+
+# -- dense registry ---------------------------------------------------------
+
+# (m, n, K) grids: a small odd-shaped case and one matching the Pallas
+# tile structure's padding path.
+_DENSE_SHAPES = ((9, 7, 3), (40, 16, 8))
+_DENSE_DTYPES = (("float32", "float32"), ("int32", "float32"),
+                 ("bfloat16", "bfloat16"))
+
+
+def _check_dense(engine, reference, results):
+    b = engine.backend
+    for (m, n, k) in _DENSE_SHAPES:
+        for da, db in _DENSE_DTYPES:
+            for ta in (False, True):
+                case = f"m{m}n{n}k{k}-{da}x{db}-T{int(ta)}"
+                rows_b, len_u = ((m, n) if ta else (n, m))
+                args = (_abstract((m, n), da), _abstract((rows_b, k), db),
+                        _abstract((len_u,), db), _abstract((k,), db))
+                _compare(
+                    b, "matmul_rank1", case,
+                    lambda A, B, u, w, _ta=ta: engine.matmul_rank1(
+                        A, B, u, w, transpose_a=_ta),
+                    lambda A, B, u, w, _ta=ta: reference.matmul_rank1(
+                        A, B, u, w, transpose_a=_ta),
+                    args, results)
+            case = f"m{m}n{n}k{k}-{da}x{db}"
+            args = (_abstract((m, n), da), _abstract((n, k), db),
+                    _abstract((m,), db))
+            _compare(b, "dense_shifted_matmat", case,
+                     engine.dense_shifted_matmat,
+                     reference.dense_shifted_matmat, args, results)
+            args = (_abstract((m, n), da), _abstract((m, k), db),
+                    _abstract((m,), db))
+            _compare(b, "dense_shifted_rmatmat", case,
+                     engine.dense_shifted_rmatmat,
+                     reference.dense_shifted_rmatmat, args, results)
+
+
+# -- sparse registry --------------------------------------------------------
+
+
+def _toy_csr(dtype) -> CSRMatrix:
+    """(6, 9) CSR with an empty row and uneven row fill."""
+    rng = np.random.default_rng(0)
+    X = rng.integers(-3, 4, size=(6, 9)).astype(dtype)
+    X[np.abs(X) < 2] = 0
+    X[2, :] = 0                       # empty row: indptr plateau
+    X[0, 0] = 3                       # keep the matrix non-trivial
+    return CSRMatrix.from_dense(X)
+
+
+def _check_sparse(engine, reference, results):
+    b = engine.backend
+    k = 4
+    for dtype in ("float32", "int32"):
+        csr = _toy_csr(dtype)
+        m, n = csr.shape
+        for with_shift in (False, True):
+            case = f"csr{m}x{n}-{dtype}-shift{int(with_shift)}"
+
+            def fn(eng):
+                def run(B, u, w, _eng=eng, _s=with_shift):
+                    return _eng.sparse_matmul_rank1(
+                        csr.data, csr.indices, csr.indptr, B,
+                        u if _s else None, w if _s else None,
+                        shape=csr.shape)
+                return run
+
+            args = (_abstract((n, k), "float32"),
+                    _abstract((m,), "float32"), _abstract((k,), "float32"))
+            _compare(b, "sparse_matmul_rank1", case, fn(engine),
+                     fn(reference), args, results)
+
+        source = CSRColumnBlockSource.from_csr(csr, 2)   # 2 ∤ 9
+        for with_shift in (False, True):
+            case = f"csr{m}x{n}-{dtype}-blk2-shift{int(with_shift)}"
+
+            def shifted(method):
+                def run(B, mu, _m=method, _s=with_shift):
+                    return _m(source, B, mu if _s else None)
+                return run
+
+            args = (_abstract((n, k), "float32"), _abstract((m,), "float32"))
+            _compare(b, "sparse_shifted_matmat", case,
+                     shifted(engine.sparse_shifted_matmat),
+                     shifted(reference.sparse_shifted_matmat),
+                     args, results)
+            args = (_abstract((m, k), "float32"), _abstract((m,), "float32"))
+            _compare(b, "sparse_shifted_rmatmat", case,
+                     shifted(engine.sparse_shifted_rmatmat),
+                     shifted(reference.sparse_shifted_rmatmat),
+                     args, results)
+            _compare(b, "sparse_shifted_gram_matmat", case,
+                     shifted(engine.sparse_shifted_gram_matmat),
+                     shifted(reference.sparse_shifted_gram_matmat),
+                     args, results)
+
+
+# -- sharded / streamed contacts -------------------------------------------
+
+
+def _check_sharded(engine, reference, results):
+    b = engine.backend
+    k = 4
+    rng = np.random.default_rng(1)
+    for dtype in ("float32", "int32"):
+        X = rng.standard_normal((8, 10)).astype("float32")
+        X = X.astype(dtype)
+        col_src = ColumnBlockLoader(X, block_size=3)       # 3 ∤ 10
+        row_src = RowBlockLoader(rng.standard_normal(
+            (10, 4)).astype(dtype), block_size=4)          # 4 ∤ 10
+        m, n = col_src.shape
+
+        case = f"{dtype}-blk3"
+        args = (_abstract((n, k), "float32"),)
+        _compare(b, "sharded_matmat", case,
+                 lambda B: engine.sharded_matmat(col_src, B),
+                 lambda B: reference.sharded_matmat(col_src, B),
+                 args, results)
+
+        for with_shift in (False, True):
+            case = f"{dtype}-blk3-shift{int(with_shift)}"
+
+            def shifted(method, src):
+                def run(B, mu, _m=method, _src=src, _s=with_shift):
+                    return _m(_src, B, mu if _s else None)
+                return run
+
+            args = (_abstract((m, k), "float32"), _abstract((m,), "float32"))
+            _compare(b, "sharded_shifted_rmatmat", case,
+                     shifted(engine.sharded_shifted_rmatmat, col_src),
+                     shifted(reference.sharded_shifted_rmatmat, col_src),
+                     args, results)
+            _compare(b, "sharded_shifted_gram_matmat", case,
+                     shifted(engine.sharded_shifted_gram_matmat, col_src),
+                     shifted(reference.sharded_shifted_gram_matmat,
+                             col_src), args, results)
+
+            rm, rn = row_src.shape
+            args = (_abstract((rn, k), "float32"),
+                    _abstract((rm,), "float32"))
+            _compare(b, "row_sharded_shifted_matmat", case,
+                     shifted(engine.row_sharded_shifted_matmat, row_src),
+                     shifted(reference.row_sharded_shifted_matmat,
+                             row_src), args, results)
+
+        rm, _ = row_src.shape
+        args = (_abstract((rm, k), "float32"),)
+        _compare(b, "row_sharded_rmatmat", f"{dtype}-blk4",
+                 lambda B: engine.row_sharded_rmatmat(row_src, B),
+                 lambda B: reference.row_sharded_rmatmat(row_src, B),
+                 args, results)
+
+
+# -- driver -----------------------------------------------------------------
+
+
+def check_contracts(backends=None) -> list[ContractResult]:
+    """Run the full abstract sweep.  ``backends`` restricts the dense/
+    sharded portion (default: every registered backend); the sparse
+    portion always sweeps the sparse registry."""
+    reference = contact.get_engine(REFERENCE_BACKEND)
+    results: list[ContractResult] = []
+    dense_backends = tuple(backends) if backends is not None \
+        else contact.available_backends()
+    for b in dense_backends:
+        engine = contact.get_engine(b)
+        _check_dense(engine, reference, results)
+        _check_sharded(engine, reference, results)
+    for b in contact.available_sparse_backends():
+        engine = contact.get_engine(b)
+        _check_sparse(engine, reference, results)
+    return results
+
+
+def coverage_report(results) -> tuple[set[tuple[str, str]],
+                                      set[tuple[str, str]]]:
+    """(covered, missing) (backend, contact) pairs for ``results``
+    against :func:`expected_pairs` — the 100%-coverage gate CI enforces
+    on top of the pass/fail verdicts."""
+    covered = {(r.backend, r.contact) for r in results}
+    return covered, expected_pairs() - covered

@@ -1,0 +1,292 @@
+"""Static Pallas kernel block-spec validation (no execution, no jax).
+
+The two fused kernels (:mod:`repro.kernels.shifted_matmul`,
+:mod:`repro.kernels.sparse_matmul`) share one structural contract — the
+accumulator/epilogue discipline the whole memory-avoidance story rests
+on:
+
+* **grid divisibility** — every grid extent is an exact ``padded //
+  tile`` quotient (a floor-divide expression, or a name/parameter bound
+  to one), so no partial tiles ever reach the kernel body;
+* **index-map arity** — every ``BlockSpec`` index map takes exactly one
+  argument per grid axis;
+* **f32 VMEM accumulator** — the scratch accumulator is declared
+  ``_VMEM((..., ...), jnp.float32)``: accumulation happens in float32
+  regardless of the operand dtype (the round-once rule);
+* **init-once** — the accumulator is zeroed under
+  ``pl.when(pl.program_id(ax) == 0)``;
+* **single HBM write-back** — the kernel writes ``o_ref`` exactly once,
+  inside a ``pl.when(pl.program_id(ax) == last)`` epilogue on the same
+  contraction axis as the init, casting through ``o_ref.dtype``;
+* **fused accumulation** — the body accumulates with ``acc_ref[...] +=``
+  (never read-modify-write through HBM).
+
+Everything is checked on the AST — the kernels are never imported, so
+this runs on a CPU container with no TPU libraries in O(ms).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpecIssue:
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: KERNELSPEC {self.message}"
+
+
+def default_kernel_paths() -> list[str]:
+    """The repo's two fused Pallas kernels, located via the package (so
+    the checker works from any working directory)."""
+    import repro.kernels as _k
+    d = Path(_k.__file__).parent
+    return [str(d / "shifted_matmul.py"), str(d / "sparse_matmul.py")]
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_floordiv(node: ast.AST) -> bool:
+    return isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                     ast.FloorDiv)
+
+
+def _floordiv_names(tree: ast.Module) -> set[str]:
+    """Names statically known to hold an exact-quotient value: assigned
+    ``a // b`` anywhere, or parameters that every call site fills with a
+    floor-divide expression."""
+    names: set[str] = set()
+    param_feeds: dict[str, list[bool]] = {}
+    funcs = {n.name: n for n in ast.walk(tree)
+             if isinstance(n, ast.FunctionDef)}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and _is_floordiv(node.value):
+            names.update(t.id for t in node.targets
+                         if isinstance(t, ast.Name))
+        elif isinstance(node, ast.Call):
+            fn = (_dotted(node.func) or "").rsplit(".", 1)[-1]
+            if fn in funcs:
+                for kw in node.keywords:
+                    if kw.arg:
+                        param_feeds.setdefault(kw.arg, []).append(
+                            _is_floordiv(kw.value)
+                            or (isinstance(kw.value, ast.Name)
+                                and kw.value.id in names))
+    names.update(p for p, feeds in param_feeds.items()
+                 if feeds and all(feeds))
+    return names
+
+
+def _program_id_axis(test: ast.AST):
+    """``(axis, kind)`` for a ``pl.program_id(ax) == rhs`` comparison:
+    kind is 'init' (rhs == 0) or 'last' (rhs is ``name - 1`` / a name),
+    else None."""
+    if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.ops[0], ast.Eq)):
+        return None
+    left, right = test.left, test.comparators[0]
+    if not (isinstance(left, ast.Call)
+            and (_dotted(left.func) or "").endswith("program_id")
+            and left.args and isinstance(left.args[0], ast.Constant)):
+        return None
+    axis = left.args[0].value
+    if isinstance(right, ast.Constant) and right.value == 0:
+        return axis, "init"
+    if isinstance(right, ast.BinOp) and isinstance(right.op, ast.Sub) \
+            and isinstance(right.right, ast.Constant) \
+            and right.right.value == 1:
+        return axis, "last"
+    return None
+
+
+def _when_blocks(fn: ast.FunctionDef):
+    """Inner defs decorated with ``pl.when(...)``: list of
+    ``(inner_def, axis, kind)``."""
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.FunctionDef) or node is fn:
+            continue
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and \
+                    (_dotted(dec.func) or "").endswith("when") and dec.args:
+                info = _program_id_axis(dec.args[0])
+                if info is not None:
+                    out.append((node, info[0], info[1]))
+    return out
+
+
+def _writes_to(fn_or_node: ast.AST, ref_suffix: str):
+    """Assignments whose target subscripts a name ending ``ref_suffix``."""
+    for node in ast.walk(fn_or_node):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        else:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Subscript) and \
+                    isinstance(t.value, ast.Name) and \
+                    t.value.id.endswith(ref_suffix):
+                yield node, t.value.id
+
+
+def _check_kernel_fn(path: str, fn: ast.FunctionDef,
+                     issues: list[KernelSpecIssue]) -> None:
+    whens = _when_blocks(fn)
+    init = [(n, ax) for n, ax, kind in whens if kind == "init"]
+    last = [(n, ax) for n, ax, kind in whens if kind == "last"]
+
+    init_axes = set()
+    for node, ax in init:
+        if any(name.startswith("acc") for _, name in
+               _writes_to(node, "_ref")):
+            init_axes.add(ax)
+    if not init_axes:
+        issues.append(KernelSpecIssue(
+            path, fn.lineno,
+            f"kernel {fn.name!r}: no accumulator init under "
+            "pl.when(pl.program_id(ax) == 0)"))
+
+    o_writes = [(n, name) for n, name in _writes_to(fn, "o_ref")]
+    if len(o_writes) != 1:
+        issues.append(KernelSpecIssue(
+            path, fn.lineno,
+            f"kernel {fn.name!r}: expected exactly one o_ref write-back "
+            f"(found {len(o_writes)}) — the single-HBM-write epilogue "
+            "is the kernel's whole point"))
+    epi_axes = set()
+    for node, ax in last:
+        if any(name == "o_ref" for _, name in _writes_to(node, "o_ref")):
+            epi_axes.add(ax)
+    if not epi_axes:
+        issues.append(KernelSpecIssue(
+            path, fn.lineno,
+            f"kernel {fn.name!r}: o_ref write-back is not guarded by "
+            "pl.when(pl.program_id(ax) == last) — every grid step "
+            "would hit HBM"))
+    elif init_axes and epi_axes != init_axes:
+        issues.append(KernelSpecIssue(
+            path, fn.lineno,
+            f"kernel {fn.name!r}: init axis {sorted(init_axes)} != "
+            f"epilogue axis {sorted(epi_axes)} — init and write-back "
+            "must bracket the same contraction axis"))
+
+    has_acc = any(isinstance(node, ast.AugAssign)
+                  and isinstance(node.op, ast.Add)
+                  for node, name in _writes_to(fn, "_ref")
+                  if name.startswith("acc"))
+    if not has_acc:
+        issues.append(KernelSpecIssue(
+            path, fn.lineno,
+            f"kernel {fn.name!r}: no `acc_ref[...] +=` accumulation — "
+            "partial products must stay in the VMEM accumulator"))
+
+
+def _check_pallas_call(path: str, tree: ast.Module, call: ast.Call,
+                       issues: list[KernelSpecIssue]) -> None:
+    kw = {k.arg: k.value for k in call.keywords if k.arg}
+    grid = kw.get("grid")
+    if isinstance(grid, ast.Name):
+        # `grid = (...)` assigned just above the call — resolve it.
+        grid_name = grid.id
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == grid_name
+                    for t in node.targets):
+                grid = node.value
+    n_axes = None
+    if isinstance(grid, ast.Tuple):
+        n_axes = len(grid.elts)
+        quotients = _floordiv_names(tree)
+        for elt in grid.elts:
+            ok = _is_floordiv(elt) or (isinstance(elt, ast.Name)
+                                       and elt.id in quotients)
+            if not ok:
+                issues.append(KernelSpecIssue(
+                    path, elt.lineno,
+                    f"grid extent {ast.unparse(elt)!r} is not a static "
+                    "padded//tile quotient — pad inputs so every grid "
+                    "axis divides exactly (no partial tiles)"))
+    else:
+        issues.append(KernelSpecIssue(
+            path, call.lineno,
+            "pallas_call grid is not a literal tuple — extents must be "
+            "statically checkable quotients"))
+
+    if n_axes is not None:
+        specs: list[ast.AST] = []
+        in_specs = kw.get("in_specs")
+        if isinstance(in_specs, (ast.List, ast.Tuple)):
+            specs.extend(in_specs.elts)
+        if "out_specs" in kw:
+            specs.append(kw["out_specs"])
+        for spec in specs:
+            for sub in ast.walk(spec):
+                if isinstance(sub, ast.Lambda) and \
+                        len(sub.args.args) != n_axes:
+                    issues.append(KernelSpecIssue(
+                        path, sub.lineno,
+                        f"BlockSpec index map takes "
+                        f"{len(sub.args.args)} args but the grid has "
+                        f"{n_axes} axes"))
+
+    scratch = kw.get("scratch_shapes")
+    f32_acc = False
+    if scratch is not None:
+        for sub in ast.walk(scratch):
+            if isinstance(sub, ast.Call) and \
+                    (_dotted(sub.func) or "").endswith("VMEM") and \
+                    len(sub.args) >= 2 and \
+                    (_dotted(sub.args[1]) or "").endswith("float32"):
+                f32_acc = True
+    if not f32_acc:
+        issues.append(KernelSpecIssue(
+            path, call.lineno,
+            "pallas_call has no float32 VMEM scratch accumulator — "
+            "accumulation must be f32 regardless of operand dtype"))
+
+
+def check_kernel_specs(paths=None) -> list[KernelSpecIssue]:
+    """Validate the Pallas kernel structure of ``paths`` (default: the
+    repo's two fused kernels).  Pure AST — nothing is imported."""
+    issues: list[KernelSpecIssue] = []
+    for path in (default_kernel_paths() if paths is None else paths):
+        try:
+            tree = ast.parse(Path(path).read_text(), filename=str(path))
+        except (OSError, SyntaxError) as e:
+            issues.append(KernelSpecIssue(str(path), 1,
+                                          f"unreadable/unparsable: {e}"))
+            continue
+        calls = [n for n in ast.walk(tree) if isinstance(n, ast.Call)
+                 and (_dotted(n.func) or "").endswith("pallas_call")]
+        if not calls:
+            issues.append(KernelSpecIssue(
+                str(path), 1, "no pallas_call found — not a kernel file?"))
+            continue
+        for call in calls:
+            _check_pallas_call(str(path), tree, call, issues)
+        kernels = [n for n in ast.walk(tree)
+                   if isinstance(n, ast.FunctionDef)
+                   and any(a.arg == "o_ref" for a in n.args.args)]
+        if not kernels:
+            issues.append(KernelSpecIssue(
+                str(path), 1,
+                "no kernel function (an `o_ref` parameter) found"))
+        for fn in kernels:
+            _check_kernel_fn(str(path), fn, issues)
+    return sorted(issues, key=lambda i: (i.path, i.line))

@@ -1,0 +1,152 @@
+"""Lint framework: rule protocol, disable comments, file walking.
+
+A rule is a small class with a stable ``id`` (e.g. ``RC001``), a
+one-line ``title``, and a ``check(module)`` generator yielding
+:class:`Violation`.  Cross-file rules (registry-wrapper coverage, dead
+exports) implement ``check_project(modules)`` instead and see the whole
+scanned set at once.
+
+Escape hatch: any violation whose line carries a comment
+
+    # repro-lint: disable=RC001
+    # repro-lint: disable=RC001,DT004
+    # repro-lint: disable=all
+
+is suppressed for exactly the named rules (``all`` suppresses every
+rule on that line).  The comment must sit on the violation's own line —
+there is deliberately no file-level switch, so every exemption is
+visible at the site it exempts.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+class LintError(RuntimeError):
+    """A scanned file could not be read or parsed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleFile:
+    """One parsed source file plus its disable-comment map."""
+
+    path: str
+    text: str
+    tree: ast.Module
+    disabled: dict[int, frozenset[str]]   # line -> rule ids (or {"all"})
+
+    def is_disabled(self, rule_id: str, line: int) -> bool:
+        ids = self.disabled.get(line)
+        return ids is not None and ("all" in ids or rule_id in ids)
+
+
+def _disable_map(text: str) -> dict[int, frozenset[str]]:
+    out: dict[int, frozenset[str]] = {}
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            ids = frozenset(s.strip() for s in m.group(1).split(",")
+                            if s.strip())
+            if ids:
+                out[lineno] = ids
+    return out
+
+
+def load_file(path) -> ModuleFile:
+    p = Path(path)
+    try:
+        text = p.read_text()
+        tree = ast.parse(text, filename=str(p))
+    except (OSError, SyntaxError) as e:
+        raise LintError(f"{p}: {e}") from e
+    return ModuleFile(path=str(p), text=text, tree=tree,
+                      disabled=_disable_map(text))
+
+
+def iter_py_files(paths) -> list[Path]:
+    """Expand files/directories into a sorted list of ``*.py`` files."""
+    out: set[Path] = set()
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            out.update(p.rglob("*.py"))
+        else:
+            out.add(p)
+    return sorted(out)
+
+
+class Rule:
+    """Base: per-file rule.  Subclasses set ``id``/``title`` and yield
+    violations from ``check``; ``applies_to`` filters files (e.g. the
+    contact-layer allowlist)."""
+
+    id: str = ""
+    title: str = ""
+
+    def applies_to(self, module: ModuleFile) -> bool:
+        return True
+
+    def check(self, module: ModuleFile):
+        return iter(())
+
+    def violation(self, module: ModuleFile, node: ast.AST,
+                  message: str) -> Violation:
+        return Violation(rule=self.id, path=module.path,
+                         line=getattr(node, "lineno", 1),
+                         col=getattr(node, "col_offset", 0),
+                         message=message)
+
+
+class ProjectRule(Rule):
+    """Cross-file rule: sees every scanned module at once.  The
+    optional ``reference`` set carries extra modules (tests,
+    benchmarks) consulted for symbol references but never linted."""
+
+    def check_project(self, modules, reference=()):
+        return iter(())
+
+
+def all_rules() -> list[Rule]:
+    from repro.analysis import rules as _r
+    return [cls() for cls in _r.RULE_CLASSES]
+
+
+def run_lint(paths, rules=None, *, reference_paths=()) -> list[Violation]:
+    """Lint ``paths`` (files or directories) with ``rules`` (default:
+    all registered rules).  Returns violations sorted by location, with
+    disable comments already applied."""
+    rules = all_rules() if rules is None else rules
+    modules = [load_file(p) for p in iter_py_files(paths)]
+    reference = [load_file(p) for p in iter_py_files(reference_paths)]
+    out: list[Violation] = []
+    for rule in rules:
+        if isinstance(rule, ProjectRule):
+            found = rule.check_project(modules, reference=reference)
+        else:
+            found = (v for m in modules if rule.applies_to(m)
+                     for v in rule.check(m))
+        by_path = {m.path: m for m in modules}
+        for v in found:
+            m = by_path.get(v.path)
+            if m is not None and m.is_disabled(v.rule, v.line):
+                continue
+            out.append(v)
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.rule))

@@ -1,0 +1,393 @@
+"""The architectural lint rules (DESIGN.md §14).
+
+Every rule protects one invariant the engine/registry architecture
+leans on.  IDs are stable — CI output, disable comments and the DESIGN
+catalog all refer to them.
+
+RC001  raw-contact          data-matrix products only in the contact layer
+RS002  registry-signature   registered backends match the primitive arity
+BA003  block-axis           block sources declare their block axis
+DT004  host-reduction-dtype col_mean/fro_norm2/row_sums accumulate float64,
+                            never cast back to the operator dtype
+DT005  promotion-helper     dtype promotion goes through contact.result_dtype
+IM006  no-scipy             the repo stays scipy-free
+OW007  ops-wrapper          engine contacts have kernels/ops.py wrappers
+DE008  dead-export          __all__ exports are referenced somewhere
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import ModuleFile, ProjectRule, Rule
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_payload(node: ast.AST, names: frozenset[str],
+                      attrs: frozenset[str]) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in attrs:
+            return True
+    return False
+
+
+class RawContactRule(Rule):
+    """RC001 — the PR 1 invariant: the algorithm touches the data
+    matrix only through the contact layer.  Raw ``@`` / ``jnp.dot`` /
+    ``jnp.matmul`` / ``jnp.einsum`` on an operator payload (the data
+    matrix ``X``, a shard ``X_loc``, a ``.contact_array``, the
+    compression gradient ``g2``) are confined to ``core/contact.py``,
+    ``core/linop.py`` (the operator layer), ``core/ref.py`` (the numpy
+    oracle) and ``kernels/``.  psum-composed shard_map bodies that hold
+    the resident shard legitimately contract it — those sites carry an
+    explicit ``# repro-lint: disable=RC001``, so every exemption is
+    visible where it happens."""
+
+    id = "RC001"
+    title = "raw matrix contact outside the contact layer"
+
+    PAYLOAD_NAMES = frozenset({"X", "Xbar", "X_loc", "X_blk", "g2"})
+    PAYLOAD_ATTRS = frozenset({"contact_array"})
+    ALLOWED_SUFFIXES = ("core/contact.py", "core/linop.py", "core/ref.py")
+    ALLOWED_DIRS = ("/kernels/", "/analysis/")
+    MATMUL_FUNCS = frozenset({"jnp.dot", "jnp.matmul", "jnp.einsum"})
+
+    def applies_to(self, module: ModuleFile) -> bool:
+        p = _norm(module.path)
+        if p.endswith(self.ALLOWED_SUFFIXES):
+            return False
+        return not any(d in p for d in self.ALLOWED_DIRS)
+
+    def _operands(self, node: ast.AST):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            yield node.left
+            yield node.right
+        elif isinstance(node, ast.Call):
+            fn = _dotted(node.func)
+            if fn in self.MATMUL_FUNCS:
+                yield from node.args
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            for arg in self._operands(node):
+                if _mentions_payload(arg, self.PAYLOAD_NAMES,
+                                     self.PAYLOAD_ATTRS):
+                    yield self.violation(
+                        module, node,
+                        "raw matmul on an operator payload — route the "
+                        "product through ContactEngine (core/contact.py) "
+                        "or a kernels/ops.py wrapper")
+                    break
+
+
+class RegistrySignatureRule(Rule):
+    """RS002 — a registered backend function must match the primitive
+    signature arity: dense ``(A, B, u, w, *, transpose_a)``, sparse
+    ``(data, indices, indptr, B, u, w, *, shape)``.  A mismatched
+    backend would fail only at contact time on whichever path first
+    dispatches to it; this catches it at lint time."""
+
+    id = "RS002"
+    title = "registered backend signature mismatch"
+
+    DENSE_POSITIONAL = 4
+    DENSE_KWONLY = "transpose_a"
+    SPARSE_POSITIONAL = 6
+    SPARSE_KWONLY = "shape"
+
+    def _funcs(self, module: ModuleFile) -> dict[str, ast.FunctionDef]:
+        return {n.name: n for n in ast.walk(module.tree)
+                if isinstance(n, ast.FunctionDef)}
+
+    def check(self, module: ModuleFile):
+        funcs = self._funcs(module)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = _dotted(node.func) or ""
+            name = fn.rsplit(".", 1)[-1]
+            if name == "register_backend":
+                spec = (self.DENSE_POSITIONAL, self.DENSE_KWONLY, "dense")
+            elif name == "register_sparse_backend":
+                spec = (self.SPARSE_POSITIONAL, self.SPARSE_KWONLY,
+                        "sparse")
+            else:
+                continue
+            if len(node.args) < 2:
+                continue
+            target = node.args[1]
+            if not isinstance(target, ast.Name):
+                yield self.violation(
+                    module, node,
+                    f"{name} target is not a plain function reference; "
+                    "wrap it in a def so the signature is checkable")
+                continue
+            fdef = funcs.get(target.id)
+            if fdef is None:
+                yield self.violation(
+                    module, node,
+                    f"{name} target {target.id!r} is not defined in this "
+                    "module; define the backend next to its registration")
+                continue
+            n_pos, kwonly, kind = spec
+            pos = len(fdef.args.args) + len(fdef.args.posonlyargs)
+            kws = {a.arg for a in fdef.args.kwonlyargs}
+            if pos != n_pos or kwonly not in kws:
+                yield self.violation(
+                    module, fdef,
+                    f"{kind} backend {fdef.name!r} must take {n_pos} "
+                    f"positional args plus keyword-only {kwonly!r} "
+                    f"(got {pos} positional, keyword-only {sorted(kws)})")
+
+
+class BlockAxisRule(Rule):
+    """BA003 — the block-source protocol: any class that defines
+    ``iter_blocks`` must declare ``block_axis`` (class attribute,
+    annotated assignment or property).  The blocked/sharded operators
+    dispatch on it; an undeclared source silently defaults to
+    column-blocking, which is wrong for row sources (the PR 4 bug
+    class)."""
+
+    id = "BA003"
+    title = "block source without a block_axis declaration"
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            names = set()
+            has_iter = False
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    names.add(item.name)
+                    if item.name == "iter_blocks":
+                        has_iter = True
+                elif isinstance(item, ast.Assign):
+                    names.update(t.id for t in item.targets
+                                 if isinstance(t, ast.Name))
+                elif isinstance(item, ast.AnnAssign) and \
+                        isinstance(item.target, ast.Name):
+                    names.add(item.target.id)
+            if has_iter and "block_axis" not in names:
+                yield self.violation(
+                    module, node,
+                    f"block source {node.name!r} defines iter_blocks but "
+                    "no block_axis — declare 1 (columns) or 0 (rows) so "
+                    "the blocked operators can validate their sources")
+
+
+class HostReductionDtypeRule(Rule):
+    """DT004 — the PR 4/6 dtype rules for host reductions: ``col_mean``
+    / ``fro_norm2`` / ``row_sums`` accumulate in float64 on the host
+    (``row_sums`` explicitly so) and return the *float* accumulator
+    dtype — never a trailing ``.astype(self.dtype)``, which would cast
+    an integer operator's mean back to integers and silently destroy
+    the centering."""
+
+    id = "DT004"
+    title = "host reduction casts back to the operator dtype"
+
+    REDUCTIONS = frozenset({"col_mean", "fro_norm2", "row_sums"})
+    NEEDS_F64 = frozenset({"row_sums"})
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.FunctionDef) or \
+                    node.name not in self.REDUCTIONS:
+                continue
+            body_src = ast.unparse(node)
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr == "astype" and sub.args and \
+                        _dotted(sub.args[0]) == "self.dtype":
+                    yield self.violation(
+                        module, sub,
+                        f"{node.name} must return the float accumulator "
+                        "dtype, not .astype(self.dtype) — integer "
+                        "operators produce float reductions")
+            if node.name in self.NEEDS_F64 and "float64" not in body_src:
+                yield self.violation(
+                    module, node,
+                    f"{node.name} must accumulate in float64 on the host "
+                    "(exact for int32/float32 inputs)")
+
+
+class PromotionHelperRule(Rule):
+    """DT005 — dtype promotion decisions go through
+    ``contact.result_dtype`` (which computes the standard lattice and
+    leaves the *casts* explicit), because ``jnp.promote_types`` /
+    ``jnp.result_type`` themselves raise under
+    ``jax_numpy_dtype_promotion='strict'``.  Only ``core/contact.py``
+    (the helper's home) may call them."""
+
+    id = "DT005"
+    title = "raw jnp dtype promotion outside core/contact.py"
+
+    BANNED = frozenset({"jnp.promote_types", "jnp.result_type"})
+
+    def applies_to(self, module: ModuleFile) -> bool:
+        return not _norm(module.path).endswith("core/contact.py")
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func) in self.BANNED:
+                yield self.violation(
+                    module, node,
+                    f"{_dotted(node.func)} raises under strict dtype "
+                    "promotion — use repro.core.contact.result_dtype")
+
+
+class NoScipyRule(Rule):
+    """IM006 — the repo is scipy-free by design (DESIGN.md §13): sparse
+    structure is host numpy + the engine's CSR primitives, so sources
+    stay memmap-capable and the dependency set stays at jax + numpy."""
+
+    id = "IM006"
+    title = "scipy import"
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            root = None
+            if isinstance(node, ast.Import):
+                root = node.names[0].name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                root = node.module.split(".")[0]
+            if root == "scipy":
+                yield self.violation(
+                    module, node,
+                    "scipy import — the repo is scipy-free (host numpy "
+                    "+ engine CSR primitives); see DESIGN.md §13")
+
+
+class OpsWrapperRule(ProjectRule):
+    """OW007 — every engine contact has a ``kernels/ops.py`` wrapper:
+    the public jit'd face callers use without holding an engine.  The
+    operator-level delegations (``matmat``/``rmatmat``/``col_mean``/
+    ``fro_norm2`` go through the operator protocol; ``shifted_matmat``
+    / ``shifted_rmatmat`` / ``shifted_gram_matmat`` are dispatch glue
+    whose dense faces are wrapped) are exempt by design."""
+
+    id = "OW007"
+    title = "engine contact without a kernels/ops.py wrapper"
+
+    EXEMPT = frozenset({"matmat", "rmatmat", "col_mean", "fro_norm2",
+                        "shifted_matmat", "shifted_rmatmat"})
+
+    @staticmethod
+    def _common_prefix(a: str, b: str) -> int:
+        pa, pb = _norm(a).split("/"), _norm(b).split("/")
+        n = 0
+        while n < min(len(pa), len(pb)) and pa[n] == pb[n]:
+            n += 1
+        return n
+
+    def check_project(self, modules, reference=()):
+        engines = []
+        ops_mods = []
+        for m in modules:
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.ClassDef) and \
+                        node.name == "ContactEngine":
+                    engines.append((m, node))
+            if _norm(m.path).endswith("ops.py"):
+                ops_mods.append(m)
+        if not ops_mods:
+            return
+        for engine_mod, engine_cls in engines:
+            # pair each engine with its nearest ops.py (longest shared
+            # path prefix) — keeps multi-tree fixture runs independent
+            ops_mod = max(ops_mods,
+                          key=lambda o, _e=engine_mod: self._common_prefix(
+                              o.path, _e.path))
+            wrapped = {n.attr for n in ast.walk(ops_mod.tree)
+                       if isinstance(n, ast.Attribute)}
+            for item in engine_cls.body:
+                if isinstance(item, ast.FunctionDef) and \
+                        not item.name.startswith("_") and \
+                        not any(_dotted(d) == "property"
+                                for d in item.decorator_list) and \
+                        item.name not in self.EXEMPT and \
+                        item.name not in wrapped:
+                    yield self.violation(
+                        engine_mod, item,
+                        f"engine contact {item.name!r} has no "
+                        "kernels/ops.py wrapper — add the public jit'd "
+                        "face (or exempt it in OW007 with the reason)")
+
+
+class DeadExportRule(ProjectRule):
+    """DE008 — every name a package ``__all__`` exports is referenced
+    somewhere outside its defining module (tests count: the public-API
+    smoke test is exactly such a reference).  An unreferenced export is
+    either dead weight or an API that shipped without a test."""
+
+    id = "DE008"
+    title = "unreferenced __all__ export"
+
+    @staticmethod
+    def _exports(module: ModuleFile):
+        for node in module.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "__all__"
+                    for t in node.targets):
+                if isinstance(node.value, (ast.List, ast.Tuple)):
+                    names = [e.value for e in node.value.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str)]
+                    yield node, names
+
+    @staticmethod
+    def _referenced(module: ModuleFile) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Name):
+                out.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                out.add(node.attr)
+            elif isinstance(node, ast.ImportFrom):
+                out.update(a.name for a in node.names)
+        return out
+
+    def check_project(self, modules, reference=()):
+        corpus = list(modules) + list(reference)
+        for m in modules:
+            for node, names in self._exports(m):
+                refs: set[str] = set()
+                for other in corpus:
+                    if other.path != m.path:
+                        refs |= self._referenced(other)
+                for name in names:
+                    if name not in refs:
+                        yield self.violation(
+                            m, node,
+                            f"__all__ exports {name!r} but nothing "
+                            "references it — drop it or cover it (the "
+                            "public-API smoke test counts)")
+
+
+RULE_CLASSES = [RawContactRule, RegistrySignatureRule, BlockAxisRule,
+                HostReductionDtypeRule, PromotionHelperRule, NoScipyRule,
+                OpsWrapperRule, DeadExportRule]

@@ -1,5 +1,5 @@
-from repro.ckpt.checkpoint import (CheckpointManager, save_checkpoint,
-                                   restore_checkpoint, latest_step)
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
            "latest_step"]

@@ -116,7 +116,8 @@ def restore_checkpoint(root: str, step: int, tree_like, *,
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(leaves_like))
     out = []
-    for rec, like, sh in zip(manifest["leaves"], leaves_like, shard_leaves):
+    for rec, like, sh in zip(manifest["leaves"], leaves_like, shard_leaves,
+                            strict=True):
         arr = np.load(os.path.join(d, rec["name"]), allow_pickle=False)
         if tuple(arr.shape) != tuple(np.shape(like)):
             raise ValueError(

@@ -160,7 +160,7 @@ def manual_axis_names() -> set[str]:
     if _GET_ABSTRACT_MESH is not None:
         try:
             amesh = _GET_ABSTRACT_MESH()
-            return {a for a, t in zip(amesh.axis_names, amesh.axis_types)
+            return {a for a, t in zip(amesh.axis_names, amesh.axis_types, strict=True)
                     if "Manual" in str(t)}
         except Exception:
             return set()
@@ -184,7 +184,7 @@ def cost_analysis_dict(compiled) -> dict:
     returns the dict directly.
     """
     cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
+    if isinstance(cost, list | tuple):
         cost = cost[0] if cost else {}
     return cost
 

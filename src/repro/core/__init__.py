@@ -21,21 +21,21 @@ from repro.core.contact import (ContactEngine, available_backends,
                                 available_sparse_backends,
                                 default_backend, get_engine,
                                 register_backend, register_sparse_backend)
+from repro.core.distributed import (dist_col_mean, dist_pca_fit,
+                                    dist_pca_fit_streamed, dist_srsvd,
+                                    dist_srsvd_streamed, tsqr)
 from repro.core.linop import (BlockedOp, CallableOp, ChainedOp,
                               CSRBlockedOp, CSRShardedBlockedOp, DenseOp,
                               LinOp, RowShardedBlockedOp,
                               ShardedBlockedOp, SparseOp, as_linop)
+from repro.core.pca import PCA
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
-from repro.core.stopping import (ConvergenceReport, FixedIters, PVEStop,
-                                 ResidualStop, StopRule, as_rule)
 from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
                               svd_jit)
-from repro.core.pca import PCA
-from repro.core.distributed import (dist_col_mean, dist_pca_fit,
-                                    dist_pca_fit_streamed, dist_srsvd,
-                                    dist_srsvd_streamed, tsqr)
+from repro.core.stopping import (ConvergenceReport, FixedIters, PVEStop,
+                                 ResidualStop, StopRule, as_rule)
 
 __all__ = [
     "BlockedOp", "CallableOp", "ChainedOp", "CSRBlockedOp",

@@ -32,7 +32,7 @@ one home.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -59,13 +59,25 @@ def rank1_correct(P: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
     Used directly by call sites that already hold the uncorrected
     product (e.g. a psum-composed local product inside shard_map, where
     the K-vector ``w`` rode the same collective as ``P``).
+
+    Operands are cast to the standard-lattice result dtype explicitly
+    (an integer operator's ``u = 1_n`` meets a float ``w``), so the
+    correction is strict-promotion clean.
     """
+    P, u, w = _upcast_correction(P, u, w)
     return P - u[:, None] * w[None, :]
 
 
 def rank1_restore(P: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
     """``P + u w^T`` — the inverse correction (decompression paths)."""
+    P, u, w = _upcast_correction(P, u, w)
     return P + u[:, None] * w[None, :]
+
+
+def _upcast_correction(P, u, w):
+    P, u, w = jnp.asarray(P), jnp.asarray(u), jnp.asarray(w)
+    dt = result_dtype(P.dtype, u.dtype, w.dtype)
+    return P.astype(dt), u.astype(dt), w.astype(dt)
 
 
 # --------------------------------------------------------------------------
@@ -81,6 +93,19 @@ def canonical_dtype(src_dtype) -> jnp.dtype:
     the blocked/sharded operators and the sharded contact points below
     must agree on it."""
     return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(src_dtype)))
+
+
+def result_dtype(*dtypes) -> jnp.dtype:
+    """Standard-lattice promotion of ``dtypes``, valid under strict mode.
+
+    ``jnp.result_type``/``jnp.promote_types`` themselves *raise* under
+    ``jax_numpy_dtype_promotion='strict'`` for mixed inputs, so every
+    accumulator-dtype decision routes through this helper: the promotion
+    is computed on the standard lattice and the operands are then cast
+    *explicitly* at the contact point, which is exactly what strict mode
+    exists to force.  The single home of this rule (lint DT005)."""
+    with jax.numpy_dtype_promotion("standard"):
+        return jnp.dtype(jnp.result_type(*dtypes))
 
 
 # (A, B, u, w, transpose_a) -> op(A) @ B - u w^T
@@ -246,7 +271,7 @@ class ContactEngine:
         the loop.  ``mu=None`` means unshifted, as everywhere.
         """
         m = int(source.shape[0])
-        dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+        dt = result_dtype(canonical_dtype(source.dtype), B.dtype)
         acc = jnp.zeros((m, B.shape[1]), dt)
         for j0, blk in source.iter_blocks():
             Bs = B[j0:j0 + blk.shape[1]]
@@ -345,16 +370,16 @@ class ContactEngine:
         owns.  Global ``X @ B`` = sum of partials over ranges.
         """
         m = int(source.shape[0])
-        acc = jnp.zeros((m, B_loc.shape[1]),
-                        jnp.promote_types(canonical_dtype(source.dtype),
-                                          B_loc.dtype))
+        dt = result_dtype(canonical_dtype(source.dtype), B_loc.dtype)
+        acc = jnp.zeros((m, B_loc.shape[1]), dt)
         for j0, blk in source.iter_blocks():
             Bs = B_loc[j0:j0 + blk.shape[1]]
             if getattr(blk, "is_sparse", False):
                 acc = acc + self._sparse_block_product(blk.csr, Bs,
                                                        None, None)
             else:
-                acc = acc + jnp.asarray(blk) @ Bs
+                # explicit casts: strict promotion forbids int @ float
+                acc = acc + jnp.asarray(blk, dt) @ Bs.astype(dt)
         return acc
 
     def sharded_shifted_rmatmat(self, source, B, mu):
@@ -364,7 +389,11 @@ class ContactEngine:
         the range (rows of the global product); ranges concatenate, they
         do not sum.  ``mu=None`` means unshifted, as everywhere.
         """
-        w = None if mu is None else mu @ B
+        dt = result_dtype(canonical_dtype(source.dtype), B.dtype)
+        if mu is not None:
+            dt = result_dtype(dt, jnp.asarray(mu).dtype)
+        B = B.astype(dt)
+        w = None if mu is None else jnp.asarray(mu, dt) @ B
         parts = []
         for _, blk in source.iter_blocks():
             if getattr(blk, "is_sparse", False):
@@ -373,7 +402,7 @@ class ContactEngine:
                 parts.append(self._sparse_block_product(blk.csr_t, B,
                                                         u, w))
                 continue
-            blk = jnp.asarray(blk)
+            blk = jnp.asarray(blk, dt)
             if mu is None:
                 parts.append(blk.T @ B)
             else:
@@ -382,7 +411,6 @@ class ContactEngine:
                                                transpose_a=True))
         if not parts:
             n_loc = int(source.shape[1])
-            dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
             return jnp.zeros((n_loc, B.shape[1]), dt)
         return jnp.concatenate(parts, axis=0)
 
@@ -402,8 +430,11 @@ class ContactEngine:
         the Gram product.
         """
         m = int(source.shape[0])
-        w = None if mu is None else mu @ B
-        dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
+        dt = result_dtype(canonical_dtype(source.dtype), B.dtype)
+        if mu is not None:
+            dt = result_dtype(dt, jnp.asarray(mu).dtype)
+        B = B.astype(dt)
+        w = None if mu is None else jnp.asarray(mu, dt) @ B
         G = jnp.zeros((m, B.shape[1]), dt)
         s = jnp.zeros((B.shape[1],), dt)
         for _, blk in source.iter_blocks():
@@ -418,15 +449,15 @@ class ContactEngine:
                 G = G + self._sparse_block_product(blk.csr, Zt_blk,
                                                    None, None)
             else:
-                blk = jnp.asarray(blk)
+                blk = jnp.asarray(blk, dt)
                 if mu is None:
                     Zt_blk = blk.T @ B
                 else:
                     u = jnp.ones((blk.shape[1],), w.dtype)
                     Zt_blk = self.matmul_rank1(blk, B, u, w,
                                                transpose_a=True)
-                G = G + blk @ Zt_blk
-            s = s + Zt_blk.sum(axis=0)
+                G = G + blk @ Zt_blk.astype(dt)
+            s = s + Zt_blk.sum(axis=0).astype(dt)
         return G, s
 
     # -- row-sharded (per-row-range) contact points --------------------
@@ -447,17 +478,20 @@ class ContactEngine:
         ``u`` — the fused pallas_tpu / xla / interpret kernels apply
         per block, no call-site changes.
         """
+        dt = result_dtype(canonical_dtype(source.dtype), B.dtype)
+        if mu_loc is not None:
+            dt = result_dtype(dt, jnp.asarray(mu_loc).dtype)
+        B = B.astype(dt)
         w = None if mu_loc is None else B.sum(axis=0)
         parts = []
         for i0, blk in source.iter_blocks():
-            blk = jnp.asarray(blk)
+            blk = jnp.asarray(blk, dt)
             if mu_loc is None:
                 parts.append(blk @ B)
             else:
                 parts.append(self.matmul_rank1(
                     blk, B, mu_loc[i0:i0 + blk.shape[0]], w))
         if not parts:
-            dt = jnp.promote_types(canonical_dtype(source.dtype), B.dtype)
             return jnp.zeros((int(source.shape[0]), B.shape[1]), dt)
         return jnp.concatenate(parts, axis=0)
 
@@ -472,12 +506,11 @@ class ContactEngine:
         the resident-shard body (DESIGN.md §5, §11).
         """
         n = int(source.shape[1])
-        acc = jnp.zeros((n, B_loc.shape[1]),
-                        jnp.promote_types(canonical_dtype(source.dtype),
-                                          B_loc.dtype))
+        dt = result_dtype(canonical_dtype(source.dtype), B_loc.dtype)
+        acc = jnp.zeros((n, B_loc.shape[1]), dt)
         for i0, blk in source.iter_blocks():
-            blk = jnp.asarray(blk)
-            acc = acc + blk.T @ B_loc[i0:i0 + blk.shape[0]]
+            blk = jnp.asarray(blk, dt)
+            acc = acc + blk.T @ B_loc[i0:i0 + blk.shape[0]].astype(dt)
         return acc
 
     def col_mean(self, op):
@@ -502,6 +535,9 @@ class ContactEngine:
             return f
         n = op.shape[1]
         row_sum = self.matmat(op, jnp.ones((n, 1), op.dtype))[:, 0]
+        f, mu = jnp.asarray(f), jnp.asarray(mu)
+        dt = result_dtype(f.dtype, row_sum.dtype, mu.dtype)
+        f, row_sum, mu = f.astype(dt), row_sum.astype(dt), mu.astype(dt)
         return f - 2.0 * (row_sum @ mu) + n * (mu @ mu)
 
 
@@ -547,12 +583,15 @@ def _xla_csr_matmul_rank1(data, indices, indptr, B, u, w, *, shape):
     from jax.experimental import sparse as jsp
     data = np.asarray(data)
     B = jnp.asarray(B)
-    out_dtype = jnp.promote_types(canonical_dtype(data.dtype), B.dtype)
+    out_dtype = result_dtype(canonical_dtype(data.dtype), B.dtype)
     m = int(shape[0])
+    B = B.astype(out_dtype)
     if data.size == 0 or shape[1] == 0:
         P = jnp.zeros((m, B.shape[1]), out_dtype)
     else:
-        A = jsp.BCSR((jnp.asarray(data),
+        # cast integer CSR data host-side: strict promotion forbids the
+        # implicit int-data @ float-B inside the BCSR dot
+        A = jsp.BCSR((jnp.asarray(data, dtype=out_dtype),
                       jnp.asarray(np.asarray(indices, dtype=np.int32)),
                       jnp.asarray(np.asarray(indptr, dtype=np.int32))),
                      shape=(m, int(shape[1])))

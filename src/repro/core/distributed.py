@@ -46,7 +46,7 @@ from repro.core.stopping import StopRule
 
 
 def _axis_size(axis) -> int:
-    if isinstance(axis, (tuple, list)):
+    if isinstance(axis, tuple | list):
         return int(jnp.prod(jnp.array([lax.axis_size(a) for a in axis])))
     return lax.axis_size(axis)
 
@@ -88,10 +88,17 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, fro2, *, k, K, q, shifted,
     """The full Algorithm 1, executed per-device inside shard_map."""
     m_loc, n_loc = X_loc.shape
     dt = omega_loc.dtype       # the float working dtype (operator may be int)
+    if X_loc.dtype != dt:
+        # integer-operator rule: products promote on the standard
+        # lattice; cast the resident shard once so every contact below
+        # is strict-promotion clean.
+        X_loc = X_loc.astype(dt)
     ones_loc = jnp.ones((n_loc,), dt)
 
     # line 3: sample matrix.  Local partial + one psum over the col axis.
-    X1 = lax.psum(X_loc @ omega_loc, col_axis)           # (m_loc, K)
+    # psum-composed resident-shard contacts: the shard_map body IS the
+    # distributed contact layer (DESIGN.md §5), hence the RC001 exemptions.
+    X1 = lax.psum(X_loc @ omega_loc, col_axis)  # repro-lint: disable=RC001
     if shifted:
         # line 6 (distributed form): fold the rank-1 shift into the local
         # sample block before TSQR — v = Omega^T 1 needs its own psum of K
@@ -109,12 +116,14 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, fro2, *, k, K, q, shifted,
         mu_t = sched.shift_at(mu_loc, t)
         # Zt = X^T Q - 1 (mu_t^T Q): ride the K-vector on the same psum.
         A, b = lax.psum(
-            (X_loc.T @ Q_loc, mu_t @ Q_loc), row_axis)
+            (X_loc.T @ Q_loc,  # repro-lint: disable=RC001
+             mu_t @ Q_loc), row_axis)
         Zt = contact.rank1_correct(A, ones_loc, b) if shifted else A
         if sched.spectral:
             # dashSVD Gram body: W = Xbar Xbar^T Q - alpha Q, one TSQR.
             Z, s = lax.psum(
-                (X_loc @ Zt, ones_loc @ Zt), col_axis)
+                (X_loc @ Zt,  # repro-lint: disable=RC001
+                 ones_loc @ Zt), col_axis)
             if shifted:
                 Z = contact.rank1_correct(Z, mu_t, s)
             W = Z - sched.alpha(state) * Q_loc
@@ -124,7 +133,8 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, fro2, *, k, K, q, shifted,
         else:
             Qp_loc, _ = tsqr(Zt, col_axis)               # (n_loc, K)
             Z, s = lax.psum(
-                (X_loc @ Qp_loc, ones_loc @ Qp_loc), col_axis)
+                (X_loc @ Qp_loc,  # repro-lint: disable=RC001
+                 ones_loc @ Qp_loc), col_axis)
             if shifted:
                 Z = contact.rank1_correct(Z, mu_t, s)
             Q_loc, R = tsqr(Z, row_axis)
@@ -162,7 +172,9 @@ def _dist_srsvd_body(X_loc, mu_loc, omega_loc, fro2, *, k, K, q, shifted,
                 (Q_loc, state, tstate))
 
     # line 12: Y = Q^T X - (Q^T mu) 1^T,  (K, n_loc) col-sharded.
-    YT, b = lax.psum((X_loc.T @ Q_loc, mu_loc @ Q_loc), row_axis)
+    YT, b = lax.psum(
+        (X_loc.T @ Q_loc,  # repro-lint: disable=RC001
+         mu_loc @ Q_loc), row_axis)
     Y_loc = YT.T
     if shifted:
         Y_loc = contact.rank1_correct(Y_loc, b, ones_loc)
@@ -213,7 +225,7 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     if not jnp.issubdtype(dt, jnp.inexact):
         # integer operators: draw omega (and run the QR/SVD algebra) in
         # the float result type — same promotion rule as srsvd.
-        dt = jnp.result_type(dt, jnp.float32)
+        dt = contact.result_dtype(dt, jnp.float32)
     K = 2 * k if K is None else K
     shifted = mu is not None
     if mu is None:
@@ -312,7 +324,7 @@ def _qr_replicated(A):
 
 
 def _mesh_axis_size(mesh: Mesh, axis) -> int:
-    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    axes = axis if isinstance(axis, tuple | list) else (axis,)
     size = 1
     for a in axes:
         if a not in mesh.shape:
@@ -503,7 +515,7 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
 
     dt = op.dtype
     if not jnp.issubdtype(dt, jnp.inexact):
-        dt = jnp.result_type(dt, jnp.float32)
+        dt = contact.result_dtype(dt, jnp.float32)
     K = 2 * k if K is None else K
     sched = as_schedule(shift)
     eng = engine if engine is not None else contact.get_engine()
@@ -632,7 +644,7 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
 
     dt = op.dtype
     if not jnp.issubdtype(dt, jnp.inexact):
-        dt = jnp.result_type(dt, jnp.float32)
+        dt = contact.result_dtype(dt, jnp.float32)
     K = 2 * k if K is None else K
     sched = as_schedule(shift)
     eng = engine if engine is not None else contact.get_engine()

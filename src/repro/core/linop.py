@@ -53,11 +53,14 @@ silently consumed as a column source.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import sparse as jsparse
+
+from repro.core.contact import result_dtype
 
 
 class LinOp:
@@ -112,10 +115,20 @@ class DenseOp(LinOp):
         return self.X
 
     def matmat(self, B):
-        return self.X @ B
+        X = self.X
+        if X.dtype != B.dtype:
+            # integer-operator rule: products promote on the standard
+            # lattice, cast explicitly so strict mode stays clean
+            dt = result_dtype(X.dtype, B.dtype)
+            return X.astype(dt) @ B.astype(dt)
+        return X @ B
 
     def rmatmat(self, B):
-        return self.X.T @ B
+        X = self.X
+        if X.dtype != B.dtype:
+            dt = result_dtype(X.dtype, B.dtype)
+            return X.astype(dt).T @ B.astype(dt)
+        return X.T @ B
 
     def col_mean(self):
         return jnp.mean(self.X, axis=1)
@@ -245,15 +258,17 @@ class BlockedOp(LinOp):
 
     def matmat(self, B):
         m, _ = self.shape
-        acc = jnp.zeros((m, B.shape[1]),
-                        jnp.promote_types(self.dtype, B.dtype))
+        dt = result_dtype(self.dtype, B.dtype)
+        acc = jnp.zeros((m, B.shape[1]), dt)
         for j0, blk in self._blocks():
-            acc = acc + blk @ B[j0:j0 + blk.shape[1]]
+            acc = acc + blk.astype(dt) @ B[j0:j0 + blk.shape[1]].astype(dt)
         return acc
 
     def rmatmat(self, B):
+        dt = result_dtype(self.dtype, B.dtype)
+        B = B.astype(dt)
         return jnp.concatenate(
-            [blk.T @ B for _, blk in self._blocks()], axis=0)
+            [blk.astype(dt).T @ B for _, blk in self._blocks()], axis=0)
 
     def col_mean(self):
         # Returned in the float accumulator dtype, NOT cast back to the
@@ -261,22 +276,22 @@ class BlockedOp(LinOp):
         # disk) must produce a float mean, like the dense path's
         # jnp.mean — the integer-operator promotion rule of srsvd.
         m, n = self.shape
-        acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((m,), result_dtype(self.dtype, jnp.float32))
         if n == 0:
             return acc          # mean over zero columns: zero partials
         for _, blk in self._blocks():
-            acc = acc + blk.sum(axis=1)
+            acc = acc + blk.sum(axis=1).astype(acc.dtype)
         return acc / n
 
     def fro_norm2(self):
-        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((), result_dtype(self.dtype, jnp.float32))
         for _, blk in self._blocks():
-            acc = acc + jnp.sum(jnp.square(blk))
+            acc = acc + jnp.sum(jnp.square(blk)).astype(acc.dtype)
         return acc
 
     @classmethod
     def from_array(cls, X, block_size: int, *,
-                   prefetch_depth: int = 0) -> "BlockedOp":
+                   prefetch_depth: int = 0) -> BlockedOp:
         """Convenience: wrap an in-host-memory array (numpy / memmap).
         ``prefetch_depth > 0`` overlaps block reads with compute."""
         from repro.data.pipeline import ColumnBlockLoader, prefetch
@@ -330,7 +345,7 @@ class CSRBlockedOp(BlockedOp):
         # rules as BlockedOp.col_mean.
         import numpy as np
         m, n = self.shape
-        dt = jnp.promote_types(self.dtype, jnp.float32)
+        dt = result_dtype(self.dtype, jnp.float32)
         if n == 0:
             return jnp.zeros((m,), dt)
         acc = np.zeros((m,), np.float64)
@@ -350,10 +365,10 @@ class CSRBlockedOp(BlockedOp):
         for _, blk in self.source.iter_blocks():
             d = np.asarray(blk.csr_t.data, dtype=np.float64)
             acc += float(d @ d)
-        return jnp.asarray(acc, jnp.promote_types(self.dtype, jnp.float32))
+        return jnp.asarray(acc, result_dtype(self.dtype, jnp.float32))
 
     @classmethod
-    def from_csr(cls, csr, block_size: int) -> "CSRBlockedOp":
+    def from_csr(cls, csr, block_size: int) -> CSRBlockedOp:
         """Wrap an (m, n) :class:`repro.data.sparse.CSRMatrix` (one
         O(nnz) transpose to the CSC master layout)."""
         from repro.data.sparse import CSRColumnBlockSource
@@ -425,21 +440,21 @@ class ShardedBlockedOp(LinOp):
         from repro.core.contact import canonical_dtype
         dt = canonical_dtype(self.shards[0].dtype)
         for s in self.shards[1:]:
-            dt = jnp.promote_types(dt, canonical_dtype(s.dtype))
+            dt = result_dtype(dt, canonical_dtype(s.dtype))
         return dt
 
     def _shard_ops(self):
-        for lo, src in zip(self.col_starts, self.shards):
+        for lo, src in zip(self.col_starts, self.shards, strict=False):
             yield lo, BlockedOp(src)
 
     def matmat(self, B):
         m, _ = self.shape
         acc = jnp.zeros((m, B.shape[1]),
-                        jnp.promote_types(self.dtype, B.dtype))
+                        result_dtype(self.dtype, B.dtype))
         for lo, op in self._shard_ops():
             w = op.shape[1]
             if w:
-                acc = acc + op.matmat(B[lo:lo + w])
+                acc = acc + op.matmat(B[lo:lo + w]).astype(acc.dtype)
         return acc
 
     def rmatmat(self, B):
@@ -447,7 +462,7 @@ class ShardedBlockedOp(LinOp):
                  if op.shape[1]]
         if not parts:
             return jnp.zeros((0, B.shape[1]),
-                             jnp.promote_types(self.dtype, B.dtype))
+                             result_dtype(self.dtype, B.dtype))
         return jnp.concatenate(parts, axis=0)
 
     def col_mean(self):
@@ -455,24 +470,24 @@ class ShardedBlockedOp(LinOp):
         # operator dtype (same rule as BlockedOp.col_mean); an all-empty
         # operator (n == 0) yields zero partials, not a 0/0.
         m, n = self.shape
-        acc = jnp.zeros((m,), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((m,), result_dtype(self.dtype, jnp.float32))
         if n == 0:
             return acc
         for _, op in self._shard_ops():
             if op.shape[1]:
-                acc = acc + op.col_mean() * op.shape[1]
+                acc = acc + op.col_mean().astype(acc.dtype) * op.shape[1]
         return acc / n
 
     def fro_norm2(self):
-        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((), result_dtype(self.dtype, jnp.float32))
         for _, op in self._shard_ops():
             if op.shape[1]:
-                acc = acc + op.fro_norm2()
+                acc = acc + jnp.asarray(op.fro_norm2(), acc.dtype)
         return acc
 
     @classmethod
     def from_array(cls, X, num_shards: int, block_size: int, *,
-                   prefetch_depth: int = 0) -> "ShardedBlockedOp":
+                   prefetch_depth: int = 0) -> ShardedBlockedOp:
         """Even column split of a host array into ``num_shards`` ranges."""
         from repro.data.pipeline import ColumnBlockLoader, prefetch
         return cls(tuple(
@@ -482,7 +497,7 @@ class ShardedBlockedOp(LinOp):
     @classmethod
     def from_memmap(cls, path, shape, dtype="float32", *,
                     num_shards: int, block_size: int = 1024,
-                    prefetch_depth: int = 0) -> "ShardedBlockedOp":
+                    prefetch_depth: int = 0) -> ShardedBlockedOp:
         """Every shard opens the same on-disk matrix, restricted to its
         own column range — the multi-host shared-filesystem layout.
         ``prefetch_depth > 0`` gives each shard its own read-ahead
@@ -522,12 +537,12 @@ class CSRShardedBlockedOp(ShardedBlockedOp):
                     "dense sources")
 
     def _shard_ops(self):
-        for lo, src in zip(self.col_starts, self.shards):
+        for lo, src in zip(self.col_starts, self.shards, strict=False):
             yield lo, CSRBlockedOp(src)
 
     @classmethod
     def from_csr(cls, csr, *, num_shards: int,
-                 block_size: int) -> "CSRShardedBlockedOp":
+                 block_size: int) -> CSRShardedBlockedOp:
         """Even column split of an (m, n) CSR matrix into per-host
         ranges of the shared CSC master."""
         from repro.data.sparse import CSRColumnBlockSource
@@ -593,7 +608,7 @@ class RowShardedBlockedOp(LinOp):
         from repro.core.contact import canonical_dtype
         dt = canonical_dtype(self.shards[0].dtype)
         for s in self.shards[1:]:
-            dt = jnp.promote_types(dt, canonical_dtype(s.dtype))
+            dt = result_dtype(dt, canonical_dtype(s.dtype))
         return dt
 
     def _shard_blocks(self, src):
@@ -602,29 +617,32 @@ class RowShardedBlockedOp(LinOp):
 
     def matmat(self, B):
         # owned rows: concatenate per-block products over every shard.
-        parts = [blk @ B
+        dt = result_dtype(self.dtype, B.dtype)
+        B = B.astype(dt)
+        parts = [blk.astype(dt) @ B
                  for src in self.shards if src.shape[0]
                  for _, blk in self._shard_blocks(src)]
         if not parts:
-            return jnp.zeros((0, B.shape[1]),
-                             jnp.promote_types(self.dtype, B.dtype))
+            return jnp.zeros((0, B.shape[1]), dt)
         return jnp.concatenate(parts, axis=0)
 
     def rmatmat(self, B):
         # partial sums: each shard touches only its own rows of B.
         _, n = self.shape
-        acc = jnp.zeros((n, B.shape[1]),
-                        jnp.promote_types(self.dtype, B.dtype))
-        for lo, src in zip(self.row_starts, self.shards):
+        dt = result_dtype(self.dtype, B.dtype)
+        B = B.astype(dt)
+        acc = jnp.zeros((n, B.shape[1]), dt)
+        for lo, src in zip(self.row_starts, self.shards, strict=False):
             for i0, blk in self._shard_blocks(src):
-                acc = acc + blk.T @ B[lo + i0:lo + i0 + blk.shape[0]]
+                acc = acc + blk.astype(dt).T \
+                    @ B[lo + i0:lo + i0 + blk.shape[0]]
         return acc
 
     def col_mean(self):
         # owned rows again: each (block, n) slab yields its own row
         # means directly; float accumulator dtype, n == 0 guarded.
         m, n = self.shape
-        dt = jnp.promote_types(self.dtype, jnp.float32)
+        dt = result_dtype(self.dtype, jnp.float32)
         if n == 0 or m == 0:
             return jnp.zeros((m,), dt)
         parts = [jnp.asarray(blk.sum(axis=1), dt) / n
@@ -633,15 +651,15 @@ class RowShardedBlockedOp(LinOp):
         return jnp.concatenate(parts, axis=0)
 
     def fro_norm2(self):
-        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((), result_dtype(self.dtype, jnp.float32))
         for src in self.shards:
             for _, blk in self._shard_blocks(src):
-                acc = acc + jnp.sum(jnp.square(blk))
+                acc = acc + jnp.sum(jnp.square(blk)).astype(acc.dtype)
         return acc
 
     @classmethod
     def from_array(cls, X, num_shards: int, block_size: int, *,
-                   prefetch_depth: int = 0) -> "RowShardedBlockedOp":
+                   prefetch_depth: int = 0) -> RowShardedBlockedOp:
         """Even row split of a host array into ``num_shards`` ranges."""
         from repro.data.pipeline import RowBlockLoader, prefetch
         return cls(tuple(
@@ -651,7 +669,7 @@ class RowShardedBlockedOp(LinOp):
     @classmethod
     def from_memmap(cls, path, shape, dtype="float32", *,
                     num_shards: int, block_size: int = 1024,
-                    prefetch_depth: int = 0) -> "RowShardedBlockedOp":
+                    prefetch_depth: int = 0) -> RowShardedBlockedOp:
         """Every shard opens the same on-disk matrix, restricted to its
         own row range — for a C-order file each row block is one
         contiguous extent."""
@@ -678,7 +696,7 @@ class ChainedOp(LinOp):
     def __post_init__(self):
         if not self.ops:
             raise ValueError("ChainedOp needs at least one operator")
-        for a, b in zip(self.ops, self.ops[1:]):
+        for a, b in zip(self.ops, self.ops[1:], strict=False):
             if a.shape[1] != b.shape[0]:
                 raise ValueError(
                     f"chain shape mismatch: {a.shape} @ {b.shape}")
@@ -691,7 +709,7 @@ class ChainedOp(LinOp):
     def dtype(self):
         dt = self.ops[0].dtype
         for op in self.ops[1:]:
-            dt = jnp.promote_types(dt, op.dtype)
+            dt = result_dtype(dt, op.dtype)
         return dt
 
     def matmat(self, B):
@@ -734,18 +752,20 @@ class ChainedOp(LinOp):
             Rt = E                                 # suffix product^T (n, r)
             for op in self.ops[j:]:
                 Rt = op.rmatmat(Rt)
-            return jnp.sum((L.T @ L) * (Rt.T @ Rt))
+            Lg, Rg = L.T @ L, Rt.T @ Rt
+            ct = result_dtype(Lg.dtype, Rg.dtype)
+            return jnp.sum(Lg.astype(ct) * Rg.astype(ct))
         probe_n = m <= n                           # probe the smaller side
         d = m if probe_n else n
         # accumulate in the promoted chain dtype (like the split path
         # above): a float64 chain under x64 must not round-trip through
         # float32 here.
-        acc = jnp.zeros((), jnp.promote_types(self.dtype, jnp.float32))
+        acc = jnp.zeros((), result_dtype(self.dtype, jnp.float32))
         for j0 in range(0, d, chunk):
             cols = jnp.arange(j0, min(j0 + chunk, d))
             E = jax.nn.one_hot(cols, d, dtype=self.dtype).T    # (d, c)
             P = self.rmatmat(E) if probe_n else self.matmat(E)
-            acc = acc + jnp.sum(jnp.square(P))
+            acc = acc + jnp.sum(jnp.square(P)).astype(acc.dtype)
         return acc
 
 

@@ -70,7 +70,7 @@ class PCA:
                 ".fit(X, key=jax.random.PRNGKey(...)) first")
 
     def fit(self, X, *, key: jax.Array, mesh=None,
-            streamed: bool = False) -> "PCA":
+            streamed: bool = False) -> PCA:
         """Fit on X.  ``streamed=True`` routes through the host-sharded
         distributed path (``dist_srsvd_streamed``): X must be a
         :class:`repro.core.linop.ShardedBlockedOp` (per-host column
@@ -87,7 +87,7 @@ class PCA:
                     "path shards host ranges over a mesh axis")
             from repro.core.linop import (RowShardedBlockedOp,
                                           ShardedBlockedOp)
-            if not isinstance(X, (ShardedBlockedOp, RowShardedBlockedOp)):
+            if not isinstance(X, ShardedBlockedOp | RowShardedBlockedOp):
                 # Catch this up front with an actionable message — the
                 # streamed path needs per-host block sources, and a
                 # plain array / DenseOp / BlockedOp would otherwise die

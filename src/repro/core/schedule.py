@@ -92,7 +92,7 @@ class ShiftSchedule:
         if mu is None:
             return None
         c = self.scale_at(t)
-        if isinstance(c, (int, float)) and c == 1.0:
+        if isinstance(c, int | float) and c == 1.0:
             return mu
         return mu * jnp.asarray(c, mu.dtype)
 
@@ -168,7 +168,11 @@ class DecayingShift(ShiftSchedule):
     def scale_at(self, t):
         if self.gamma == 1.0:
             return 1.0
-        # ``gamma ** t`` works for Python ints and traced int32 alike.
+        if isinstance(t, int):
+            return self.floor + (1.0 - self.floor) * self.gamma ** t
+        # traced int32 ``t``: strict promotion has no int32 x weak-float
+        # path, so the exponent is cast explicitly before the power.
+        t = jnp.asarray(t, jnp.float32)
         return self.floor + (1.0 - self.floor) * self.gamma ** t
 
 

@@ -122,7 +122,7 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         # Integer / bool operators: draw omega (and run all QR/SVD
         # algebra) in the float result type of the operator dtype; the
         # operator itself stays integer — products promote.
-        dt = jnp.result_type(dt, jnp.float32)
+        dt = contact.result_dtype(dt, jnp.float32)
     if K is None:
         K = 2 * k
     if not (k <= K <= min(m, n)):

@@ -1,10 +1,10 @@
+from repro.data.cooccurrence import (zipf_cooccurrence,
+                                     zipf_cooccurrence_csr, zipf_tokens)
 from repro.data.pipeline import (ColumnBlockLoader, DataPipeline,
                                  PrefetchingBlockSource, RowBlockLoader,
                                  open_memmap_matrix, prefetch)
 from repro.data.sparse import (CSRColumnBlockSource, CSRMatrix,
                                SparseBlock, open_csr)
-from repro.data.cooccurrence import (zipf_cooccurrence,
-                                     zipf_cooccurrence_csr, zipf_tokens)
 
 __all__ = ["ColumnBlockLoader", "DataPipeline", "PrefetchingBlockSource",
            "RowBlockLoader", "open_memmap_matrix", "prefetch",

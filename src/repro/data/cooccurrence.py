@@ -19,8 +19,8 @@ under a fixed seed (pinned by tests/test_sparse.py).
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import sparse as jsparse
 
 from repro.data.sparse import CSRMatrix

@@ -55,7 +55,7 @@ class ColumnBlockLoader:
     partials, it does not crash.
     """
 
-    X: "np.ndarray"
+    X: np.ndarray
     block_size: int
     col_lo: int = 0
     col_hi: int | None = None
@@ -99,7 +99,7 @@ class ColumnBlockLoader:
             # plain ndarray.
             yield j0, np.ascontiguousarray(self.X[:, lo:hi])
 
-    def split(self, num_shards: int) -> tuple["ColumnBlockLoader", ...]:
+    def split(self, num_shards: int) -> tuple[ColumnBlockLoader, ...]:
         """Even column-range split of this loader's range into
         ``num_shards`` sub-loaders (host p owns range p) — the canonical
         way to build a :class:`repro.core.linop.ShardedBlockedOp` from
@@ -135,7 +135,7 @@ class RowBlockLoader:
     contiguous file extent — the friendliest possible read pattern.
     """
 
-    X: "np.ndarray"
+    X: np.ndarray
     block_size: int
     row_lo: int = 0
     row_hi: int | None = None
@@ -175,7 +175,7 @@ class RowBlockLoader:
             hi = self.row_lo + min(i0 + self.block_size, height)
             yield i0, np.ascontiguousarray(self.X[lo:hi, :])
 
-    def split(self, num_shards: int) -> tuple["RowBlockLoader", ...]:
+    def split(self, num_shards: int) -> tuple[RowBlockLoader, ...]:
         """Even row-range split into ``num_shards`` sub-loaders — the
         canonical way to build a :class:`repro.core.linop.
         RowShardedBlockedOp` from one on-disk matrix.  The first
@@ -260,7 +260,7 @@ class PrefetchingBlockSource:
     def num_blocks(self) -> int:
         return self.source.num_blocks
 
-    def split(self, num_shards: int) -> tuple["PrefetchingBlockSource", ...]:
+    def split(self, num_shards: int) -> tuple[PrefetchingBlockSource, ...]:
         """Split the wrapped source; every sub-range keeps its own
         prefetcher (one reader thread per active shard iteration)."""
         return tuple(dataclasses.replace(self, source=s)

@@ -143,7 +143,7 @@ class CSRMatrix:
 
     # -- conversions ---------------------------------------------------
     @classmethod
-    def from_dense(cls, X) -> "CSRMatrix":
+    def from_dense(cls, X) -> CSRMatrix:
         X = np.asarray(X)
         if X.ndim != 2:
             raise ValueError(f"from_dense needs a 2-D array, got {X.shape}")
@@ -161,7 +161,7 @@ class CSRMatrix:
         out[rows, np.asarray(self.indices)] = np.asarray(self.data)
         return out
 
-    def transpose(self) -> "CSRMatrix":
+    def transpose(self) -> CSRMatrix:
         """CSR of ``X^T`` in O(nnz): a stable sort by column index keeps
         the old row order within each new row, so the result is sorted
         and duplicate-free by construction."""
@@ -297,7 +297,7 @@ class CSRColumnBlockSource:
 
     @classmethod
     def from_csr(cls, csr: CSRMatrix, block_size: int,
-                 **kw) -> "CSRColumnBlockSource":
+                 **kw) -> CSRColumnBlockSource:
         """Build from the natural (m, n) CSR orientation — one O(nnz)
         transpose to the CSC master layout."""
         return cls(csr.transpose(), block_size, **kw)
@@ -343,7 +343,7 @@ class CSRColumnBlockSource:
         for j0 in range(0, width, self.block_size):
             yield j0, self._block(j0)
 
-    def split(self, num_shards: int) -> tuple["CSRColumnBlockSource", ...]:
+    def split(self, num_shards: int) -> tuple[CSRColumnBlockSource, ...]:
         """Even column-range split into ``num_shards`` sub-sources (the
         first ``width % num_shards`` get one extra column) — the sparse
         route into :class:`repro.core.linop.CSRShardedBlockedOp`.  An

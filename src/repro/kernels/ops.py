@@ -36,6 +36,25 @@ def shifted_gram_matmat(X, B, mu, *, interpret: bool | None = None,
         .shifted_gram_matmat(DenseOp(X), B, mu)
 
 
+def sharded_matmat(source, B_loc, *, interpret: bool | None = None,
+                   backend: str | None = None):
+    """One column range's partial ``X_loc @ B_loc`` from a block source
+    (dense or CSR blocks); global ``X @ B`` = sum of partials over
+    ranges (a psum in the distributed path, a plain sum in-process)."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sharded_matmat(source, B_loc)
+
+
+def sharded_shifted_rmatmat(source, B, mu, *,
+                            interpret: bool | None = None,
+                            backend: str | None = None):
+    """One column range's owned rows ``(X_loc - mu 1^T)^T @ B`` from a
+    block source — ranges concatenate, they do not sum; ``mu=None``
+    means unshifted, as everywhere."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sharded_shifted_rmatmat(source, B, mu)
+
+
 def sharded_shifted_gram_matmat(source, B, mu, *,
                                 interpret: bool | None = None,
                                 backend: str | None = None):

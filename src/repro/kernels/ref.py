@@ -13,11 +13,19 @@ import jax.numpy as jnp
 
 
 def matmul_rank1_ref(A, B, u, w, *, transpose_a: bool = False):
-    """op(A) @ B - u w^T, plain XLA."""
+    """op(A) @ B - u w^T, plain XLA.
+
+    Operands are cast to the (standard-lattice) result dtype explicitly
+    so the primitive is strict-promotion clean; the outer product is
+    computed in its operands' dtype and upcast to the f32 accumulator,
+    matching what standard-mode promotion produced bit-for-bit."""
+    from repro.core.contact import result_dtype
+    out_dtype = result_dtype(A.dtype, B.dtype)
     a = A.T if transpose_a else A
-    out_dtype = jnp.promote_types(A.dtype, B.dtype)
-    return (jnp.dot(a, B, preferred_element_type=jnp.float32)
-            - jnp.outer(u, w)).astype(out_dtype)
+    P = jnp.dot(a.astype(out_dtype), B.astype(out_dtype),
+                preferred_element_type=jnp.float32)
+    corr = jnp.outer(jnp.asarray(u, out_dtype), jnp.asarray(w, out_dtype))
+    return (P - corr.astype(jnp.float32)).astype(out_dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):

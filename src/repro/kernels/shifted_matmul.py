@@ -53,7 +53,7 @@ def _kernel(a_ref, b_ref, u_ref, w_ref, o_ref, acc_ref, *, nk: int,
 
 
 def _pad_to(x, mults):
-    pads = [(0, (-s) % t) for s, t in zip(x.shape, mults)]
+    pads = [(0, (-s) % t) for s, t in zip(x.shape, mults, strict=True)]
     if all(p == (0, 0) for p in pads):
         return x
     return jnp.pad(x, pads)
@@ -76,7 +76,13 @@ def matmul_rank1(A: jax.Array, B: jax.Array, u: jax.Array, w: jax.Array, *,
     else:
         m, n_ = A.shape
     K = B.shape[1]
-    out_dtype = jnp.promote_types(A.dtype, B.dtype)
+    from repro.core.contact import result_dtype
+    out_dtype = result_dtype(A.dtype, B.dtype)
+    # cast mixed operands up front: the kernel's dot must not rely on
+    # implicit promotion (strict-mode clean), and the MXU wants matching
+    # operand dtypes anyway
+    A = A.astype(out_dtype)
+    B = B.astype(out_dtype)
 
     bm = min(bm, _round_up(m, 8))
     bn = min(bn, _round_up(K, 128))

@@ -139,7 +139,8 @@ def csr_matmul_rank1(data, indices, indptr, B, u, w, *,
     B = jnp.asarray(B)
     K = int(B.shape[1])
     data = np.asarray(data)
-    out_dtype = jnp.promote_types(
+    from repro.core.contact import result_dtype
+    out_dtype = result_dtype(
         jax.dtypes.canonicalize_dtype(data.dtype), B.dtype)
     if m == 0 or K == 0:
         return jnp.zeros((m, K), out_dtype)

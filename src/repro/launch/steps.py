@@ -45,7 +45,7 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh, rules):
 def batch_shardings(batch_sds, mesh, rules=None):
     axes = (rules or {}).get("batch") or (
         ("pod", "data") if "pod" in mesh.axis_names else ("data",))
-    axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    axes = tuple(axes) if isinstance(axes, tuple | list) else (axes,)
 
     def one(sds):
         # largest prefix of the batch axes that divides the batch dim

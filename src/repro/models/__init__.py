@@ -1,7 +1,7 @@
-from repro.models.config import ModelConfig, LayerSpec
-from repro.models.model import (init_params, forward, init_cache,
-                                param_logical_specs, cache_logical_specs,
-                                loss_fn, count_params)
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.model import (cache_logical_specs, count_params, forward,
+                                init_cache, init_params, loss_fn,
+                                param_logical_specs)
 
 __all__ = ["ModelConfig", "LayerSpec", "init_params", "forward",
            "init_cache", "param_logical_specs", "cache_logical_specs",

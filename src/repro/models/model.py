@@ -143,7 +143,7 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
         for spec in unit:
             single = _layer_cache(spec, cfg, batch, seq_len)
             per_pos.append(jax.tree.map(
-                lambda a: jnp.zeros((repeat,) + a.shape, a.dtype)
+                lambda a, repeat=repeat: jnp.zeros((repeat,) + a.shape, a.dtype)
                 if a.dtype != jnp.int32
                 else jnp.full((repeat,) + a.shape, -1, a.dtype), single))
         out.append(list(per_pos))
@@ -237,7 +237,8 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
             x, aux = carry
             layer_params, layer_cache = xs
             ncs = []
-            for spec, pp, cc in zip(unit, layer_params, layer_cache):
+            for spec, pp, cc in zip(unit, layer_params, layer_cache,
+                                        strict=True):
                 x, nc, a = _apply_layer(pp, x, spec, cfg, positions,
                                         mode, cc)
                 aux = aux + a

@@ -89,13 +89,17 @@ def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
     K = cfg.rank
     P_ = lax.axis_size(axis)
 
+    # ``g2`` is device-resident per pod and every contact below is
+    # psum-composed — this function is the compressor's contact layer
+    # (linearity over pods, DESIGN.md §9) — hence the RC001 exemptions.
     if cfg.shift:
         mu = jnp.mean(g2, axis=1)                        # local col mean
         sample = contact.rank1_correct(
-            g2 @ omega, *contact.shift_vectors_matmat(omega, mu))
+            g2 @ omega,  # repro-lint: disable=RC001
+            *contact.shift_vectors_matmat(omega, mu))
     else:
         mu = jnp.zeros((m,), jnp.float32)
-        sample = g2 @ omega
+        sample = g2 @ omega  # repro-lint: disable=RC001
     # --- collective 1: K(m) + m floats over DCN
     sample, mu_sum = lax.psum((sample, mu), axis)
     Q, _ = jnp.linalg.qr(sample, mode="reduced")         # identical per pod
@@ -113,22 +117,23 @@ def srsvd_compress_leaf(cfg: CompressConfig, g, err, omega, axis):
     for t in range(cfg.power_q):
         mu_t = sched.shift_at(mu_sum, t)
         Zt = contact.rank1_correct(
-            lax.psum(g2.T @ Q, axis),
+            lax.psum(g2.T @ Q, axis),  # repro-lint: disable=RC001
             *contact.shift_vectors_rmatmat(Q, mu_t, n, jnp.float32))
         if sched.spectral:
             W = contact.rank1_correct(
-                lax.psum(g2 @ Zt, axis),
+                lax.psum(g2 @ Zt, axis),  # repro-lint: disable=RC001
                 *contact.shift_vectors_matmat(Zt, mu_t))
             W = W - sched.alpha(state) * Q
             Q, R = jnp.linalg.qr(W, mode="reduced")
         else:
             Qp, _ = jnp.linalg.qr(Zt, mode="reduced")
             Z = contact.rank1_correct(
-                lax.psum(g2 @ Qp, axis),
+                lax.psum(g2 @ Qp, axis),  # repro-lint: disable=RC001
                 *contact.shift_vectors_matmat(Qp, mu_t))
             Q, R = jnp.linalg.qr(Z, mode="reduced")
         state = sched.update(state, R)
-    Y = contact.rank1_correct(Q.T @ g2, Q.T @ mu, ones_n)
+    Y = contact.rank1_correct(
+        Q.T @ g2, Q.T @ mu, ones_n)  # repro-lint: disable=RC001
     # --- collective 2: K*n floats over DCN
     Y_sum = lax.psum(Y, axis)
 
@@ -154,7 +159,7 @@ def compressed_pod_mean(cfg: CompressConfig, grads, err_state, step,
     errs = treedef.flatten_up_to(err_state)
 
     out, new_errs = [], []
-    for i, (g, e) in enumerate(zip(leaves, errs)):
+    for i, (g, e) in enumerate(zip(leaves, errs, strict=True)):
         if leaf_eligible(cfg, g):
             n = g.shape[-1]
             key = jax.random.fold_in(jax.random.PRNGKey(0x5B5D),

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Mapping
+from collections.abc import Mapping
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -113,7 +113,7 @@ def logical_axis_size(name: str) -> int:
     ax = rules.get(name)
     if ax is None:
         return 1
-    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    axes = ax if isinstance(ax, tuple | list) else (ax,)
     size = 1
     for a in axes:
         size *= mesh.shape[a]
@@ -146,7 +146,7 @@ def logical_to_spec(logical: tuple[str | None, ...],
     for name in logical:
         mesh_axes = rules.get(name) if name is not None else None
         # an axis may appear in a spec only once; later dims fall back
-        if isinstance(mesh_axes, (tuple, list)):
+        if isinstance(mesh_axes, tuple | list):
             mesh_axes = tuple(a for a in mesh_axes if a not in used)
             used.update(mesh_axes)
             axes.append(mesh_axes if mesh_axes else None)
@@ -173,7 +173,7 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     # appear in the constraint — the context mesh owns them
     manual = compat.manual_axis_names()
     fixed = []
-    for dim, ax in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+    for dim, ax in zip(x.shape, spec + (None,) * (x.ndim - len(spec)), strict=True):
         axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
         axes = tuple(a for a in axes if a not in manual)
         size = 1
@@ -207,7 +207,8 @@ def spec_sharding(logical: tuple[str | None, ...], shape: tuple[int, ...]
     mesh, rules = ctx
     spec = logical_to_spec(logical, rules)
     fixed = []
-    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec)),
+                        strict=True):
         axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
         size = 1
         for a in axes:

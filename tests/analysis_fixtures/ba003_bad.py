@@ -1,0 +1,8 @@
+"""BA003 positive fixture: a block source with no block_axis."""
+
+
+class MysteryBlockSource:
+    shape = (4, 8)
+
+    def iter_blocks(self):
+        yield 0, None

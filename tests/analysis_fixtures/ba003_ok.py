@@ -1,0 +1,17 @@
+"""BA003 negative fixture: declared block axes (attribute and property)."""
+
+
+class ColumnSource:
+    block_axis = 1
+
+    def iter_blocks(self):
+        yield 0, None
+
+
+class RowSource:
+    @property
+    def block_axis(self):
+        return 0
+
+    def iter_blocks(self):
+        yield 0, None

@@ -1,0 +1,13 @@
+"""DE008 positive fixture: an __all__ export nothing references."""
+__all__ = ["used_helper", "orphan_export"]
+
+
+def used_helper():
+    return 1
+
+
+def orphan_export():
+    return 2
+
+
+_ = used_helper  # referenced only *inside* its own module: still dead

@@ -1,0 +1,4 @@
+"""References the sibling's export (an ImportFrom alias counts)."""
+from exports import covered_export
+
+print(covered_export())

@@ -1,0 +1,6 @@
+"""DE008 negative fixture: the export is referenced by a sibling."""
+__all__ = ["covered_export"]
+
+
+def covered_export():
+    return 1

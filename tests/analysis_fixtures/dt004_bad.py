@@ -1,0 +1,18 @@
+"""DT004 positive fixture: host reductions casting back to the
+operator dtype, and a row_sums with no float64 accumulator."""
+import numpy as np
+
+
+class BadOp:
+    dtype = np.int32
+
+    def col_mean(self):
+        acc = np.zeros(4, np.float64)
+        return acc.astype(self.dtype)      # destroys an integer op's mean
+
+    def fro_norm2(self):
+        acc = np.float64(0.0)
+        return acc.astype(self.dtype)
+
+    def row_sums(self):
+        return np.zeros(4, np.float32)     # not a float64 accumulator

@@ -1,0 +1,15 @@
+"""DT004 negative fixture: float64 accumulators returned as-is."""
+import numpy as np
+
+
+class GoodOp:
+    dtype = np.int32
+
+    def col_mean(self):
+        return np.zeros(4, np.float64)
+
+    def fro_norm2(self):
+        return np.float64(0.0)
+
+    def row_sums(self):
+        return np.zeros(4, np.float64)

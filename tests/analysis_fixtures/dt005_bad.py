@@ -1,0 +1,10 @@
+"""DT005 positive fixture: raw jnp promotion outside core/contact.py."""
+import jax.numpy as jnp
+
+
+def pick_dtype(a, b):
+    return jnp.promote_types(a.dtype, b.dtype)
+
+
+def pick_result(a, b):
+    return jnp.result_type(a, b)

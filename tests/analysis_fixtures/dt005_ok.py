@@ -1,0 +1,6 @@
+"""DT005 negative fixture: promotion through the helper."""
+from repro.core.contact import result_dtype
+
+
+def pick_dtype(a, b):
+    return result_dtype(a.dtype, b.dtype)

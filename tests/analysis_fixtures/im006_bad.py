@@ -1,0 +1,7 @@
+"""IM006 positive fixture: scipy imports in both forms."""
+import scipy.sparse
+from scipy.linalg import qr
+
+
+def use(X):
+    return qr(scipy.sparse.csr_matrix(X).toarray())

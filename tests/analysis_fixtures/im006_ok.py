@@ -1,0 +1,6 @@
+"""IM006 negative fixture: the allowed dependency set."""
+import numpy as np
+
+
+def use(X):
+    return np.linalg.qr(X)

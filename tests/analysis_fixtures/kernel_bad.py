@@ -1,0 +1,29 @@
+"""Kernel-spec positive fixture: a Pallas kernel that breaks every
+structural rule — non-quotient grid extent, per-step HBM write-back
+with no epilogue guard, no init, no f32 VMEM accumulator, and an
+index map whose arity disagrees with the grid."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    # writes HBM on every grid step, accumulating through the output
+    o_ref[...] = o_ref[...] + jnp.dot(a_ref[...], b_ref[...])
+
+
+def matmul(A, B, *, bm=128, bk=128):
+    m, n = A.shape
+    grid = (m // bm + 1, n // bk)         # not an exact quotient
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i: (i, 0)),   # arity mismatch
+            pl.BlockSpec((bk, bm), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, B.shape[1]), A.dtype),
+    )(A, B)

@@ -1,0 +1,11 @@
+"""OW007 positive fixture: an engine contact with no ops.py wrapper."""
+
+
+class ContactEngine:
+    backend = "xla"
+
+    def matmat(self, op, B):             # exempt (operator delegation)
+        return op.matmat(B)
+
+    def fancy_new_contact(self, op, B):  # not wrapped in ops.py
+        return op.matmat(B)

@@ -1,0 +1,11 @@
+"""OW007 negative fixture: every non-exempt contact is wrapped."""
+
+
+class ContactEngine:
+    backend = "xla"
+
+    def matmat(self, op, B):             # exempt (operator delegation)
+        return op.matmat(B)
+
+    def fancy_new_contact(self, op, B):
+        return op.matmat(B)

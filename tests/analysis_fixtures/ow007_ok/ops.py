@@ -1,0 +1,5 @@
+"""Wrapper module covering the engine's contact."""
+
+
+def fancy_new(engine, op, B):
+    return engine.fancy_new_contact(op, B)

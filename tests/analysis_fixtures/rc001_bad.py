@@ -1,0 +1,15 @@
+"""RC001 positive fixture: raw contacts on operator payloads outside
+the contact layer."""
+import jax.numpy as jnp
+
+
+def sample(X, omega):
+    return X @ omega                     # raw @ on the data matrix
+
+
+def sample_dot(X, omega):
+    return jnp.dot(X, omega)             # jnp.dot on the data matrix
+
+
+def gram(op, B):
+    return jnp.matmul(op.contact_array, B)   # payload attribute

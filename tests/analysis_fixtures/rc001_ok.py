@@ -1,0 +1,14 @@
+"""RC001 negative fixture: non-payload products and a disabled site."""
+import jax.numpy as jnp
+
+
+def project(Q, B):
+    return Q.T @ B                       # factor product, not a payload
+
+
+def resident_shard(X, omega):
+    return X @ omega  # repro-lint: disable=RC001
+
+
+def small(A, B):
+    return jnp.dot(A, B)                 # no payload name involved

@@ -1,0 +1,14 @@
+"""RS002 positive fixture: wrong backend arities."""
+from repro.core import contact
+
+
+def bad_dense(A, B, u):                  # 3 positional, no transpose_a
+    return A @ B - u
+
+
+def bad_sparse(data, indices, indptr, B, *, shape):   # missing u, w
+    return B
+
+
+contact.register_backend("fixture_bad", bad_dense)
+contact.register_sparse_backend("fixture_bad", bad_sparse)

@@ -1,0 +1,15 @@
+"""RS002 negative fixture: conforming backend signatures."""
+from repro.core import contact
+
+
+def good_dense(A, B, u, w, *, transpose_a=False):
+    a = A.T if transpose_a else A
+    return a @ B - u[:, None] * w[None, :]
+
+
+def good_sparse(data, indices, indptr, B, u, w, *, shape):
+    return B
+
+
+contact.register_backend("fixture_ok", good_dense)
+contact.register_sparse_backend("fixture_ok", good_sparse)

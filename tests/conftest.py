@@ -3,11 +3,50 @@
 NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests run on
 the single real CPU device.  Multi-device tests (tests/test_distributed.py)
 spawn subprocesses with their own XLA_FLAGS.
+
+Sanitizer switch: ``REPRO_DEBUG`` is a comma-separated list of debug
+modes applied process-wide before any test runs —
+
+    REPRO_DEBUG=strict_dtypes  python -m pytest ...   # strict promotion
+    REPRO_DEBUG=nans           python -m pytest ...   # jax_debug_nans
+    REPRO_DEBUG=nans,strict_dtypes ...                # both
+
+``strict_dtypes`` runs the whole suite under
+``jax_numpy_dtype_promotion='strict'`` (the repo is kept clean under it
+— see tests/test_strict_dtypes.py and the CI static-analysis job);
+``nans`` enables ``jax_debug_nans`` so any NaN produced inside a jitted
+computation raises at the producing primitive.  Unknown modes fail
+fast rather than silently sanitize nothing.
 """
+import os
+
 import numpy as np
 import pytest
 
 import repro.compat  # noqa: F401  — jax version shims before test imports
+
+_DEBUG_MODES = {
+    "nans": ("jax_debug_nans", True),
+    "strict_dtypes": ("jax_numpy_dtype_promotion", "strict"),
+}
+
+
+def _apply_repro_debug():
+    spec = os.environ.get("REPRO_DEBUG", "")
+    modes = [s.strip() for s in spec.split(",") if s.strip()]
+    unknown = [m for m in modes if m not in _DEBUG_MODES]
+    if unknown:
+        raise ValueError(
+            f"REPRO_DEBUG: unknown mode(s) {unknown}; "
+            f"known: {sorted(_DEBUG_MODES)}")
+    if modes:
+        import jax
+        for m in modes:
+            key, value = _DEBUG_MODES[m]
+            jax.config.update(key, value)
+
+
+_apply_repro_debug()
 
 
 @pytest.fixture

@@ -1,0 +1,194 @@
+"""The analyzer's own tests: one positive + one negative fixture per
+lint rule, the disable-comment escape hatch, the Pallas kernel-spec
+validator, the abstract contract sweep (100% registry coverage), and
+the CLI exit codes."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (check_contracts, check_kernel_specs,
+                            coverage_report, expected_pairs, load_file,
+                            run_lint)
+from repro.analysis.lint import ModuleFile, Violation, iter_py_files
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+REPO_SRC = Path(__file__).parent.parent / "src" / "repro"
+
+
+def rules_hit(paths):
+    return {v.rule for v in run_lint(paths)}
+
+
+# -- per-rule fixtures ------------------------------------------------------
+
+PER_FILE_RULES = ["RC001", "RS002", "BA003", "DT004", "DT005", "IM006"]
+
+
+@pytest.mark.parametrize("rule", PER_FILE_RULES)
+def test_rule_fires_on_bad_fixture(rule):
+    bad = FIXTURES / f"{rule.lower()}_bad.py"
+    violations = run_lint([bad])
+    assert {v.rule for v in violations} == {rule}, violations
+    assert all(v.path == str(bad) for v in violations)
+
+
+@pytest.mark.parametrize("rule", PER_FILE_RULES)
+def test_rule_quiet_on_ok_fixture(rule):
+    ok = FIXTURES / f"{rule.lower()}_ok.py"
+    assert run_lint([ok]) == []
+
+
+def test_rc001_catches_every_contact_form():
+    violations = run_lint([FIXTURES / "rc001_bad.py"])
+    # raw @, jnp.dot and the payload-attribute form each fire once
+    assert len(violations) == 3
+
+
+def test_dt004_reports_both_failure_modes():
+    msgs = [v.message for v in run_lint([FIXTURES / "dt004_bad.py"])]
+    assert any("astype(self.dtype)" in m for m in msgs)
+    assert any("float64" in m for m in msgs)
+
+
+def test_ow007_fixture_pair():
+    bad = run_lint([FIXTURES / "ow007_bad"])
+    assert {v.rule for v in bad} == {"OW007"}
+    assert "fancy_new_contact" in bad[0].message
+    assert run_lint([FIXTURES / "ow007_ok"]) == []
+
+
+def test_de008_fixture_pair():
+    bad = run_lint([FIXTURES / "de008_bad.py"])
+    assert "DE008" in {v.rule for v in bad}
+    assert any("orphan_export" in v.message for v in bad)
+    assert run_lint([FIXTURES / "de008_ok"]) == []
+
+
+def test_de008_reference_corpus_counts():
+    # the orphan is dead when linted alone, covered once a reference
+    # file (e.g. a test) names it — exactly how the repo gate works
+    bad = FIXTURES / "de008_bad.py"
+    alone = {v.rule for v in run_lint([bad])}
+    with_ref = run_lint([bad], reference_paths=[Path(__file__)])
+    assert "DE008" in alone and not any(
+        "orphan_export" in v.message for v in with_ref)
+
+
+def _de008_reference():
+    # AST-level mentions of the fixture's exports (DE008 counts Name
+    # nodes) — this is the "reference file" the test above passes in.
+    orphan_export = used_helper = None
+    return orphan_export, used_helper
+
+
+# -- disable comments -------------------------------------------------------
+
+def test_disable_comment_suppresses_exactly_its_rule(tmp_path):
+    f = tmp_path / "mixed.py"
+    f.write_text(
+        "def a(X, B):\n"
+        "    return X @ B  # repro-lint: disable=RC001\n"
+        "def b(X, B):\n"
+        "    return X @ B  # repro-lint: disable=DT004\n"
+        "def c(X, B):\n"
+        "    return X @ B  # repro-lint: disable=all\n")
+    violations = run_lint([f])
+    assert len(violations) == 1           # only the DT004-disabled line
+    assert violations[0].rule == "RC001"
+    assert violations[0].line == 4
+
+
+def test_disable_comment_multiple_ids(tmp_path):
+    f = tmp_path / "multi.py"
+    f.write_text("import scipy  # repro-lint: disable=IM006, RC001\n")
+    assert run_lint([f]) == []
+
+
+def test_violation_format_and_loader():
+    mod = load_file(FIXTURES / "rc001_bad.py")
+    assert isinstance(mod, ModuleFile)
+    v = Violation("RC001", mod.path, 7, 11, "msg")
+    assert v.format() == f"{mod.path}:7:11: RC001 msg"
+    assert iter_py_files([FIXTURES])      # dir expansion finds fixtures
+
+
+# -- repo gate --------------------------------------------------------------
+
+def test_repo_lint_clean():
+    """The analyzer's core promise: the repo itself has zero findings
+    (tests/ et al. serve as the DE008 reference corpus, as in the CLI)."""
+    repo = Path(__file__).parent.parent
+    reference = [p for p in (repo / "tests", repo / "benchmarks",
+                             repo / "examples") if p.is_dir()]
+    violations = run_lint([REPO_SRC], reference_paths=reference)
+    assert violations == [], "\n".join(v.format() for v in violations)
+
+
+# -- kernel specs -----------------------------------------------------------
+
+def test_kernel_specs_clean_on_repo():
+    assert check_kernel_specs() == []
+
+
+def test_kernel_specs_flag_bad_fixture():
+    issues = check_kernel_specs([FIXTURES / "kernel_bad.py"])
+    msgs = " | ".join(i.message for i in issues)
+    assert "not a static padded//tile quotient" in msgs
+    assert "float32 VMEM scratch accumulator" in msgs
+    assert "index map takes 1 args" in msgs
+    assert "not guarded" in msgs or "no accumulator init" in msgs
+
+
+# -- contracts --------------------------------------------------------------
+
+def test_contract_sweep_passes_and_covers_all_pairs():
+    results = check_contracts()
+    bad = [r.format() for r in results if not r.ok]
+    assert bad == [], "\n".join(bad)
+    covered, missing = coverage_report(results)
+    assert missing == set()
+    # both registries, including the sharded/streamed contacts
+    for pair in [("pallas_tpu", "matmul_rank1"),
+                 ("pallas_tpu", "sparse_matmul_rank1"),
+                 ("xla", "sharded_matmat"),
+                 ("interpret", "sharded_shifted_gram_matmat"),
+                 ("xla", "row_sharded_rmatmat")]:
+        assert pair in covered
+    assert covered >= expected_pairs()
+
+
+# -- CLI --------------------------------------------------------------------
+
+def _run_cli(*args):
+    repo = REPO_SRC.parent.parent
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=str(repo), env=env)
+
+
+def test_cli_nonzero_on_fixtures():
+    for bad in ["rc001_bad.py", "rs002_bad.py", "ba003_bad.py",
+                "dt004_bad.py", "dt005_bad.py", "im006_bad.py",
+                "de008_bad.py", "ow007_bad"]:
+        proc = _run_cli(str(FIXTURES / bad))
+        assert proc.returncode == 1, (bad, proc.stdout, proc.stderr)
+
+
+def test_cli_kernelspec_flag_covers_kernel_fixture():
+    """Fixture mode skips kernel validation by default; --kernelspec
+    forces it over the given paths (how CI feeds kernel_bad.py)."""
+    proc = _run_cli("--kernelspec", str(FIXTURES / "kernel_bad.py"))
+    assert proc.returncode == 1, (proc.stdout, proc.stderr)
+    assert "KERNELSPEC" in proc.stdout
+
+
+def test_cli_zero_on_clean_fixture_and_lists_rules():
+    assert _run_cli(str(FIXTURES / "rc001_ok.py")).returncode == 0
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in PER_FILE_RULES + ["OW007", "DE008"]:
+        assert rid in proc.stdout

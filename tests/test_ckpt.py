@@ -26,7 +26,7 @@ def test_save_restore_roundtrip(tmp_path):
     out, manifest = restore_checkpoint(root, 10, like)
     assert manifest["step"] == 10
     assert manifest["meta"]["mesh"] == "16x16"
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -91,6 +91,6 @@ def test_trainable_grads_match_ref(rng):
     finally:
         fa.flash_attention = orig
     g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-3, rtol=2e-3)

@@ -45,7 +45,7 @@ def test_mse_decreases_with_k(rng):
     for k in (1, 3, 5, 10):
         p = PCA(k=k, q=1).fit(X, key=jax.random.PRNGKey(2))
         mses.append(float(p.mse(X)))
-    assert all(a >= b - 1e-4 for a, b in zip(mses, mses[1:]))
+    assert all(a >= b - 1e-4 for a, b in zip(mses, mses[1:], strict=False))
 
 
 def test_centered_beats_uncentered_on_offcenter_data(rng):

@@ -53,7 +53,7 @@ def test_prefetched_factors_identical(rng, tmp_path):
         base = srsvd(BlockedOp(loader), mu, 6, q=2, key=key, shift=sched)
         pf = srsvd(BlockedOp(prefetch(loader, 2)), mu, 6, q=2, key=key,
                    shift=sched)
-        for a, b in zip((base.U, base.S, base.Vt), (pf.U, pf.S, pf.Vt)):
+        for a, b in zip((base.U, base.S, base.Vt), (pf.U, pf.S, pf.Vt), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -83,7 +83,7 @@ def test_prefetch_delegates_protocol_and_split(rng):
     assert [s.shape[1] for s in shards] == [6, 5, 5]
     # split-then-prefetch and prefetch-then-split stream the same bytes
     plain = ColumnBlockLoader(X, 4, col_lo=2, col_hi=18).split(3)
-    for a, b in zip(shards, plain):
+    for a, b in zip(shards, plain, strict=True):
         assert _block_bytes(a) == _block_bytes(b)
 
 

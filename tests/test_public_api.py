@@ -1,0 +1,111 @@
+"""Public-API smoke coverage: every package ``__all__`` export is
+importable by explicit name (these ImportFrom references are exactly
+what the DE008 dead-export rule counts), and the less-trafficked
+exports get a minimal behavioural smoke test — in particular the
+``qr_rank1_update`` fast path (PR 5's downdate machinery)."""
+import jax.numpy as jnp
+import numpy as np
+
+import repro.ckpt
+import repro.core
+import repro.data
+import repro.models
+import repro.optim
+from repro.analysis import (LintError, ModuleFile, Violation, all_rules,
+                            check_contracts, check_kernel_specs,
+                            coverage_report, expected_pairs, load_file,
+                            run_lint)
+from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
+                        save_checkpoint)
+from repro.core import (PCA, BlockedOp, CallableOp, ChainedOp,
+                        ContactEngine, ConvergenceReport, CSRBlockedOp,
+                        CSRShardedBlockedOp, DecayingShift, DenseOp,
+                        DynamicShift, FixedIters, FixedShift, LinOp,
+                        PVEStop, ResidualStop, RowShardedBlockedOp,
+                        ShardedBlockedOp, ShiftSchedule, SparseOp,
+                        StopRule, SVDResult, as_linop, as_rule,
+                        as_schedule, available_backends,
+                        available_sparse_backends, default_backend,
+                        dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
+                        dist_srsvd, dist_srsvd_streamed,
+                        expected_error_bound, get_engine, qr_rank1_update,
+                        register_backend, register_sparse_backend, rsvd,
+                        srsvd, svd_jit, tsqr)
+from repro.data import (ColumnBlockLoader, CSRColumnBlockSource, CSRMatrix,
+                        DataPipeline, PrefetchingBlockSource,
+                        RowBlockLoader, SparseBlock, open_csr,
+                        open_memmap_matrix, prefetch, zipf_cooccurrence,
+                        zipf_cooccurrence_csr, zipf_tokens)
+from repro.models import (LayerSpec, ModelConfig, cache_logical_specs,
+                          count_params, forward, init_cache, init_params,
+                          loss_fn, param_logical_specs)
+from repro.optim import (AdamWConfig, CompressConfig, adamw_init,
+                         adamw_update, comm_bytes, compress_state_init,
+                         compressed_pod_mean, srsvd_compress_leaf)
+
+_PACKAGES = {
+    repro.core: [
+        BlockedOp, CallableOp, ChainedOp, CSRBlockedOp,
+        CSRShardedBlockedOp, DenseOp, LinOp, RowShardedBlockedOp,
+        ShardedBlockedOp, SparseOp, as_linop, ContactEngine,
+        available_backends, available_sparse_backends, default_backend,
+        get_engine, register_backend, register_sparse_backend,
+        qr_rank1_update, SVDResult, expected_error_bound, rsvd, srsvd,
+        svd_jit, PCA, dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
+        dist_srsvd, dist_srsvd_streamed, tsqr, ShiftSchedule, FixedShift,
+        DecayingShift, DynamicShift, as_schedule, StopRule, FixedIters,
+        PVEStop, ResidualStop, ConvergenceReport, as_rule,
+    ],
+    repro.optim: [AdamWConfig, adamw_init, adamw_update, CompressConfig,
+                  comm_bytes, compress_state_init, compressed_pod_mean,
+                  srsvd_compress_leaf],
+    repro.ckpt: [CheckpointManager, save_checkpoint, restore_checkpoint,
+                 latest_step],
+    repro.models: [ModelConfig, LayerSpec, init_params, forward,
+                   init_cache, param_logical_specs, cache_logical_specs,
+                   loss_fn, count_params],
+    repro.data: [ColumnBlockLoader, DataPipeline, PrefetchingBlockSource,
+                 RowBlockLoader, open_memmap_matrix, prefetch,
+                 CSRColumnBlockSource, CSRMatrix, SparseBlock, open_csr,
+                 zipf_cooccurrence, zipf_cooccurrence_csr, zipf_tokens],
+}
+
+_ANALYSIS_EXPORTS = [LintError, ModuleFile, Violation, all_rules,
+                     load_file, run_lint, check_contracts,
+                     coverage_report, expected_pairs, check_kernel_specs]
+
+
+def test_every_export_is_importable_and_listed():
+    import repro.analysis
+    for pkg, objs in {**_PACKAGES, repro.analysis: _ANALYSIS_EXPORTS} \
+            .items():
+        names = {o.__name__ for o in objs}
+        assert names == set(pkg.__all__), \
+            f"{pkg.__name__}.__all__ drifted from the smoke imports"
+        for obj in objs:
+            assert getattr(pkg, obj.__name__) is obj
+
+
+def test_qr_rank1_update_smoke():
+    """qr_rank1_update(Q, R, u, v) factors A + u v^T from A = Q R."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    Q, R = jnp.linalg.qr(A, mode="reduced")
+    u = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4,)), jnp.float32)
+    Q2, R2 = qr_rank1_update(Q, R, u, v)
+    np.testing.assert_allclose(np.asarray(Q2 @ R2),
+                               np.asarray(A + jnp.outer(u, v)),
+                               atol=1e-4)
+    # orthonormal columns preserved
+    np.testing.assert_allclose(np.asarray(Q2.T @ Q2), np.eye(4),
+                               atol=1e-4)
+
+
+def test_dist_pca_fit_export_smoke():
+    """dist_pca_fit is the single-call distributed PCA face: importable,
+    callable signature intact (executed paths live in the multidevice
+    suite — this pins the export itself)."""
+    import inspect
+    sig = inspect.signature(dist_pca_fit)
+    assert "mesh" in sig.parameters or len(sig.parameters) >= 2

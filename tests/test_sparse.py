@@ -1,10 +1,9 @@
 """Sparse CSR containers, operators, fused contacts, and the CSR-native
 co-occurrence generator (DESIGN.md §13)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import contact, srsvd
 from repro.core.linop import CSRBlockedOp, CSRShardedBlockedOp, as_linop

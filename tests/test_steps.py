@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ShapeCfg, get_config, input_specs, SHAPES
+from repro.configs import SHAPES, ShapeCfg, get_config, input_specs
 from repro.launch.steps import make_step
 from repro.models import init_cache, init_params
 from repro.optim import AdamWConfig, adamw_init

@@ -1,0 +1,143 @@
+"""Strict-promotion regression tests.
+
+Each test pins one implicit-dtype-promotion site that
+``jax_numpy_dtype_promotion='strict'`` flagged (the DT004/DT005 fix
+sweep): the rank-1 correction upcast, the promotion helper itself, the
+traced-exponent schedule, the mixed-dtype reference kernel, the
+streamed/sharded integer-operator contacts, and the sparse BCSR
+composition with integer CSR data.  Everything here runs inside the
+strict context, so a regression fails loudly.
+
+The whole tier-1 suite can be run under strict via
+``REPRO_DEBUG=strict_dtypes`` (see conftest.py); these tests are the
+fast, targeted subset that names each fixed site.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contact
+from repro.core.linop import BlockedOp, as_linop
+from repro.core.schedule import DecayingShift
+from repro.data.pipeline import ColumnBlockLoader, RowBlockLoader
+from repro.data.sparse import CSRMatrix
+from repro.kernels import ops
+from repro.kernels.ref import matmul_rank1_ref
+
+
+@pytest.fixture
+def strict():
+    with jax.numpy_dtype_promotion("strict"):
+        yield
+
+
+def test_result_dtype_is_strict_safe(strict):
+    # jnp.result_type itself raises under strict for mixed inputs; the
+    # helper must not (it computes on the standard lattice internally)
+    assert contact.result_dtype(jnp.int32, jnp.float32) == jnp.float32
+    assert contact.result_dtype(jnp.bfloat16, jnp.bfloat16) == jnp.bfloat16
+    with pytest.raises(Exception):
+        jnp.result_type(jnp.ones((2,), jnp.int32),
+                        jnp.ones((2,), jnp.float32))
+
+
+def test_rank1_correct_mixed_dtypes(strict):
+    P = jnp.ones((3, 2), jnp.float32)
+    u = jnp.ones((3,), jnp.int32)        # integer operator's ones-vector
+    w = jnp.ones((2,), jnp.float32)
+    out = contact.rank1_correct(P, u, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, np.zeros((3, 2)))
+    back = contact.rank1_restore(out, u, w)
+    np.testing.assert_allclose(back, np.ones((3, 2)))
+
+
+def test_decaying_shift_traced_exponent(strict):
+    sched = DecayingShift(gamma=0.5, floor=0.1)
+
+    @jax.jit
+    def scale(t):
+        return sched.scale_at(t)
+
+    got = scale(jnp.int32(3))            # traced int32 exponent
+    np.testing.assert_allclose(float(got), 0.1 + 0.9 * 0.5 ** 3,
+                               rtol=1e-6)
+    np.testing.assert_allclose(sched.scale_at(3), float(got), rtol=1e-6)
+
+
+def test_matmul_rank1_ref_mixed(strict):
+    A = jnp.arange(6, dtype=jnp.int32).reshape(2, 3)
+    B = jnp.ones((3, 2), jnp.float32)
+    u = jnp.ones((2,), jnp.float32)
+    w = jnp.ones((2,), jnp.float32)
+    out = matmul_rank1_ref(A, B, u, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        out, np.asarray(A, np.float32) @ np.asarray(B) - 1.0)
+
+
+def test_engine_dense_contacts_int_operator(strict):
+    eng = contact.get_engine("xla")
+    X = jnp.arange(12, dtype=jnp.int32).reshape(4, 3)
+    B = jnp.ones((3, 2), jnp.float32)
+    mu = jnp.ones((4,), jnp.float32)
+    out = eng.dense_shifted_matmat(X, B, mu)
+    assert out.dtype == jnp.float32
+    Bt = jnp.ones((4, 2), jnp.float32)
+    out_t = eng.dense_shifted_rmatmat(X, Bt, mu)
+    assert out_t.dtype == jnp.float32
+
+
+def test_sharded_contacts_int_source(strict):
+    eng = contact.get_engine("xla")
+    X = np.arange(20, dtype=np.int32).reshape(4, 5)
+    src = ColumnBlockLoader(X, block_size=2)     # 2 does not divide 5
+    B = jnp.ones((5, 2), jnp.float32)
+    out = eng.sharded_matmat(src, B)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, X.astype(np.float32) @ np.ones((5, 2)))
+
+    mu = jnp.ones((4,), jnp.float32)
+    Bm = jnp.ones((4, 2), jnp.float32)
+    assert eng.sharded_shifted_rmatmat(src, Bm, mu).dtype == jnp.float32
+    G, s = eng.sharded_shifted_gram_matmat(src, Bm, mu)
+    assert G.dtype == jnp.float32 and s.dtype == jnp.float32
+
+    rsrc = RowBlockLoader(X, block_size=3)       # 3 does not divide 4
+    assert eng.row_sharded_shifted_matmat(
+        rsrc, jnp.ones((5, 2), jnp.float32), mu).dtype == jnp.float32
+    assert eng.row_sharded_rmatmat(rsrc, Bm).dtype == jnp.float32
+
+
+def test_sparse_bcsr_int_data(strict):
+    X = np.zeros((4, 5), np.int32)
+    X[0, 1] = 2
+    X[3, 4] = -3
+    csr = CSRMatrix.from_dense(X)
+    B = jnp.ones((5, 2), jnp.float32)
+    out = ops.csr_matmul_rank1(csr.data, csr.indices, csr.indptr, B,
+                               None, None, shape=csr.shape, backend="xla")
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, X.astype(np.float32) @ np.ones((5, 2)))
+
+
+def test_xbar_fro_norm2_int_operator(strict):
+    X = np.arange(12, dtype=np.int32).reshape(3, 4)
+    op = as_linop(X)
+    eng = contact.get_engine("xla")
+    mu = jnp.ones((3,), jnp.float32)
+    got = float(eng.xbar_fro_norm2(op, mu))
+    want = float(((X.astype(np.float64)
+                   - np.ones((3, 4))) ** 2).sum())
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_blocked_op_int_reductions(strict):
+    X = np.arange(20, dtype=np.int32).reshape(4, 5)
+    op = BlockedOp(ColumnBlockLoader(X, block_size=2))
+    mean = np.asarray(op.col_mean())
+    assert mean.dtype != np.int32        # DT004: float accumulator out
+    np.testing.assert_allclose(mean, X.mean(axis=1))
+    np.testing.assert_allclose(float(op.fro_norm2()),
+                               float((X.astype(np.float64) ** 2).sum()))
