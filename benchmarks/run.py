@@ -20,8 +20,9 @@ import sys
 import time
 
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
-                        roofline, schedule_bench, sparse_bench,
-                        stream_bench, table1_images, table1_words)
+                        roofline, schedule_bench, serve_bench,
+                        sparse_bench, stream_bench, table1_images,
+                        table1_words)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -31,6 +32,7 @@ SECTIONS = {
     "dist_svd": dist_svd_bench.main,
     "roofline": roofline.main,
     "schedule": schedule_bench.main,
+    "serve": serve_bench.main,
     "sparse": sparse_bench.main,
     "stream": stream_bench.main,
 }

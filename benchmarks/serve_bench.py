@@ -1,0 +1,177 @@
+"""Factorization serving layer under a mixed workload (DESIGN.md §15).
+
+Three experiments against `repro.launch.factor_serve.FactorServer`:
+
+  1. **Coalescing throughput** — a wave of same-signature small dense
+     jobs submitted to the server (vmapped slots, one device dispatch
+     per round) vs the same wave executed one-at-a-time through the
+     offline path (`repro.api.run_request`, what callers did before
+     the server existed).  The requests/sec ratio is the regression-
+     gated speedup (min 1.5x; ~4x at baseline).  A width-1 server run
+     rides along ungated to separate vmap width from dispatch overhead.
+  2. **Cache hit latency** — a wave of distinct matrices served cold,
+     then the identical wave resubmitted: every response must be a
+     cache hit, and the hit p50 latency is gated at ≤ 0.1x the cold
+     p50 (a dict lookup vs a rank-k solve; ~0.03x at baseline).
+  3. **Mixed workload + parity SLA** — two dense shapes, a sparse CSR
+     job, and repeat queries interleaved; reports sustained req/s and
+     p50/p99 latency (context rows, wall ungated per repo convention)
+     and gates the per-request quality SLA: every response's
+     `ConvergenceReport.posterior_rel_err` must match a direct
+     `factorize()` call to ≤ 1e-5 — batching and caching may change
+     wall time, never the certificate.
+
+Sizes are NOT reduced under ``--smoke`` (the gates are the bench);
+``--smoke`` only trims timing repeats.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only serve [--smoke]``
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.data import CSRMatrix
+from repro.launch.factor_serve import FactorServer
+
+M, N, RANK_K, Q = 64, 48, 6, 2      # coalescing geometry
+BATCH = 8
+JOBS = 32
+CACHE_M, CACHE_N, CACHE_K = 160, 120, 8   # cache geometry: cold solves
+#                                           big enough to dwarf a lookup
+
+
+def _dense_reqs(cnt, m, n, k, q, seed0):
+    rng = np.random.default_rng(seed0)
+    return [api.FactorizationRequest(
+        rng.standard_normal((m, n)).astype(np.float32), k=k, q=q,
+        seed=i) for i in range(cnt)]
+
+
+def _latency_ms(r: api.FactorizationResult) -> float:
+    return r.queue_ms + r.compute_ms
+
+
+def _p(lats, frac):
+    lats = sorted(lats)
+    return lats[min(len(lats) - 1, int(frac * len(lats)))]
+
+
+def main(rows, smoke: bool = False):
+    trials = 2 if smoke else 3
+
+    # --- 1. coalescing throughput: batched slots vs offline serial
+    server = FactorServer(batch=BATCH, cache_size=0)
+    for r in _dense_reqs(BATCH, M, N, RANK_K, Q, 999):
+        server.submit(r)
+    server.drain()                                  # warm the B-wide trace
+    api.run_request(_dense_reqs(1, M, N, RANK_K, Q, 998)[0])  # warm serial
+    width1 = FactorServer(batch=1, cache_size=0)
+    width1.submit(_dense_reqs(1, M, N, RANK_K, Q, 997)[0])
+    width1.drain()                                  # warm the 1-wide trace
+
+    best_ratio, best_b, best_s, best_w1 = 0.0, 0.0, 0.0, 0.0
+    for trial in range(trials):
+        reqs = _dense_reqs(JOBS, M, N, RANK_K, Q, trial)
+        t0 = time.perf_counter()
+        for r in reqs:
+            server.submit(r)
+        out = server.drain()
+        t_b = time.perf_counter() - t0
+        assert all(o.ok for o in out.values())
+
+        reqs = _dense_reqs(JOBS, M, N, RANK_K, Q, 100 + trial)
+        t0 = time.perf_counter()
+        for r in reqs:
+            res, _ = api.run_request(r)
+            jax.block_until_ready(res.S)
+        t_s = time.perf_counter() - t0
+
+        reqs = _dense_reqs(JOBS, M, N, RANK_K, Q, 200 + trial)
+        t0 = time.perf_counter()
+        for r in reqs:
+            width1.submit(r)
+        width1.drain()
+        t_w1 = time.perf_counter() - t0
+
+        if t_s / t_b > best_ratio:
+            best_ratio = t_s / t_b
+            best_b, best_s, best_w1 = JOBS / t_b, JOBS / t_s, JOBS / t_w1
+    rows.append(("serve_batched_rps", f"{best_b:.0f}",
+                 f"width-{BATCH} coalesced server, {JOBS} jobs "
+                 f"{M}x{N} k={RANK_K} q={Q}"))
+    rows.append(("serve_serial_rps", f"{best_s:.0f}",
+                 "offline run_request one-at-a-time, same jobs"))
+    rows.append(("serve_width1_rps", f"{best_w1:.0f}",
+                 "server at batch=1: dispatch overhead sans coalescing"))
+    rows.append(("serve_batched_vs_serial_speedup", f"{best_ratio:.2f}",
+                 "best-of-trials req/s ratio (gated min 1.5x)"))
+
+    # --- 2. cache hit latency vs cold
+    cserver = FactorServer(batch=4, cache_size=2 * JOBS)
+    warm = _dense_reqs(4, CACHE_M, CACHE_N, CACHE_K, Q, 996)
+    for r in warm:
+        cserver.submit(r)
+    cserver.drain()
+    reqs = _dense_reqs(JOBS, CACHE_M, CACHE_N, CACHE_K, Q, 300)
+    for r in reqs:
+        cserver.submit(r)
+    cold = cserver.drain()
+    for r in reqs:
+        cserver.submit(r)
+    hot = cserver.drain()
+    assert all(h.cache_hit for h in hot.values()), \
+        "identical resubmission must hit the cache"
+    cold_p50 = _p([_latency_ms(r) for r in cold.values()], 0.5)
+    hot_p50 = _p([_latency_ms(r) for r in hot.values()], 0.5)
+    rows.append(("serve_cold_p50_ms", f"{cold_p50:.2f}",
+                 f"first-sight latency, {CACHE_M}x{CACHE_N} "
+                 f"k={CACHE_K}"))
+    rows.append(("serve_cache_p50_ms", f"{hot_p50:.3f}",
+                 "identical request resubmitted: fingerprint lookup"))
+    rows.append(("serve_cache_hit_latency_ratio",
+                 f"{hot_p50 / cold_p50:.4f}",
+                 "hit p50 / cold p50 (gated max 0.1x)"))
+
+    # --- 3. mixed workload: shapes + sparse + repeats, parity SLA
+    rng = np.random.default_rng(42)
+    mixed: list[api.FactorizationRequest] = []
+    for i in range(JOBS // 2):
+        mixed.append(_dense_reqs(1, M, N, RANK_K, Q, 400 + i)[0])
+    for i in range(JOBS // 4):
+        mixed.append(_dense_reqs(1, 2 * M, N // 2, RANK_K, Q,
+                                 500 + i)[0])
+    sp = rng.standard_normal((128, 256)).astype(np.float32)
+    sp[rng.random((128, 256)) > 0.05] = 0.0
+    mixed.append(api.FactorizationRequest(CSRMatrix.from_dense(sp),
+                                          k=RANK_K, q=Q, seed=3))
+    mixed.extend(mixed[:JOBS // 8])        # repeat queries: cache hits
+    mserver = FactorServer(batch=BATCH, cache_size=64)
+    t0 = time.perf_counter()
+    rids = [mserver.submit(r) for r in mixed]
+    results = mserver.drain()
+    wall = time.perf_counter() - t0
+    lats = [_latency_ms(r) for r in results.values()]
+    hits = sum(r.cache_hit for r in results.values())
+    assert all(r.ok for r in results.values())
+    rows.append(("serve_mixed_rps", f"{len(mixed) / wall:.0f}",
+                 f"{len(mixed)} mixed requests (2 dense shapes + CSR "
+                 f"+ {hits} cache hits)"))
+    rows.append(("serve_mixed_p50_ms", f"{_p(lats, 0.5):.2f}",
+                 "mixed workload latency p50"))
+    rows.append(("serve_mixed_p99_ms", f"{_p(lats, 0.99):.2f}",
+                 "mixed workload latency p99"))
+
+    # parity SLA: every served certificate == the direct factorize()
+    # certificate for that request, cache hits and batch members alike
+    gap = 0.0
+    for rid, req in zip(rids, mixed, strict=True):
+        served = results[rid].report.posterior_rel_err
+        direct = api.run_request(req)[1].posterior_rel_err
+        gap = max(gap, abs(float(served) - float(direct)))
+    rows.append(("serve_parity_posterior_relgap", f"{gap:.2e}",
+                 "max |served - direct factorize| posterior_rel_err "
+                 "(gated 1e-5)"))

@@ -11,6 +11,11 @@ Demonstrates the paper's core claims in ~30 seconds on CPU:
   5. convergence control: PVE early stopping ends the power loop as
      soon as the monitored components converge, and every stopped run
      carries a posterior error certificate (DESIGN.md §12).
+
+Everything below goes through `repro.api.factorize` — the front door
+that routes any operator family to the right solver and ALWAYS returns
+``(SVDResult, ConvergenceReport)`` (DESIGN.md §15).  The lower-level
+entry points (`srsvd`, `dist_srsvd`, ...) remain public plumbing.
 """
 import os
 import sys
@@ -20,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PCA, DynamicShift, PVEStop, SparseOp, rsvd, srsvd
+from repro.api import factorize
+from repro.core import PCA, DynamicShift, PVEStop, SparseOp, rsvd
 from repro.data import zipf_cooccurrence
 
 
@@ -37,9 +43,11 @@ def main():
     k = 32
 
     # --- 1. implicit factorization of the centered matrix, sparse input
-    res_sparse = srsvd(SparseOp(X_sparse), jnp.asarray(mu), k, q=1, key=key)
+    res_sparse, rep = factorize(SparseOp(X_sparse), k, q=1,
+                                mu=jnp.asarray(mu), key=key)
     print("S-RSVD top-5 singular values: "
-          f"{np.asarray(res_sparse.S[:5]).round(4)}")
+          f"{np.asarray(res_sparse.S[:5]).round(4)} "
+          f"(certified rel err <= {float(rep.posterior_rel_err):.4f})")
 
     # --- 2. same key => same factorization as explicit centering
     res_explicit = rsvd(jnp.asarray(X - mu[:, None]), k, q=1, key=key)
@@ -57,16 +65,19 @@ def main():
           f"  RSVD(off-center): {mse(np.asarray(res_raw.U)):.6f}")
 
     # --- 4. dynamic shift schedule: same contacts, faster convergence
-    res_fix = srsvd(SparseOp(X_sparse), jnp.asarray(mu), k, q=2, key=key)
-    res_dyn = srsvd(SparseOp(X_sparse), jnp.asarray(mu), k, q=2, key=key,
-                    shift=DynamicShift())
+    res_fix, _ = factorize(SparseOp(X_sparse), k, q=2,
+                           mu=jnp.asarray(mu), key=key)
+    res_dyn, _ = factorize(SparseOp(X_sparse), k, q=2,
+                           mu=jnp.asarray(mu), key=key,
+                           shift=DynamicShift())
     print(f"q=2 MSE  fixed shift: {mse(np.asarray(res_fix.U)):.6f}"
           f"  dynamic shift: {mse(np.asarray(res_dyn.U)):.6f}")
 
     # --- 5. convergence control: stop when the components converge,
     #        and get a certified error bound back with the factors
-    res_stop, report = srsvd(SparseOp(X_sparse), jnp.asarray(mu), k,
-                             q=8, key=key, stop=PVEStop(1e-2))
+    res_stop, report = factorize(SparseOp(X_sparse), k, q=8,
+                                 mu=jnp.asarray(mu), key=key,
+                                 stop=PVEStop(1e-2))
     print(f"PVEStop(1e-2): ran {int(report.iters_run)}/{report.qmax} "
           f"iterations, certified rel err "
           f"<= {float(report.posterior_rel_err):.4f}")

@@ -13,6 +13,7 @@ DT005  promotion-helper     dtype promotion goes through contact.result_dtype
 IM006  no-scipy             the repo stays scipy-free
 OW007  ops-wrapper          engine contacts have kernels/ops.py wrappers
 DE008  dead-export          __all__ exports are referenced somewhere
+SV009  server-via-api       the serving layer imports repro only via repro.api
 """
 from __future__ import annotations
 
@@ -388,6 +389,53 @@ class DeadExportRule(ProjectRule):
                             "public-API smoke test counts)")
 
 
+class ServerViaApiRule(Rule):
+    """SV009 — the PR 8 serving-layer boundary: the factorization
+    server (``launch/factor_serve.py``) touches operators ONLY through
+    the ``repro.api`` front door.  Any other ``repro.*`` import there
+    (``repro.core``, ``repro.data``, ...) would couple the scheduling
+    loop to plumbing the front door exists to hide — routing, stop-rule
+    normalization and the always-(result, report) contract would then
+    have two owners.  Stdlib / jax / numpy imports are unrestricted;
+    the rule is pinned to the server module by path (fixtures opt in
+    via the ``sv009_*`` name)."""
+
+    id = "SV009"
+    title = "serving layer bypasses the repro.api front door"
+
+    def applies_to(self, module: ModuleFile) -> bool:
+        p = _norm(module.path)
+        base = p.rsplit("/", 1)[-1]
+        return p.endswith("launch/factor_serve.py") or \
+            base.startswith("sv009")
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            bad: str | None = None
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    parts = alias.name.split(".")
+                    if parts[0] == "repro" and \
+                            parts[1:2] != ["api"]:
+                        bad = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                parts = node.module.split(".")
+                if parts[0] == "repro":
+                    if len(parts) == 1:
+                        names = [a.name for a in node.names]
+                        if names != ["api"]:
+                            bad = f"repro ({', '.join(names)})"
+                    elif parts[1] != "api":
+                        bad = node.module
+            if bad:
+                yield self.violation(
+                    module, node,
+                    f"server imports {bad!r} — the serving layer "
+                    "touches operators only through repro.api (the "
+                    "front door owns routing and the result/report "
+                    "contract)")
+
+
 RULE_CLASSES = [RawContactRule, RegistrySignatureRule, BlockAxisRule,
                 HostReductionDtypeRule, PromotionHelperRule, NoScipyRule,
-                OpsWrapperRule, DeadExportRule]
+                OpsWrapperRule, DeadExportRule, ServerViaApiRule]

@@ -1,0 +1,343 @@
+"""repro.api — the one front door for factorization (DESIGN.md §15).
+
+Every caller-facing path — batch scripts, examples, and the serving
+layer (``launch/factor_serve.py``) — factors matrices through this
+module; the entry points underneath (``srsvd`` / ``dist_srsvd`` /
+``dist_srsvd_streamed`` / ``svd_jit``) are the plumbing layer.  The
+seam this erases: ``srsvd(stop=None)`` returns a bare ``SVDResult``
+while ``srsvd(stop=...)`` returns a pair — :func:`factorize` **always**
+returns ``(SVDResult, ConvergenceReport)``, attaching a bit-for-bit
+``FixedIters`` monitor when the caller brings no rule, so every
+factorization carries its posterior error certificate (the per-request
+quality SLA of the serving layer).
+
+Routing, by operator family:
+
+  dense arrays / DenseOp / SparseOp /       ``srsvd`` (single device)
+  CSRMatrix / BlockedOp / ChainedOp
+  (CSR)ShardedBlockedOp        + mesh       ``dist_srsvd_streamed``
+  RowShardedBlockedOp          + mesh       ``dist_srsvd_streamed``
+                                            (``shard_axis="rows"``)
+  dense sharded global array   + mesh       ``dist_srsvd``
+
+:class:`FactorizationRequest` / :class:`FactorizationResult` live here
+— not in the server — so offline scripts and the server serialize the
+same objects; :func:`run_request` executes one request through exactly
+the routing above.  :func:`factorize_batched` is the device-batching
+primitive (vmapped ``srsvd`` over stacked same-shape operators) the
+server's coalescing loop uses, and :func:`refresh_rank1` is the
+cache-adjacent fast path: refresh a cached factorization after a
+declared rank-1 update via the Givens thin-QR update
+(``core/qr_update.py``) plus one projection contact — no fresh sample,
+no power passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contact
+from repro.core.distributed import (dist_col_mean, dist_srsvd,
+                                    dist_srsvd_streamed)
+from repro.core.fingerprint import Fingerprint, array_token, fingerprint
+from repro.core.linop import (LinOp, RowShardedBlockedOp,
+                              ShardedBlockedOp, as_linop)
+from repro.core.qr_update import qr_rank1_update
+from repro.core.schedule import ShiftSchedule, resolve_shift
+from repro.core.srsvd import (SVDResult, batched_trace_count,
+                              srsvd, srsvd_batched)
+from repro.core.stopping import (ConvergenceReport, FixedIters, StopRule,
+                                 as_rule, posterior_rel_err)
+
+__all__ = [
+    "FactorizationRequest", "FactorizationResult", "Fingerprint",
+    "batched_trace_count", "factorize", "factorize_batched",
+    "fingerprint", "refresh_rank1", "request_cache_key", "run_request",
+    "split_batched",
+]
+
+
+def _resolve_key(key, seed: int):
+    return jax.random.PRNGKey(seed) if key is None else key
+
+
+def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
+              mu=None, center: bool = False,
+              shift: ShiftSchedule | jax.Array | None = None,
+              stop: StopRule | int | None = None,
+              mesh=None, key: jax.Array | None = None, seed: int = 0,
+              row_axis: str = "model", col_axis: str = "data",
+              engine: contact.ContactEngine | None = None,
+              ) -> tuple[SVDResult, ConvergenceReport]:
+    """Rank-k factorization of ``X - mu 1^T`` for any operator family.
+
+    Args:
+      x_or_op: dense array, ``CSRMatrix``, BCOO, any ``LinOp``
+        (including the out-of-core blocked / sharded operators) — the
+        family picks the execution path, the caller never does.
+      k / K / q: target rank, sampling rank (default 2k), power-
+        iteration ceiling.
+      mu: (m,) shifting vector, or None.  ``center=True`` computes the
+        column mean through the operator protocol instead (sparse- and
+        stream-safe) and shifts by it — implicit-centering PCA.
+      shift: a :class:`~repro.core.schedule.ShiftSchedule` for the
+        power iterations, or a shifting vector (equivalent to ``mu``).
+      stop: a :class:`~repro.core.stopping.StopRule`, an int
+        (``FixedIters`` shorthand), or None — None attaches a
+        bit-for-bit ``FixedIters`` monitor, so the return value is
+        **always** the pair ``(SVDResult, ConvergenceReport)`` and
+        every caller gets the posterior certificate.  (Operators with
+        no ``fro_norm2`` probe — e.g. a bare ``CallableOp`` — must
+        pass ``FixedIters(certificate=False)`` explicitly.)
+      mesh: route distributed: sharded blocked operators stream via
+        ``dist_srsvd_streamed`` (each host reads its own range); a
+        dense global array runs the resident-shard ``dist_srsvd`` over
+        (``row_axis``, ``col_axis``).
+      key / seed: PRNG key for the Gaussian test matrix; ``key`` wins,
+        else ``PRNGKey(seed)``.  Same key => same factors as the
+        underlying path, which is what the serving layer's cache and
+        parity gates lean on.
+      engine: contact engine override (single-device paths).
+    """
+    rule = as_rule(stop)
+    if rule is None:
+        rule = FixedIters()
+    key = _resolve_key(key, seed)
+    if center and mu is not None:
+        raise ValueError("pass either center=True or an explicit mu, "
+                         "not both")
+    mu, sched = resolve_shift(mu, shift)
+    if mesh is not None:
+        if isinstance(x_or_op, RowShardedBlockedOp):
+            if center and mu is None:
+                mu = x_or_op.col_mean()
+            return dist_srsvd_streamed(
+                x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
+                stop=rule, shard_axis="rows", row_axis=row_axis,
+                engine=engine)
+        if isinstance(x_or_op, ShardedBlockedOp):
+            if center and mu is None:
+                mu = x_or_op.col_mean()
+            return dist_srsvd_streamed(
+                x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
+                stop=rule, col_axis=col_axis, row_axis=row_axis,
+                engine=engine)
+        if isinstance(x_or_op, LinOp):
+            raise TypeError(
+                "factorize(mesh=...) routes sharded blocked operators "
+                "or dense global arrays; got "
+                f"{type(x_or_op).__name__} — drop mesh for the "
+                "single-device paths or wrap per-host ranges in a "
+                "(Row)ShardedBlockedOp")
+        if center and mu is None:
+            mu = dist_col_mean(x_or_op, mesh, row_axis, col_axis)
+        return dist_srsvd(x_or_op, mu, k, K, q, mesh=mesh, key=key,
+                          shift=sched, stop=rule, row_axis=row_axis,
+                          col_axis=col_axis)
+    op = as_linop(x_or_op)
+    eng = engine if engine is not None else contact.get_engine()
+    if center and mu is None:
+        mu = eng.col_mean(op)
+    return srsvd(op, mu, k, K, q, key=key, shift=sched, stop=rule,
+                 engine=eng)
+
+
+def factorize_batched(Xs, mus, k: int, *, K: int | None = None,
+                      q: int = 0, keys: jax.Array,
+                      shift: ShiftSchedule | None = None,
+                      stop: StopRule | int | None = None,
+                      ) -> tuple[SVDResult, ConvergenceReport]:
+    """Batched :func:`factorize` over (B, m, n) stacked dense jobs.
+
+    One vmapped trace serves every batch with the same static signature
+    (shape, dtype, B, k, K, q, shift, stop) — the coalescing primitive
+    behind the serving layer's small-job slots.  Always returns the
+    ``(SVDResult, ConvergenceReport)`` pair with a leading batch axis
+    on every leaf, exactly like :func:`factorize` per slice.
+    """
+    rule = as_rule(stop)
+    if rule is None:
+        rule = FixedIters()
+    return srsvd_batched(Xs, mus, k, K, q, keys=keys, shift=shift,
+                         stop=rule)
+
+
+def refresh_rank1(base: SVDResult, x_new, u, w, *, mu=None,
+                  engine: contact.ContactEngine | None = None,
+                  ) -> tuple[SVDResult, ConvergenceReport]:
+    """Refresh a rank-k factorization after ``X_new = X_old + u w^T``.
+
+    The cache-adjacent fast path (DESIGN.md §15): instead of a fresh
+    Gaussian sample plus q power passes over ``X_new``, fold the
+    declared update into the cached basis with the Givens thin-QR
+    rank-1 update — ``Y_new V = U diag(S) + u (Vt w)`` — then run ONE
+    projection contact against the new operator.  Total cost: O(m k)
+    for the QR update + one ``shifted_rmatmat``; for blocked/streamed
+    operators that is one disk pass instead of ``2 + 2q``.
+
+    Accuracy: exact when ``span(U, u)`` contains the range of
+    ``X_new - mu 1^T`` (e.g. a low-rank matrix plus a rank-1 edit);
+    otherwise the returned report's ``posterior_rel_err`` certifies
+    exactly how much the refreshed basis captures — a caller seeing it
+    degrade resubmits a full :func:`factorize`.
+
+    ``mu`` is the shifting vector for the NEW matrix (a rank-1 row
+    update moves the column mean; pass the updated mean when
+    centering).
+    """
+    op = as_linop(x_new)
+    eng = engine if engine is not None else contact.get_engine()
+    U, S, Vt = base.U, base.S, base.Vt
+    k = int(S.shape[0])
+    u = jnp.asarray(u, U.dtype).reshape(U.shape[0])
+    w = jnp.asarray(w, Vt.dtype).reshape(Vt.shape[1])
+    # U diag(S) is already a thin QR (diag is upper triangular), so the
+    # update lands directly on the cached factors.
+    Q, _ = qr_rank1_update(U, jnp.diag(S), u, Vt @ w)
+    # Q spans (X_new) V_old — k dims.  Append the component of u
+    # orthogonal to it so the basis spans span(U, u) ⊇ range(X_new)
+    # whenever the base was (numerically) exact; the subsequent
+    # truncation is then the *optimal* rank-k of X_new.
+    r = u - Q @ (Q.T @ u)
+    rn = jnp.linalg.norm(r)
+    eps = jnp.finfo(U.dtype).eps * jnp.linalg.norm(u)
+    Q = jnp.where(rn > eps,
+                  jnp.concatenate([Q, (r / jnp.where(rn > eps, rn, 1.0))
+                                   [:, None]], axis=1),
+                  jnp.concatenate([Q, jnp.zeros_like(u)[:, None]],
+                                  axis=1))
+    Y = eng.shifted_rmatmat(op, Q, mu).T                    # (k+1, n)
+    U1, S2, Vt2 = jnp.linalg.svd(Y, full_matrices=False)
+    res = SVDResult((Q @ U1)[:, :k], S2[:k], Vt2[:k, :])
+    try:
+        fro2 = eng.xbar_fro_norm2(op, mu)
+    except NotImplementedError:
+        fro2 = None
+    post = None if fro2 is None else posterior_rel_err(
+        res.S, fro2, op.shape[0], K=k)
+    real = jnp.zeros((), res.S.dtype).real.dtype
+    report = ConvergenceReport(
+        iters_run=jnp.zeros((), jnp.int32),
+        pve_trace=jnp.full((0, k), jnp.nan, real),
+        sigma_estimates=S2,
+        posterior_rel_err=post,
+        xbar_fro2=None if fro2 is None else jnp.asarray(fro2),
+        qmax=0)
+    return res, report
+
+
+def split_batched(res: SVDResult, rep: ConvergenceReport,
+                  ) -> list[tuple[SVDResult, ConvergenceReport]]:
+    """Split a batched pair (leading batch axis on every leaf, as
+    :func:`factorize_batched` returns) into per-slice pairs shaped
+    exactly like single :func:`factorize` responses — what the serving
+    layer hands each request in a coalesced batch."""
+    out = []
+    for i in range(res.U.shape[0]):
+        out.append((
+            SVDResult(res.U[i], res.S[i], res.Vt[i]),
+            ConvergenceReport(
+                iters_run=rep.iters_run[i],
+                pve_trace=rep.pve_trace[i],
+                sigma_estimates=rep.sigma_estimates[i],
+                posterior_rel_err=None if rep.posterior_rel_err is None
+                else rep.posterior_rel_err[i],
+                xbar_fro2=None if rep.xbar_fro2 is None
+                else rep.xbar_fro2[i],
+                qmax=rep.qmax)))
+    return out
+
+
+@dataclasses.dataclass
+class FactorizationRequest:
+    """One factorization job — the object batch scripts submit to
+    :func:`run_request` and the server admits into its queue, so both
+    paths serialize the same thing.
+
+    ``matrix`` is any operator spec :func:`factorize` accepts.  ``seed``
+    derives the PRNG key (``PRNGKey(seed)``) so a request names its
+    randomness — equal requests are cacheable.  ``refresh_of`` +
+    ``update=(u, w)`` declare the matrix as a rank-1 update of a
+    previously factored base (by fingerprint): the server then takes
+    the :func:`refresh_rank1` fast path when the base is still cached.
+    ``tag`` is an opaque caller correlation id, echoed on the response.
+    """
+
+    matrix: Any
+    k: int
+    K: int | None = None
+    q: int = 0
+    mu: Any = None
+    center: bool = False
+    shift: ShiftSchedule | Any = None
+    stop: StopRule | int | None = None
+    seed: int = 0
+    refresh_of: Fingerprint | None = None
+    update: tuple[Any, Any] | None = None
+    tag: Any = None
+
+
+@dataclasses.dataclass
+class FactorizationResult:
+    """One factorization response: factors + the per-request quality
+    SLA (:class:`~repro.core.stopping.ConvergenceReport`) + serving
+    observability.
+
+    ``cache_hit`` marks a result served from the fingerprint cache
+    (bit-identical to the cold computation it stored).  ``refreshed``
+    marks the rank-1 fast path.  ``batch_width`` is how many requests
+    shared this result's device batch (1 = solo).  ``queue_ms`` /
+    ``compute_ms`` split time-in-queue from device time; cache hits
+    carry the lookup cost in ``compute_ms``.  A failed request (e.g. a
+    poisoned operator under ``REPRO_DEBUG=nans``) carries ``error``
+    and ``result is None`` — failures are per-request, never
+    queue-wide.
+    """
+
+    result: SVDResult | None
+    report: ConvergenceReport | None
+    tag: Any = None
+    cache_hit: bool = False
+    refreshed: bool = False
+    batch_width: int = 1
+    queue_ms: float = 0.0
+    compute_ms: float = 0.0
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+def run_request(req: FactorizationRequest, *, mesh=None,
+                engine: contact.ContactEngine | None = None,
+                ) -> tuple[SVDResult, ConvergenceReport]:
+    """Execute one request through :func:`factorize` — the offline
+    (serverless) execution of exactly what the server computes, which
+    is what the serving parity gates compare against."""
+    return factorize(req.matrix, req.k, K=req.K, q=req.q, mu=req.mu,
+                     center=req.center, shift=req.shift, stop=req.stop,
+                     mesh=mesh, seed=req.seed, engine=engine)
+
+
+def request_cache_key(req: FactorizationRequest) -> tuple:
+    """Hashable identity of a request's *result*: the matrix
+    fingerprint plus every field that changes the factors.
+
+    Fields in the key: fingerprint(matrix), k, K, q, center, a content
+    token of ``mu`` (None-safe), the shift schedule (hashable frozen
+    dataclass) or a content token of a shift *vector*, the normalized
+    stop rule, and the seed.  ``tag`` and the refresh declaration are
+    deliberately excluded — they do not change the factors.
+    """
+    fp = fingerprint(req.matrix)
+    mu_tok = None if req.mu is None else array_token(req.mu)
+    shift_key: Any = req.shift
+    if shift_key is not None and not isinstance(shift_key,
+                                               ShiftSchedule):
+        shift_key = array_token(shift_key)
+    return (fp, req.k, req.K, req.q, req.center, mu_tok, shift_key,
+            as_rule(req.stop), req.seed)

@@ -32,8 +32,10 @@ from repro.core.pca import PCA
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
-from repro.core.srsvd import (SVDResult, expected_error_bound, rsvd, srsvd,
-                              svd_jit)
+from repro.core.fingerprint import Fingerprint, array_token, fingerprint
+from repro.core.srsvd import (SVDResult, batched_trace_count,
+                              expected_error_bound, rsvd, srsvd,
+                              srsvd_batched, svd_jit)
 from repro.core.stopping import (ConvergenceReport, FixedIters, PVEStop,
                                  ResidualStop, StopRule, as_rule)
 
@@ -45,7 +47,9 @@ __all__ = [
     "available_sparse_backends", "default_backend",
     "get_engine", "register_backend", "register_sparse_backend",
     "qr_rank1_update", "SVDResult",
-    "expected_error_bound", "rsvd", "srsvd", "svd_jit", "PCA",
+    "expected_error_bound", "rsvd", "srsvd", "srsvd_batched",
+    "batched_trace_count", "svd_jit", "PCA",
+    "Fingerprint", "array_token", "fingerprint",
     "dist_col_mean", "dist_pca_fit", "dist_pca_fit_streamed", "dist_srsvd",
     "dist_srsvd_streamed", "tsqr",
     "ShiftSchedule", "FixedShift", "DecayingShift", "DynamicShift",

@@ -1,0 +1,192 @@
+"""Matrix fingerprints for the factorization result cache (DESIGN.md §15).
+
+The serving layer (``launch/factor_serve.py``) caches factorization
+results so repeat queries against a hot matrix are free — which needs a
+*stable identity* for "the same matrix" that works for every operator
+family without re-reading the data:
+
+  in-host arrays        content hash over the raw bytes (blake2b) —
+                        exact, O(m·n), paid once per distinct matrix
+                        and amortized by the cache it feeds;
+  memmap-backed arrays  O(1) in the matrix size: file identity
+                        (device, inode, byte size, mtime_ns, map
+                        offset) plus a sampled-stripe hash — a fixed
+                        number of fixed-size byte stripes spaced evenly
+                        through the mapped region.  An out-of-core
+                        matrix is never scanned just to name it;
+  CSR matrices          component tokens of (indptr, indices, data) —
+                        each routed through the array rules above, so a
+                        memmap-backed ``open_csr`` triple stays O(1);
+  blocked / sharded     the underlying source arrays' tokens plus the
+  operators             host range bounds.  The *blocking* (block_size,
+                        prefetch depth) is deliberately excluded: two
+                        operators over the same bytes with different
+                        block sizes are the same matrix and should hit
+                        the same cache line.
+
+Collision story: tokens are 16-byte blake2b digests (collision
+probability ~2^-64 per pair — negligible against any real request
+volume).  The memmap fast path additionally trusts the filesystem:
+a file rewritten *in place* with identical size, inode and mtime_ns
+and identical bytes at every sampled stripe would alias its
+predecessor.  POSIX mtime_ns granularity makes that a deliberate-
+adversary scenario, not an operational one; callers who need exact
+semantics for hostile inputs can hash the full contents by loading
+the matrix (the in-host rule) instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+
+import numpy as np
+
+_STRIPES = 8            # sampled stripes per memmap region
+_STRIPE_BYTES = 4096    # bytes per stripe
+_DIGEST = 16            # blake2b digest size (bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Hashable matrix identity: shape, dtype, and a content token."""
+
+    shape: tuple[int, ...]
+    dtype: str
+    token: str
+
+    def __str__(self):
+        return f"{'x'.join(map(str, self.shape))}:{self.dtype}:" \
+               f"{self.token[:12]}"
+
+
+def _hasher() -> hashlib.blake2b:
+    return hashlib.blake2b(digest_size=_DIGEST)
+
+
+def _memmap_token(x: np.memmap) -> str | None:
+    """O(1) token for a memmap: file identity + sampled stripes, or
+    None when the map is not a plain contiguous file window (fall back
+    to the full-content hash)."""
+    filename = getattr(x, "filename", None)
+    if filename is None or not x.flags["C_CONTIGUOUS"]:
+        return None
+    try:
+        st = os.stat(filename)
+    except OSError:
+        return None
+    h = _hasher()
+    h.update(repr(("memmap", st.st_dev, st.st_ino, st.st_size,
+                   st.st_mtime_ns, int(getattr(x, "offset", 0)),
+                   x.shape, str(x.dtype))).encode())
+    flat = x.reshape(-1).view(np.uint8)
+    nbytes = flat.shape[0]
+    step = max(1, (nbytes - _STRIPE_BYTES) // max(1, _STRIPES - 1))
+    for off in range(0, nbytes, step):
+        h.update(np.asarray(flat[off:off + _STRIPE_BYTES]).tobytes())
+        if off + _STRIPE_BYTES >= nbytes:
+            break
+    return h.hexdigest()
+
+
+def array_token(x) -> str:
+    """Content token for one array-like: the memmap fast path when it
+    applies, the exact full-bytes hash otherwise (jax arrays come to
+    host once — the cache this feeds exists to avoid paying twice)."""
+    if isinstance(x, np.memmap):
+        tok = _memmap_token(x)
+        if tok is not None:
+            return tok
+    a = np.asarray(x)
+    h = _hasher()
+    h.update(repr(("array", a.shape, str(a.dtype))).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def _combine(kind: str, parts) -> str:
+    h = _hasher()
+    h.update(kind.encode())
+    for p in parts:
+        h.update(b"|")
+        h.update(str(p).encode())
+    return h.hexdigest()
+
+
+def _csr_token(csr) -> str:
+    return _combine("csr", [array_token(csr.indptr),
+                            array_token(csr.indices),
+                            array_token(csr.data)])
+
+
+def _source_token(src) -> str:
+    """Token for one block source: underlying bytes + range bounds.
+    block_size / prefetch wrappers are identity-neutral by design."""
+    from repro.data.pipeline import (ColumnBlockLoader,
+                                     PrefetchingBlockSource,
+                                     RowBlockLoader)
+    from repro.data.sparse import CSRColumnBlockSource
+    if isinstance(src, PrefetchingBlockSource):
+        return _source_token(src.source)
+    if isinstance(src, ColumnBlockLoader):
+        return _combine("cols", [array_token(src.X), src.col_lo,
+                                 src.col_hi])
+    if isinstance(src, RowBlockLoader):
+        return _combine("rows", [array_token(src.X), src.row_lo,
+                                 src.row_hi])
+    if isinstance(src, CSRColumnBlockSource):
+        return _combine("csr-cols", [_csr_token(src.csc), src.col_lo,
+                                     src.col_hi])
+    raise TypeError(
+        f"cannot fingerprint block source {type(src).__name__}; known "
+        "sources: ColumnBlockLoader, RowBlockLoader, "
+        "CSRColumnBlockSource (or a prefetch wrapper of one)")
+
+
+def fingerprint(x) -> Fingerprint:
+    """Fingerprint any operator family ``factorize`` accepts.
+
+    Same bytes => same fingerprint across equivalent presentations of a
+    *blocked* matrix (block size and prefetch depth do not change
+    identity), but distinct operator *structures* (dense array vs its
+    CSR encoding vs a chain) are distinct on purpose: they factorize
+    through different code paths whose results differ at fp level, and
+    a cache must never conflate them.
+    """
+    from repro.core.linop import (BlockedOp, ChainedOp, DenseOp, LinOp,
+                                  RowShardedBlockedOp, ShardedBlockedOp,
+                                  SparseOp)
+    from repro.data.sparse import CSRMatrix
+    if isinstance(x, DenseOp):
+        return fingerprint(x.X)
+    if isinstance(x, SparseOp):
+        tok = _combine("bcoo", [array_token(np.asarray(x.X.data)),
+                                array_token(np.asarray(x.X.indices)),
+                                x.X.shape])
+        return Fingerprint(tuple(x.X.shape), str(x.X.dtype), tok)
+    if isinstance(x, CSRMatrix):
+        return Fingerprint(tuple(x.shape), str(np.dtype(x.dtype)),
+                           _csr_token(x))
+    if isinstance(x, BlockedOp):        # covers CSRBlockedOp
+        return Fingerprint(x.shape, str(np.dtype(x.dtype)),
+                           _source_token(x.source))
+    if isinstance(x, ShardedBlockedOp | RowShardedBlockedOp):
+        axis = "rows" if isinstance(x, RowShardedBlockedOp) else "cols"
+        tok = _combine(f"sharded-{axis}",
+                       [_source_token(s) for s in x.shards])
+        return Fingerprint(x.shape, str(np.dtype(x.dtype)), tok)
+    if isinstance(x, ChainedOp):
+        tok = _combine("chain", [fingerprint(op).token for op in x.ops])
+        return Fingerprint(x.shape, str(np.dtype(x.dtype)), tok)
+    if isinstance(x, LinOp):
+        raise TypeError(
+            f"cannot fingerprint {type(x).__name__}: no content access "
+            "(e.g. a bare CallableOp) — the serving layer cannot cache "
+            "results for it; submit a concrete operator family or "
+            "disable caching for this request")
+    a = np.asarray(x)
+    if a.dtype == object:
+        raise TypeError(
+            f"cannot fingerprint {type(x).__name__}: not an array or a "
+            "known operator family")
+    return Fingerprint(tuple(a.shape), str(a.dtype), array_token(x))

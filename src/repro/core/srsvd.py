@@ -198,6 +198,74 @@ def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:
         * sigma_k1
 
 
+def srsvd_batched(Xs, mus, k: int, K: int | None = None, q: int = 0, *,
+                  keys: jax.Array, shift: ShiftSchedule | None = None,
+                  stop: StopRule | None = None):
+    """vmapped ``srsvd`` over a stack of same-shape dense operators.
+
+    Args:
+      Xs: (B, m, n) stacked dense matrices — one factorization job per
+        leading-axis slice.
+      mus: (B, m) stacked shifting vectors, or None for the unshifted
+        algorithm on every slice (``mus`` cannot mix shifted and
+        unshifted jobs — the serving layer groups on that).
+      keys: (B,) stacked PRNG keys (``jax.vmap``-able key array); slice
+        ``b`` draws exactly the omega that ``srsvd(Xs[b], ...,
+        key=keys[b])`` would, so batched and single-job results agree.
+      k, K, q, shift, stop: as in :func:`srsvd`; ``shift`` must be a
+        schedule (not a vector — per-job vectors ride ``mus``), and
+        ``stop`` a hashable :class:`~repro.core.stopping.StopRule` or
+        None.  All static: one trace serves every batch of the same
+        (shape, dtype, B, k, K, q, shift, stop) signature.
+
+    Returns ``SVDResult`` with (B, m, k) / (B, k) / (B, k, n) leaves —
+    plus a batched :class:`~repro.core.stopping.ConvergenceReport` when
+    ``stop`` is set, exactly mirroring ``srsvd``'s pair contract.  This
+    is the device-batching primitive behind the factorization server
+    (``launch/factor_serve.py``): B small jobs cost one batched QR/SVD
+    pipeline instead of B dispatch rounds (DESIGN.md §15).
+    """
+    if shift is not None and not isinstance(shift, ShiftSchedule):
+        raise TypeError("srsvd_batched takes per-job shifting vectors "
+                        "as mus and a ShiftSchedule as shift")
+    if stop is not None and not isinstance(stop, StopRule):
+        raise TypeError("srsvd_batched takes stop as a StopRule "
+                        "(hashable static argument) or None")
+    if Xs.ndim != 3:
+        raise ValueError(f"Xs must be (B, m, n) stacked, got {Xs.shape}")
+    shifted = mus is not None
+    if mus is None:
+        mus = jnp.zeros((Xs.shape[0], Xs.shape[1]), Xs.dtype)
+    K = 2 * k if K is None else K
+    return _jit_svd_batched(Xs, mus, k, K, q, shifted, shift, stop,
+                            keys)
+
+
+#: times _jit_svd_batched actually traced (one per distinct static
+#: signature + stacked shape) — the server's coalescing tests and its
+#: observability counters read the delta around each batched call to
+#: prove that same-shape requests share one compilation.
+_BATCHED_TRACES = [0]
+
+
+def batched_trace_count() -> int:
+    """Cumulative trace count of the batched solver (monotone)."""
+    return _BATCHED_TRACES[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "K", "q", "shifted", "shift",
+                                    "stop"))
+def _jit_svd_batched(Xs, mus, k, K, q, shifted, shift, stop, keys):
+    _BATCHED_TRACES[0] += 1          # trace-time side effect, by design
+
+    def one(X, mu, key):
+        return srsvd(X, mu if shifted else None, k, K, q, key=key,
+                     shift=shift, stop=stop, loop="fori")
+
+    return jax.vmap(one)(Xs, mus, keys)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "K", "q", "shifted", "shift",
                                     "stop"))

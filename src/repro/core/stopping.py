@@ -76,6 +76,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as onp
 from jax import lax
 
 
@@ -218,7 +219,12 @@ class StopRule:
             done=jnp.zeros((), bool),
             prev_s=jnp.zeros((K,), real),
             pve=jnp.full((K,), jnp.inf, real),
-            trace=jnp.full((max(qmax, 0), K), jnp.nan, real),
+            # host-side NaN markers ("iteration never ran"): a jnp.full
+            # here runs an eager convert_element_type jit whose NaN
+            # output trips jax_debug_nans (REPRO_DEBUG=nans) on every
+            # monitored solve; device_put of a numpy constant does not
+            trace=jnp.asarray(onp.full((max(qmax, 0), K), onp.nan,
+                                       onp.dtype(real))),
             fro2=jnp.asarray(0.0 if fro2 is None else fro2, real),
             mask=jnp.arange(K) < kmon)
 

@@ -1,0 +1,360 @@
+"""Factorization-as-a-service: continuous-batching SVD/PCA server.
+
+The decode server (``repro.launch.serve``) admits token requests into
+fixed device slots and steps every active slot with one fused call —
+this module applies the same architecture to factorization jobs
+(DESIGN.md §15):
+
+  1. callers :meth:`FactorServer.submit` a
+     :class:`repro.api.FactorizationRequest` (any operator family);
+  2. each scheduling round (:meth:`FactorServer.step`) first serves
+     every request whose cache key hits the LRU result cache — a
+     dict lookup returning the stored factors bit-identical;
+  3. then declared rank-1 refreshes (``refresh_of`` + ``update``)
+     whose base is still cached take the ``repro.api.refresh_rank1``
+     fast path — one projection contact, no power passes;
+  4. then up to ``batch`` *coalescible* small dense jobs — same
+     (shape, dtype, k, K, q, schedule, rule, shift-mode) signature —
+     fill the device slots and run as ONE vmapped solve
+     (``repro.api.factorize_batched``): one jit trace per signature,
+     one device dispatch per round;
+  5. everything else (blocked / sharded / sparse / CSR operators,
+     vector-shift jobs) routes through ``repro.api.run_request`` to
+     the single-device or streamed distributed paths.
+
+Every response is a :class:`repro.api.FactorizationResult` carrying
+the factors, the request's own ``ConvergenceReport`` (the per-request
+quality SLA), the cache-hit / refresh flags, its device batch width,
+and queue/compute timing for observability.
+
+Failures are per-request, never queue-wide: a poisoned operator (e.g.
+NaNs under ``REPRO_DEBUG=nans``) that kills a coalesced batch triggers
+a serial retry of that batch's members, so only the poisoned request
+returns ``error`` — its slot is returned and the queue keeps draining.
+
+This module touches operators ONLY through ``repro.api`` (lint rule
+SV009): no ``repro.core`` / ``repro.data`` / ``repro.kernels`` imports.
+
+CPU smoke:
+  PYTHONPATH=src python -m repro.launch.factor_serve --smoke \
+      --requests 8 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+
+
+def _is_batchable(req: api.FactorizationRequest) -> bool:
+    """Small dense 2-D array jobs with a *static* shift (schedule or
+    None — a shifting vector rides in ``mu``) coalesce into the vmapped
+    slots; everything else takes its routed serial path."""
+    x = req.matrix
+    if not isinstance(x, np.ndarray | jax.Array) or x.ndim != 2:
+        return False
+    if req.refresh_of is not None:
+        return False
+    # a shift *vector* (anything shaped) is per-job data, not a static
+    # argument; normalize those through the serial path
+    return req.shift is None or not hasattr(req.shift, "shape")
+
+
+def _mu_mode(req: api.FactorizationRequest) -> str:
+    if req.mu is not None:
+        return "vec"
+    return "center" if req.center else "none"
+
+
+def _group_key(req: api.FactorizationRequest) -> tuple:
+    """Jobs sharing this key share one vmapped trace (the jit cache
+    key: batch width + everything static to the solve)."""
+    x = req.matrix
+    return (tuple(x.shape), str(x.dtype), req.k, req.K, req.q,
+            req.shift, req.stop, _mu_mode(req))
+
+
+class _LRUCache:
+    """Result cache: request cache key -> (fingerprint, result pair).
+
+    ``by_fp`` additionally indexes the most recent entry per matrix
+    fingerprint so a declared rank-1 refresh can find *some* cached
+    factorization of its base matrix without knowing the base
+    request's full parameter set.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.data: collections.OrderedDict = collections.OrderedDict()
+        self.by_fp: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self.data)
+
+    def get(self, key):
+        if key is None or key not in self.data:
+            self.misses += 1
+            return None
+        self.data.move_to_end(key)
+        self.hits += 1
+        return self.data[key][1]
+
+    def get_by_fp(self, fp):
+        key = self.by_fp.get(fp)
+        return None if key is None else self.get(key)
+
+    def put(self, key, fp, value):
+        if key is None or self.capacity <= 0:
+            return
+        self.data[key] = (fp, value)
+        self.data.move_to_end(key)
+        if fp is not None:
+            self.by_fp[fp] = key
+        while len(self.data) > self.capacity:
+            old_key, (old_fp, _) = self.data.popitem(last=False)
+            if self.by_fp.get(old_fp) == old_key:
+                del self.by_fp[old_fp]
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    req: api.FactorizationRequest
+    key: tuple | None           # request cache key (None: uncacheable)
+    fp: Any                     # matrix fingerprint (None: uncacheable)
+    t_submit: float
+
+
+class FactorServer:
+    """Continuous-batching factorization server (see module docstring).
+
+    ``batch`` is the device slot count — the max coalesced width of one
+    vmapped solve.  ``cache_size`` bounds the LRU result cache (0
+    disables caching).  ``mesh`` / ``engine`` thread through to the
+    routed execution paths for serial jobs.
+    """
+
+    def __init__(self, batch: int = 4, cache_size: int = 64, *,
+                 mesh=None, engine=None):
+        self.B = batch
+        self.mesh = mesh
+        self.engine = engine
+        self.cache = _LRUCache(cache_size)
+        self.queue: collections.deque[_Pending] = collections.deque()
+        self.active = np.zeros(batch, bool)     # device slot occupancy
+        self._rid = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def submit(self, req: api.FactorizationRequest) -> int:
+        """Enqueue one request; returns its request id.  The cache key
+        (matrix fingerprint + factor-changing fields) is computed at
+        admission — O(1) for memmap-backed operators — so scheduling
+        rounds never rescan the matrix."""
+        rid = self._rid
+        self._rid += 1
+        try:
+            key = api.request_cache_key(req)
+            fp = key[0]
+        except TypeError:
+            key = fp = None     # unfingerprintable (e.g. CallableOp)
+        self.queue.append(_Pending(rid, req, key, fp,
+                                   time.perf_counter()))
+        return rid
+
+    def step(self) -> list[tuple[int, api.FactorizationResult]]:
+        """One scheduling round: serve cache hits and refreshes, run
+        one coalesced batch through the slots, route the serial jobs.
+        Returns ``(rid, result)`` pairs completed this round; every
+        submitted request completes within finitely many rounds (mixed
+        shapes coalesce round-robin, one signature per round)."""
+        done: list[tuple[int, api.FactorizationResult]] = []
+        if not self.queue:
+            return done
+
+        rest: list[_Pending] = []
+        batch_group: list[_Pending] = []
+        batch_key = None
+        serial: list[_Pending] = []
+        for it in self.queue:
+            cached = self.cache.get(it.key)
+            if cached is not None:
+                t0 = time.perf_counter()
+                res, rep = cached
+                done.append((it.rid, api.FactorizationResult(
+                    result=res, report=rep, tag=it.req.tag,
+                    cache_hit=True,
+                    queue_ms=(t0 - it.t_submit) * 1e3,
+                    compute_ms=(time.perf_counter() - t0) * 1e3)))
+                continue
+            if _is_batchable(it.req):
+                gk = _group_key(it.req)
+                if batch_key is None:
+                    batch_key = gk
+                if gk == batch_key and len(batch_group) < self.B:
+                    batch_group.append(it)
+                else:
+                    rest.append(it)   # another signature / overflow:
+                    #                   stays queued, coalesces in a
+                    #                   later round (no deadlock: every
+                    #                   round drains one full group)
+                continue
+            serial.append(it)
+        self.queue = collections.deque(rest)
+
+        if batch_group:
+            done.extend(self._run_batched(batch_group))
+        for it in serial:
+            done.append((it.rid, self._run_one(it)))
+        return done
+
+    def drain(self) -> dict[int, api.FactorizationResult]:
+        """Step until the queue is empty; returns {rid: result}."""
+        out: dict[int, api.FactorizationResult] = {}
+        while self.queue:
+            for rid, res in self.step():
+                out[rid] = res
+        return out
+
+    # -- execution lanes -------------------------------------------------
+
+    def _finish(self, it: _Pending, res, rep, *, t0, t1, width=1,
+                refreshed=False) -> api.FactorizationResult:
+        self.cache.put(it.key, it.fp, (res, rep))
+        return api.FactorizationResult(
+            result=res, report=rep, tag=it.req.tag,
+            refreshed=refreshed, batch_width=width,
+            queue_ms=(t0 - it.t_submit) * 1e3,
+            compute_ms=(t1 - t0) * 1e3)
+
+    def _fail(self, it: _Pending, err: Exception, *, t0,
+              ) -> api.FactorizationResult:
+        return api.FactorizationResult(
+            result=None, report=None, tag=it.req.tag,
+            queue_ms=(t0 - it.t_submit) * 1e3,
+            compute_ms=(time.perf_counter() - t0) * 1e3,
+            error=f"{type(err).__name__}: {err}")
+
+    def _run_batched(self, group: list[_Pending],
+                     ) -> list[tuple[int, api.FactorizationResult]]:
+        """One vmapped solve over the coalesced group — the device
+        slots.  On any batch-level failure, fall back to serial
+        execution of the members so only the actually-poisoned
+        request(s) fail."""
+        req0 = group[0].req
+        n_slots = len(group)
+        self.active[:n_slots] = True
+        t0 = time.perf_counter()
+        try:
+            Xs = jnp.stack([jnp.asarray(it.req.matrix) for it in group])
+            mode = _mu_mode(req0)
+            if mode == "vec":
+                mus = jnp.stack([jnp.asarray(it.req.mu) for it in group])
+            elif mode == "center":
+                # matches factorize(center=True): op.col_mean() per job
+                mus = jnp.mean(Xs, axis=2)
+            else:
+                mus = None
+            keys = jnp.stack([jax.random.PRNGKey(it.req.seed)
+                              for it in group])
+            res, rep = api.factorize_batched(
+                Xs, mus, req0.k, K=req0.K, q=req0.q, keys=keys,
+                shift=req0.shift, stop=req0.stop)
+            jax.block_until_ready(res.S)
+            t1 = time.perf_counter()
+            pairs = api.split_batched(res, rep)
+            return [(it.rid, self._finish(it, r, c, t0=t0, t1=t1,
+                                          width=n_slots))
+                    for it, (r, c) in zip(group, pairs, strict=True)]
+        except Exception:
+            # poisoned batch: retry members serially — per-request
+            # isolation beats batch throughput here
+            return [(it.rid, self._run_one(it)) for it in group]
+        finally:
+            self.active[:n_slots] = False
+
+    def _run_one(self, it: _Pending) -> api.FactorizationResult:
+        t0 = time.perf_counter()
+        req = it.req
+        try:
+            if req.refresh_of is not None and req.update is not None:
+                base = self.cache.get_by_fp(req.refresh_of)
+                if base is not None:
+                    u, w = req.update
+                    res, rep = api.refresh_rank1(
+                        base[0], req.matrix, u, w, mu=req.mu,
+                        engine=self.engine)
+                    jax.block_until_ready(res.S)
+                    return self._finish(it, res, rep, t0=t0,
+                                        t1=time.perf_counter(),
+                                        refreshed=True)
+                # base evicted / never seen: full solve below
+            res, rep = api.run_request(req, mesh=self.mesh,
+                                       engine=self.engine)
+            jax.block_until_ready(res.S)
+            return self._finish(it, res, rep, t0=t0,
+                                t1=time.perf_counter())
+        except Exception as e:                     # noqa: BLE001
+            return self._fail(it, e, t0=t0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--k", type=int, default=6)
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument("--repeat-every", type=int, default=3,
+                    help="every Nth request repeats the first matrix "
+                         "(exercises the result cache)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(args.seed)
+    server = FactorServer(batch=args.batch)
+    hot = rng.normal(size=(args.m, args.n)).astype(np.float32)
+    rids = []
+    for i in range(args.requests):
+        if args.repeat_every and i and i % args.repeat_every == 0:
+            X = hot
+        else:
+            X = rng.normal(size=(args.m, args.n)).astype(np.float32)
+        rids.append(server.submit(api.FactorizationRequest(
+            X, k=args.k, q=args.q, tag=i)))
+    t0 = time.perf_counter()
+    results = server.drain()
+    dt = time.perf_counter() - t0
+    hits = sum(r.cache_hit for r in results.values())
+    errs = sum(not r.ok for r in results.values())
+    widths = [r.batch_width for r in results.values() if not r.cache_hit]
+    print(f"served {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / dt:.1f} req/s), cache hits {hits}, "
+          f"errors {errs}, max batch width "
+          f"{max(widths) if widths else 0}")
+    for rid in rids:
+        r = results[rid]
+        post = (None if r.report is None or
+                r.report.posterior_rel_err is None
+                else float(r.report.posterior_rel_err))
+        print(f"req={rid} tag={r.tag} ok={r.ok} hit={r.cache_hit} "
+              f"width={r.batch_width} queue={r.queue_ms:.1f}ms "
+              f"compute={r.compute_ms:.1f}ms rel_err={post}")
+
+
+if __name__ == "__main__":
+    main()

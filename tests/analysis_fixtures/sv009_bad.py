@@ -1,0 +1,11 @@
+"""SV009 negative fixture: a serving-layer module that reaches past
+the front door — every flavor of bypass import fires once."""
+import repro.core
+from repro import core
+from repro.core.srsvd import srsvd
+from repro.data import CSRMatrix
+
+
+def serve_one(op, k):
+    core.as_linop(op)
+    return srsvd, CSRMatrix, repro.core, k

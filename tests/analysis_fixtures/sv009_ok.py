@@ -1,0 +1,15 @@
+"""SV009 positive fixture: the serving layer through the front door
+only — `repro.api` plus unrestricted stdlib/jax/numpy imports."""
+import time
+
+import jax
+import numpy as np
+
+from repro import api
+
+
+def serve_one(req):
+    t0 = time.perf_counter()
+    res, rep = api.run_request(req)
+    jax.block_until_ready(res.S)
+    return res, rep, np.float32(time.perf_counter() - t0)

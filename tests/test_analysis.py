@@ -24,7 +24,8 @@ def rules_hit(paths):
 
 # -- per-rule fixtures ------------------------------------------------------
 
-PER_FILE_RULES = ["RC001", "RS002", "BA003", "DT004", "DT005", "IM006"]
+PER_FILE_RULES = ["RC001", "RS002", "BA003", "DT004", "DT005", "IM006",
+                  "SV009"]
 
 
 @pytest.mark.parametrize("rule", PER_FILE_RULES)
@@ -65,6 +66,21 @@ def test_de008_fixture_pair():
     assert "DE008" in {v.rule for v in bad}
     assert any("orphan_export" in v.message for v in bad)
     assert run_lint([FIXTURES / "de008_ok"]) == []
+
+
+def test_sv009_pins_the_real_server_module():
+    """SV009 is scoped by path: it watches launch/factor_serve.py (and
+    the sv009_* fixtures) and stays silent elsewhere — launch/serve.py
+    and the rest of the repo import plumbing freely."""
+    violations = run_lint([FIXTURES / "sv009_bad.py"])
+    assert len(violations) == 4           # each bypass import fires once
+    assert all("repro.api" in v.message for v in violations)
+    # the real server module is in scope and currently clean
+    server = REPO_SRC / "launch" / "factor_serve.py"
+    assert server.is_file()
+    assert run_lint([server]) == []
+    # a non-server launch module with the same imports is out of scope
+    assert "SV009" not in rules_hit([REPO_SRC / "launch" / "serve.py"])
 
 
 def test_de008_reference_corpus_counts():
@@ -173,7 +189,7 @@ def _run_cli(*args):
 def test_cli_nonzero_on_fixtures():
     for bad in ["rc001_bad.py", "rs002_bad.py", "ba003_bad.py",
                 "dt004_bad.py", "dt005_bad.py", "im006_bad.py",
-                "de008_bad.py", "ow007_bad"]:
+                "de008_bad.py", "ow007_bad", "sv009_bad.py"]:
         proc = _run_cli(str(FIXTURES / bad))
         assert proc.returncode == 1, (bad, proc.stdout, proc.stderr)
 

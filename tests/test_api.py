@@ -1,0 +1,275 @@
+"""`repro.api` — the unified factorize() front door (DESIGN.md §15).
+
+Covers: the always-a-pair contract across the single-device operator
+families (dense / CSR / blocked; the sharded families run in the
+multidevice suite, `test_distributed.py::
+test_factorize_routes_sharded_families`), fingerprint identity
+semantics (content-addressed, blocking-invariant, O(1) for memmaps),
+request cache keys, batched-vs-serial parity, and the rank-1 refresh
+fast path.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (BlockedOp, CallableOp, ChainedOp, DenseOp,
+                        FixedIters, PVEStop, srsvd)
+from repro.data import (ColumnBlockLoader, CSRMatrix, open_memmap_matrix,
+                        prefetch)
+
+
+def _rand(m, n, seed=0, dtype=np.float32):
+    return np.random.default_rng(seed).standard_normal((m, n)) \
+        .astype(dtype)
+
+
+def _sparse(m, n, seed=0, density=0.1):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, n)).astype(np.float32)
+    X[rng.random((m, n)) > density] = 0.0
+    return X
+
+
+# ---------------------------------------------------------------------------
+# factorize(): the always-a-pair contract, across operator families
+
+
+def test_factorize_always_returns_pair():
+    X = _rand(40, 30)
+    out = api.factorize(X, 5, q=2)
+    assert isinstance(out, tuple) and len(out) == 2
+    res, rep = out
+    assert res.U.shape == (40, 5) and res.S.shape == (5,)
+    assert rep.posterior_rel_err is not None
+    # stop=None attaches a bit-for-bit FixedIters monitor: factors are
+    # byte-identical to the bare srsvd path with the same key
+    bare = srsvd(jnp.asarray(X), None, 5, q=2, key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(bare.U))
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(bare.S))
+
+
+def test_factorize_dense_csr_blocked_chain_agree():
+    """The four single-device presentations of the same matrix — dense
+    array, CSRMatrix, out-of-core BlockedOp, lazy ChainedOp — route
+    through their own execution paths and agree on the factors (same
+    key) and the certificate."""
+    dense = _sparse(40, 60, seed=1)
+    csr = CSRMatrix.from_dense(dense)
+    blocked = BlockedOp(ColumnBlockLoader(dense, block_size=13))
+    chain = ChainedOp((DenseOp(jnp.eye(40, dtype=jnp.float32)),
+                       DenseOp(jnp.asarray(dense))))
+    ref, ref_rep = api.factorize(dense, 4, q=2, seed=5)
+    for x in (csr, blocked, chain):
+        res, rep = api.factorize(x, 4, q=2, seed=5)
+        np.testing.assert_allclose(np.asarray(res.S), np.asarray(ref.S),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(rep.posterior_rel_err),
+                                   float(ref_rep.posterior_rel_err),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_factorize_center_matches_explicit_mu():
+    X = _rand(30, 50, seed=2)
+    res_c, _ = api.factorize(X, 4, q=1, center=True, seed=1)
+    res_m, _ = api.factorize(X, 4, q=1, mu=X.mean(axis=1), seed=1)
+    np.testing.assert_allclose(np.asarray(res_c.S), np.asarray(res_m.S),
+                               rtol=1e-6)
+    with pytest.raises(ValueError, match="center"):
+        api.factorize(X, 4, center=True, mu=X.mean(axis=1))
+
+
+def test_factorize_accepts_stop_rules_and_mesh_guard():
+    X = _rand(40, 30, seed=3)
+    _, rep = api.factorize(X, 5, q=6, stop=PVEStop(1e-1), seed=2)
+    assert int(rep.iters_run) <= 6
+    # ints are FixedIters shorthand
+    _, rep2 = api.factorize(X, 5, q=2, stop=3, seed=2)
+    assert int(rep2.iters_run) == 3
+    # a non-sharded LinOp under mesh= is a routing error, not silence
+    op = BlockedOp(ColumnBlockLoader(X, block_size=8))
+    with pytest.raises(TypeError, match="mesh"):
+        api.factorize(op, 5, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# fingerprints: content identity
+
+
+def test_fingerprint_content_addressed():
+    X = _rand(20, 30, seed=4)
+    fp = api.fingerprint(X)
+    assert api.fingerprint(X.copy()) == fp          # same bytes
+    assert hash(api.fingerprint(X.copy())) == hash(fp)
+    Y = X.copy()
+    Y[7, 11] += 1e-3
+    assert api.fingerprint(Y) != fp                 # any byte differs
+    assert api.fingerprint(X.astype(np.float64)) != fp
+
+
+def test_fingerprint_blocking_invariant_structures_distinct():
+    dense = _sparse(30, 40, seed=5)
+    b1 = BlockedOp(ColumnBlockLoader(dense, block_size=7))
+    b2 = BlockedOp(ColumnBlockLoader(dense, block_size=16))
+    b3 = BlockedOp(prefetch(ColumnBlockLoader(dense, block_size=7),
+                            depth=2))
+    assert api.fingerprint(b1) == api.fingerprint(b2)   # block size
+    assert api.fingerprint(b1) == api.fingerprint(b3)   # prefetch depth
+    # but operator *structure* is part of identity: the same bytes as a
+    # CSR encoding factor through a different path
+    csr = CSRMatrix.from_dense(dense)
+    assert api.fingerprint(csr) != api.fingerprint(dense)
+    assert api.fingerprint(b1) != api.fingerprint(dense)
+
+
+def test_fingerprint_memmap_o1_and_change_detection(tmp_path):
+    X = _rand(64, 48, seed=6)
+    path = os.fspath(tmp_path / "X.f32")
+    X.tofile(path)
+
+    def mm():
+        return np.memmap(path, dtype=np.float32, mode="r",
+                         shape=(64, 48))
+
+    fp = api.fingerprint(mm())
+    assert fp == api.fingerprint(mm())
+    # the memmap fast path and the in-host content hash are distinct
+    # token *rules* over the same bytes — they only need to be each
+    # internally stable, and the memmap one must never scan the file:
+    # rewriting the file (bytes + mtime change) changes identity
+    Y = X.copy()
+    Y[0, 0] += 1.0
+    Y.tofile(path)
+    os.utime(path, ns=(1, 2))   # force distinct mtime_ns regardless of
+    #                             filesystem timestamp granularity
+    assert api.fingerprint(mm()) != fp
+    # the blocked operator over the same memmap file delegates to the
+    # same O(1) source token, block size excluded from identity
+    b1 = BlockedOp(open_memmap_matrix(path, (64, 48), "float32",
+                                      block_size=7))
+    b2 = BlockedOp(open_memmap_matrix(path, (64, 48), "float32",
+                                      block_size=16))
+    assert api.fingerprint(b1) == api.fingerprint(b2)
+
+
+def test_fingerprint_rejects_opaque_operators():
+    X = jnp.asarray(_rand(10, 8, seed=7))
+    op = CallableOp((10, 8), jnp.float32, lambda B: X @ B,
+                    lambda B: X.T @ B, lambda: X.mean(axis=1))
+    with pytest.raises(TypeError, match="fingerprint"):
+        api.fingerprint(op)
+
+
+def test_request_cache_key_fields():
+    X = _rand(20, 30, seed=8)
+    base = api.FactorizationRequest(X, k=4, q=2, seed=1)
+    key = api.request_cache_key(base)
+    assert key == api.request_cache_key(
+        api.FactorizationRequest(X.copy(), k=4, q=2, seed=1, tag="zzz"))
+    # every factor-changing field perturbs the key
+    for other in (
+            api.FactorizationRequest(X, k=5, q=2, seed=1),
+            api.FactorizationRequest(X, k=4, q=3, seed=1),
+            api.FactorizationRequest(X, k=4, q=2, seed=2),
+            api.FactorizationRequest(X, k=4, q=2, seed=1, center=True),
+            api.FactorizationRequest(X, k=4, q=2, seed=1,
+                                     mu=X.mean(axis=1)),
+            api.FactorizationRequest(X, k=4, q=2, seed=1,
+                                     stop=PVEStop(1e-2)),
+    ):
+        assert api.request_cache_key(other) != key
+
+
+# ---------------------------------------------------------------------------
+# batched entry: parity with the serial path
+
+
+def test_factorize_batched_matches_serial():
+    B, m, n, k = 3, 32, 24, 4
+    Xs = np.stack([_rand(m, n, seed=10 + i) for i in range(B)])
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(B)])
+    res, rep = api.factorize_batched(jnp.asarray(Xs), None, k, q=2,
+                                     keys=keys)
+    assert res.U.shape == (B, m, k)
+    pairs = api.split_batched(res, rep)
+    assert len(pairs) == B
+    for i, (r, c) in enumerate(pairs):
+        ref, ref_rep = api.factorize(Xs[i], k, q=2,
+                                     key=jax.random.PRNGKey(i))
+        np.testing.assert_allclose(np.asarray(r.S), np.asarray(ref.S),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            float(c.posterior_rel_err),
+            float(ref_rep.posterior_rel_err), rtol=1e-4, atol=1e-5)
+
+
+def test_factorize_batched_rejects_vector_shift_and_bad_rank():
+    Xs = jnp.zeros((2, 8, 6))
+    keys = jnp.stack([jax.random.PRNGKey(0)] * 2)
+    with pytest.raises(TypeError, match="ShiftSchedule"):
+        api.factorize_batched(Xs, None, 2, keys=keys,
+                              shift=jnp.zeros((8,)))
+    with pytest.raises(ValueError, match="stacked"):
+        api.factorize_batched(jnp.zeros((8, 6)), None, 2, keys=keys)
+
+
+# ---------------------------------------------------------------------------
+# rank-1 refresh fast path
+
+
+def test_refresh_rank1_optimal_on_low_rank_update():
+    """After X_new = X_old + u w^T of an (numerically) exactly-factored
+    low-rank base, the refresh returns the *optimal* rank-k truncation
+    of X_new — no fresh sample, no power passes (iters_run == 0) — and
+    its certificate matches the true residual."""
+    rng = np.random.default_rng(20)
+    m, n, k = 50, 40, 5
+    A = (rng.standard_normal((m, k)) @ rng.standard_normal((k, n))) \
+        .astype(np.float32)
+    base, _ = api.factorize(A, k, q=2, seed=0)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(n).astype(np.float32)
+    Anew = A + np.outer(u, w)
+    res, rep = api.refresh_rank1(base, Anew, u, w)
+    sv = np.linalg.svd(Anew, compute_uv=False)
+    np.testing.assert_allclose(np.asarray(res.S), sv[:k],
+                               rtol=1e-4, atol=1e-4 * sv[0])
+    opt = np.sqrt((sv[k:] ** 2).sum()) / np.linalg.norm(Anew)
+    got = np.linalg.norm(res.U * res.S @ res.Vt - Anew) \
+        / np.linalg.norm(Anew)
+    assert got <= opt * (1 + 1e-4) + 1e-6
+    assert int(rep.iters_run) == 0
+    np.testing.assert_allclose(float(rep.posterior_rel_err), opt,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_refresh_rank1_through_blocked_operator():
+    """The refresh's single projection contact runs through the
+    operator protocol — a BlockedOp new matrix works without ever
+    materializing it on device in one piece."""
+    rng = np.random.default_rng(21)
+    m, n, k = 40, 60, 4
+    A = (rng.standard_normal((m, k)) @ rng.standard_normal((k, n))) \
+        .astype(np.float32)
+    base, _ = api.factorize(A, k, q=2, seed=0)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(n).astype(np.float32)
+    Anew = A + np.outer(u, w)
+    op = BlockedOp(ColumnBlockLoader(Anew, block_size=17))
+    res, _ = api.refresh_rank1(base, op, u, w)
+    ref, _ = api.refresh_rank1(base, Anew, u, w)
+    np.testing.assert_allclose(np.asarray(res.S), np.asarray(ref.S),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_request_matches_factorize():
+    X = _rand(30, 20, seed=22)
+    req = api.FactorizationRequest(X, k=4, q=2, seed=7,
+                                   stop=FixedIters())
+    res, rep = api.run_request(req)
+    ref, ref_rep = api.factorize(X, 4, q=2, seed=7, stop=FixedIters())
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(ref.S))

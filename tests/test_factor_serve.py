@@ -1,0 +1,230 @@
+"""The factorization server's batching loop (DESIGN.md §15).
+
+The contract under test: same-shape requests coalesce into ONE vmapped
+trace (compile counter), mixed shapes drain without deadlock, cache
+hits return bit-identical factors, and a poisoned request fails alone
+— the slot comes back and the queue keeps moving.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import batched_trace_count
+from repro.data import CSRMatrix
+from repro.launch.factor_serve import FactorServer
+
+
+def _rand(m, n, seed=0):
+    return np.random.default_rng(seed).standard_normal((m, n)) \
+        .astype(np.float32)
+
+
+def test_same_shape_requests_coalesce_into_one_trace():
+    """B same-signature requests fill the slots and run as one vmapped
+    solve: exactly one new trace of the batched solver, every response
+    reporting batch_width == B; a second same-signature wave re-uses
+    the trace (zero new compiles)."""
+    B = 4
+    server = FactorServer(batch=B)
+    rids = [server.submit(api.FactorizationRequest(
+        _rand(32, 24, seed=i), k=4, q=2, seed=i)) for i in range(B)]
+    t0 = batched_trace_count()
+    results = server.drain()
+    t1 = batched_trace_count()
+    assert t1 - t0 == 1, "coalesced batch must compile exactly once"
+    assert all(results[r].ok and results[r].batch_width == B
+               for r in rids)
+    # second wave, same signature: cached jit executable, no re-trace
+    rids2 = [server.submit(api.FactorizationRequest(
+        _rand(32, 24, seed=100 + i), k=4, q=2, seed=i))
+        for i in range(B)]
+    results2 = server.drain()
+    assert batched_trace_count() - t1 == 0
+    assert all(results2[r].ok for r in rids2)
+
+
+def test_batched_responses_match_direct_factorize():
+    """Every coalesced response's factors and certificate match a
+    direct factorize() call to ≤1e-5 — the serving parity SLA."""
+    server = FactorServer(batch=3)
+    Xs = [_rand(40, 28, seed=50 + i) for i in range(3)]
+    rids = [server.submit(api.FactorizationRequest(X, k=5, q=2, seed=i))
+            for i, X in enumerate(Xs)]
+    results = server.drain()
+    for i, rid in enumerate(rids):
+        r = results[rid]
+        ref, ref_rep = api.factorize(Xs[i], 5, q=2, seed=i)
+        np.testing.assert_allclose(np.asarray(r.result.S),
+                                   np.asarray(ref.S),
+                                   rtol=1e-5, atol=1e-5)
+        assert abs(float(r.report.posterior_rel_err)
+                   - float(ref_rep.posterior_rel_err)) <= 1e-5
+
+
+def test_mixed_shapes_and_families_drain_without_deadlock():
+    """A queue mixing three dense shapes, a CSR job, and a centered job
+    completes in finitely many rounds — each round drains one coalesced
+    signature plus the serial lane."""
+    server = FactorServer(batch=4)
+    rids = {}
+    for i in range(3):
+        rids[server.submit(api.FactorizationRequest(
+            _rand(32, 24, seed=i), k=4, q=1, seed=i))] = (32, 24)
+    for i in range(2):
+        rids[server.submit(api.FactorizationRequest(
+            _rand(16, 48, seed=10 + i), k=3, q=1, seed=i))] = (16, 48)
+    rids[server.submit(api.FactorizationRequest(
+        _rand(64, 8, seed=20), k=2, q=1))] = (64, 8)
+    dense = _rand(24, 40, seed=21)
+    dense[np.random.default_rng(0).random((24, 40)) > 0.2] = 0.0
+    rids[server.submit(api.FactorizationRequest(
+        CSRMatrix.from_dense(dense), k=3, q=1))] = (24, 40)
+    rids[server.submit(api.FactorizationRequest(
+        _rand(32, 24, seed=30), k=4, q=1, center=True))] = (32, 24)
+    rounds = 0
+    done = {}
+    while server.pending:
+        rounds += 1
+        assert rounds <= 16, "scheduling loop is not draining"
+        for rid, res in server.step():
+            done[rid] = res
+    assert set(done) == set(rids)
+    for rid, res in done.items():
+        assert res.ok, res.error
+        m, n = rids[rid]
+        assert res.result.U.shape[0] == m
+
+
+def test_cache_hit_returns_bit_identical_factors():
+    server = FactorServer(batch=2, cache_size=8)
+    X = _rand(30, 20, seed=40)
+    r1 = server.submit(api.FactorizationRequest(X, k=4, q=2, seed=3))
+    first = server.drain()[r1]
+    assert not first.cache_hit
+    r2 = server.submit(api.FactorizationRequest(X.copy(), k=4, q=2,
+                                                seed=3))
+    second = server.drain()[r2]
+    assert second.cache_hit
+    np.testing.assert_array_equal(np.asarray(second.result.U),
+                                  np.asarray(first.result.U))
+    np.testing.assert_array_equal(np.asarray(second.result.S),
+                                  np.asarray(first.result.S))
+    np.testing.assert_array_equal(np.asarray(second.result.Vt),
+                                  np.asarray(first.result.Vt))
+    # a different seed is a different result — no false sharing
+    r3 = server.submit(api.FactorizationRequest(X, k=4, q=2, seed=4))
+    assert not server.drain()[r3].cache_hit
+
+
+def test_cache_lru_eviction_bounds_memory():
+    server = FactorServer(batch=1, cache_size=2)
+    Xs = [_rand(16, 12, seed=60 + i) for i in range(3)]
+    for X in Xs:
+        server.submit(api.FactorizationRequest(X, k=2, q=1))
+    server.drain()
+    assert len(server.cache) == 2
+    # oldest entry evicted: resubmitting X0 recomputes
+    r0 = server.submit(api.FactorizationRequest(Xs[0], k=2, q=1))
+    assert not server.drain()[r0].cache_hit
+    # most-recent entry still hits
+    r2 = server.submit(api.FactorizationRequest(Xs[2], k=2, q=1))
+    assert server.drain()[r2].cache_hit
+
+
+def test_poisoned_request_fails_alone_queue_drains():
+    """Under jax_debug_nans (the REPRO_DEBUG=nans sanitizer switch), a
+    NaN operator poisons its whole vmapped batch — the server retries
+    the batch serially so ONLY the poisoned request errors; its slot is
+    returned and every other request completes."""
+    jax.config.update("jax_debug_nans", True)
+    try:
+        server = FactorServer(batch=4)
+        good = [_rand(32, 24, seed=70 + i) for i in range(3)]
+        poisoned = _rand(32, 24, seed=99)
+        poisoned[5, 5] = np.nan
+        rids = [server.submit(api.FactorizationRequest(
+            X, k=4, q=1, seed=i)) for i, X in enumerate(good)]
+        bad_rid = server.submit(api.FactorizationRequest(
+            poisoned, k=4, q=1, seed=9))
+        results = server.drain()
+        assert not results[bad_rid].ok
+        assert results[bad_rid].error  # carries the exception type text
+        for rid in rids:
+            assert results[rid].ok, results[rid].error
+        assert not server.active.any(), "slots must be returned"
+        # the server keeps serving after the failure
+        r_next = server.submit(api.FactorizationRequest(
+            _rand(32, 24, seed=80), k=4, q=1))
+        assert server.drain()[r_next].ok
+    finally:
+        jax.config.update("jax_debug_nans", False)
+
+
+def test_refresh_fast_path_when_base_is_cached():
+    """A request declaring itself a rank-1 update of a cached base
+    takes the refresh_rank1 lane (refreshed=True, iters_run == 0) and
+    matches the from-scratch factorization of the new matrix; with the
+    base evicted, the same request silently takes the full solve."""
+    rng = np.random.default_rng(90)
+    m, n, k = 40, 30, 4
+    A = (rng.standard_normal((m, k)) @ rng.standard_normal((k, n))) \
+        .astype(np.float32)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(n).astype(np.float32)
+    Anew = A + np.outer(u, w)
+
+    server = FactorServer(batch=2, cache_size=8)
+    server.submit(api.FactorizationRequest(A, k=k, q=2, seed=1))
+    server.drain()
+    fp = api.fingerprint(A)
+    rid = server.submit(api.FactorizationRequest(
+        Anew, k=k, q=2, seed=1, refresh_of=fp, update=(u, w)))
+    res = server.drain()[rid]
+    assert res.ok and res.refreshed
+    assert int(res.report.iters_run) == 0
+    sv = np.linalg.svd(Anew, compute_uv=False)
+    np.testing.assert_allclose(np.asarray(res.result.S), sv[:k],
+                               rtol=1e-4, atol=1e-4 * sv[0])
+    # refreshed results are cached like any other
+    rid2 = server.submit(api.FactorizationRequest(
+        Anew, k=k, q=2, seed=1, refresh_of=fp, update=(u, w)))
+    assert server.drain()[rid2].cache_hit
+
+    cold = FactorServer(batch=2, cache_size=8)   # base never seen
+    rid3 = cold.submit(api.FactorizationRequest(
+        Anew, k=k, q=2, seed=1, refresh_of=fp, update=(u, w)))
+    res3 = cold.drain()[rid3]
+    assert res3.ok and not res3.refreshed       # full solve fallback
+    np.testing.assert_allclose(np.asarray(res3.result.S),
+                               np.asarray(res.result.S),
+                               rtol=1e-3, atol=1e-3 * sv[0])
+
+
+def test_timing_fields_and_unfingerprintable_requests():
+    """queue/compute timings are populated, and an operator with no
+    content access (CallableOp) still factorizes — it just never
+    caches."""
+    from repro.core import CallableOp, FixedIters
+    X = jnp.asarray(_rand(20, 16, seed=95))
+    op = CallableOp((20, 16), jnp.float32, lambda B: X @ B,
+                    lambda B: X.T @ B, lambda: X.mean(axis=1))
+    server = FactorServer(batch=2)
+    rid = server.submit(api.FactorizationRequest(
+        op, k=3, q=1, stop=FixedIters(certificate=False)))
+    res = server.drain()[rid]
+    assert res.ok and not res.cache_hit
+    assert res.queue_ms >= 0 and res.compute_ms > 0
+    rid2 = server.submit(api.FactorizationRequest(
+        op, k=3, q=1, stop=FixedIters(certificate=False)))
+    assert not server.drain()[rid2].cache_hit   # uncacheable, recomputed
+
+
+def test_serve_cli_smoke(capsys):
+    from repro.launch import factor_serve
+    factor_serve.main(["--smoke", "--requests", "7", "--batch", "2",
+                       "--m", "24", "--n", "16", "--k", "3"])
+    out = capsys.readouterr().out
+    assert "served 7 requests" in out
+    assert "cache hits 1" in out

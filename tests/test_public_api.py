@@ -6,6 +6,7 @@ exports get a minimal behavioural smoke test — in particular the
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api
 import repro.ckpt
 import repro.core
 import repro.data
@@ -15,6 +16,10 @@ from repro.analysis import (LintError, ModuleFile, Violation, all_rules,
                             check_contracts, check_kernel_specs,
                             coverage_report, expected_pairs, load_file,
                             run_lint)
+from repro.api import (FactorizationRequest, FactorizationResult,
+                       Fingerprint, batched_trace_count, factorize,
+                       factorize_batched, fingerprint, refresh_rank1,
+                       request_cache_key, run_request, split_batched)
 from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
                         save_checkpoint)
 from repro.core import (PCA, BlockedOp, CallableOp, ChainedOp,
@@ -23,14 +28,14 @@ from repro.core import (PCA, BlockedOp, CallableOp, ChainedOp,
                         DynamicShift, FixedIters, FixedShift, LinOp,
                         PVEStop, ResidualStop, RowShardedBlockedOp,
                         ShardedBlockedOp, ShiftSchedule, SparseOp,
-                        StopRule, SVDResult, as_linop, as_rule,
-                        as_schedule, available_backends,
+                        StopRule, SVDResult, array_token, as_linop,
+                        as_rule, as_schedule, available_backends,
                         available_sparse_backends, default_backend,
                         dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
                         dist_srsvd, dist_srsvd_streamed,
                         expected_error_bound, get_engine, qr_rank1_update,
                         register_backend, register_sparse_backend, rsvd,
-                        srsvd, svd_jit, tsqr)
+                        srsvd, srsvd_batched, svd_jit, tsqr)
 from repro.data import (ColumnBlockLoader, CSRColumnBlockSource, CSRMatrix,
                         DataPipeline, PrefetchingBlockSource,
                         RowBlockLoader, SparseBlock, open_csr,
@@ -51,10 +56,17 @@ _PACKAGES = {
         available_backends, available_sparse_backends, default_backend,
         get_engine, register_backend, register_sparse_backend,
         qr_rank1_update, SVDResult, expected_error_bound, rsvd, srsvd,
-        svd_jit, PCA, dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
-        dist_srsvd, dist_srsvd_streamed, tsqr, ShiftSchedule, FixedShift,
-        DecayingShift, DynamicShift, as_schedule, StopRule, FixedIters,
-        PVEStop, ResidualStop, ConvergenceReport, as_rule,
+        srsvd_batched, batched_trace_count, svd_jit, PCA, Fingerprint,
+        array_token, fingerprint, dist_col_mean, dist_pca_fit,
+        dist_pca_fit_streamed, dist_srsvd, dist_srsvd_streamed, tsqr,
+        ShiftSchedule, FixedShift, DecayingShift, DynamicShift,
+        as_schedule, StopRule, FixedIters, PVEStop, ResidualStop,
+        ConvergenceReport, as_rule,
+    ],
+    repro.api: [
+        FactorizationRequest, FactorizationResult, Fingerprint,
+        batched_trace_count, factorize, factorize_batched, fingerprint,
+        refresh_rank1, request_cache_key, run_request, split_batched,
     ],
     repro.optim: [AdamWConfig, adamw_init, adamw_update, CompressConfig,
                   comm_bytes, compress_state_init, compressed_pod_mean,
