@@ -22,7 +22,7 @@ import time
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
                         roofline, schedule_bench, serve_bench,
                         sparse_bench, stream_bench, table1_images,
-                        table1_words)
+                        table1_words, tol_bench)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -35,6 +35,7 @@ SECTIONS = {
     "serve": serve_bench.main,
     "sparse": sparse_bench.main,
     "stream": stream_bench.main,
+    "tol": tol_bench.main,
 }
 
 

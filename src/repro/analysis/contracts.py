@@ -45,12 +45,15 @@ DENSE_CONTACTS = ("matmul_rank1", "dense_shifted_matmat",
 #: Contact points checked against the *sparse* registry, per backend.
 SPARSE_CONTACTS = ("sparse_matmul_rank1", "sparse_shifted_matmat",
                    "sparse_shifted_rmatmat", "sparse_shifted_gram_matmat")
-#: The three sharded (per-column-range) streamed contacts plus their
+#: The sharded (per-column-range) streamed contacts plus their
 #: row-sharded siblings — dense-registry backed (per-block products
-#: route through the dense primitive).
+#: route through the dense primitive).  The two growth contacts are the
+#: adaptive range finder's fused single-pass rounds (DESIGN.md §16).
 SHARDED_CONTACTS = ("sharded_matmat", "sharded_shifted_rmatmat",
                     "sharded_shifted_gram_matmat",
-                    "row_sharded_shifted_matmat", "row_sharded_rmatmat")
+                    "row_sharded_shifted_matmat", "row_sharded_rmatmat",
+                    "sharded_growth_contact",
+                    "row_sharded_growth_contact")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,6 +277,43 @@ def _check_sharded(engine, reference, results):
                  lambda B: engine.row_sharded_rmatmat(row_src, B),
                  lambda B: reference.row_sharded_rmatmat(row_src, B),
                  args, results)
+
+        # fused adaptive growth rounds (DESIGN.md §16): the certifying
+        # (Qb given) and round-zero (Qb=None) variants, shifted or not
+        rn = row_src.shape[1]
+        for with_shift in (False, True):
+            for with_qb in (False, True):
+                case = (f"{dtype}-blk3-shift{int(with_shift)}"
+                        f"-qb{int(with_qb)}")
+
+                def growth(method, _s=with_shift, _qb=with_qb):
+                    def run(B, Qb, mu, _m=method):
+                        return _m(B, Qb if _qb else None,
+                                  mu if _s else None)
+                    return run
+
+                args = (_abstract((n, k), "float32"),
+                        _abstract((m, 3), "float32"),
+                        _abstract((m,), "float32"))
+                _compare(
+                    b, "sharded_growth_contact", case,
+                    growth(lambda B, Qb, mu: engine
+                           .sharded_growth_contact(col_src, B, Qb, mu)),
+                    growth(lambda B, Qb, mu: reference
+                           .sharded_growth_contact(col_src, B, Qb, mu)),
+                    args, results)
+                args = (_abstract((rn, k), "float32"),
+                        _abstract((rm, 3), "float32"),
+                        _abstract((rm,), "float32"))
+                _compare(
+                    b, "row_sharded_growth_contact", case,
+                    growth(lambda B, Qb, mu: engine
+                           .row_sharded_growth_contact(row_src, B, Qb,
+                                                       mu)),
+                    growth(lambda B, Qb, mu: reference
+                           .row_sharded_growth_contact(row_src, B, Qb,
+                                                       mu)),
+                    args, results)
 
 
 # -- driver -----------------------------------------------------------------

@@ -14,6 +14,7 @@ IM006  no-scipy             the repo stays scipy-free
 OW007  ops-wrapper          engine contacts have kernels/ops.py wrappers
 DE008  dead-export          __all__ exports are referenced somewhere
 SV009  server-via-api       the serving layer imports repro only via repro.api
+RF010  rangefinder-protocol RangeFinder.find returns (Q, growth_state)
 """
 from __future__ import annotations
 
@@ -436,6 +437,65 @@ class ServerViaApiRule(Rule):
                     "contract)")
 
 
+class RangeFinderProtocolRule(Rule):
+    """RF010 — the PR 9 range-finder protocol: every ``RangeFinder``
+    implementation's ``find`` returns the literal 2-tuple
+    ``(Q, growth_state)`` from every return path.  The post-process,
+    the adaptive report builder and the server all unpack that pair
+    positionally; a finder returning a bare basis (or a wider tuple)
+    would fail only at unpack time on whichever caller first runs it.
+    The tuple must be *syntactically* a 2-element tuple — the protocol
+    is strict so the shape is checkable at lint time.  Pinned to the
+    finders' home module by path (fixtures opt in via the ``rf010_*``
+    name)."""
+
+    id = "RF010"
+    title = "RangeFinder.find does not return the (Q, growth_state) pair"
+
+    def applies_to(self, module: ModuleFile) -> bool:
+        p = _norm(module.path)
+        base = p.rsplit("/", 1)[-1]
+        return p.endswith("core/rangefinder.py") or \
+            base.startswith("rf010")
+
+    @staticmethod
+    def _own_returns(fdef: ast.FunctionDef):
+        """Return statements of ``fdef`` itself, not of nested defs."""
+        stack: list[ast.AST] = list(fdef.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, ast.Return):
+                yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def check(self, module: ModuleFile):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = {b.attr if isinstance(b, ast.Attribute)
+                     else getattr(b, "id", None) for b in node.bases}
+            if "RangeFinder" not in bases:
+                continue
+            for item in node.body:
+                if not isinstance(item, ast.FunctionDef) or \
+                        item.name != "find":
+                    continue
+                for ret in self._own_returns(item):
+                    if isinstance(ret.value, ast.Tuple) and \
+                            len(ret.value.elts) == 2:
+                        continue
+                    yield self.violation(
+                        module, ret,
+                        f"{node.name}.find must return the literal "
+                        "2-tuple (Q, growth_state) on every path — "
+                        "callers unpack the pair positionally "
+                        "(rangefinder protocol, DESIGN.md §16)")
+
+
 RULE_CLASSES = [RawContactRule, RegistrySignatureRule, BlockAxisRule,
                 HostReductionDtypeRule, PromotionHelperRule, NoScipyRule,
-                OpsWrapperRule, DeadExportRule, ServerViaApiRule]
+                OpsWrapperRule, DeadExportRule, ServerViaApiRule,
+                RangeFinderProtocolRule]

@@ -18,7 +18,20 @@ Routing, by operator family:
   (CSR)ShardedBlockedOp        + mesh       ``dist_srsvd_streamed``
   RowShardedBlockedOp          + mesh       ``dist_srsvd_streamed``
                                             (``shard_axis="rows"``)
-  dense sharded global array   + mesh       ``dist_srsvd``
+  large dense array            + mesh       ``dist_srsvd`` (size >=
+                                            ``REPRO_DIST_DENSE_MIN_SIZE``
+                                            elements, default 16384;
+                                            smaller arrays take the
+                                            single-device path even
+                                            when a mesh is offered —
+                                            the collective overhead
+                                            dominates below that)
+
+``tol=`` replaces ``k`` with a target certified residual: the adaptive
+range finder discovers the rank (DESIGN.md §16).  Same routing table —
+sharded blocked operators stream through ``dist_srsvd_tol_streamed``,
+everything else runs ``srsvd_tol`` (a dense array always fits on the
+single device that would drive the adaptive host loop anyway).
 
 :class:`FactorizationRequest` / :class:`FactorizationResult` live here
 — not in the server — so offline scripts and the server serialize the
@@ -34,21 +47,24 @@ no power passes.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as onp
 
 from repro.core import contact
 from repro.core.distributed import (dist_col_mean, dist_srsvd,
-                                    dist_srsvd_streamed)
+                                    dist_srsvd_streamed,
+                                    dist_srsvd_tol_streamed)
 from repro.core.fingerprint import Fingerprint, array_token, fingerprint
 from repro.core.linop import (LinOp, RowShardedBlockedOp,
                               ShardedBlockedOp, as_linop)
 from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import ShiftSchedule, resolve_shift
 from repro.core.srsvd import (SVDResult, batched_trace_count,
-                              srsvd, srsvd_batched)
+                              srsvd, srsvd_batched, srsvd_tol)
 from repro.core.stopping import (ConvergenceReport, FixedIters, StopRule,
                                  as_rule, posterior_rel_err)
 
@@ -64,15 +80,29 @@ def _resolve_key(key, seed: int):
     return jax.random.PRNGKey(seed) if key is None else key
 
 
-def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
-              mu=None, center: bool = False,
+#: Dense arrays smaller than this many elements stay on the single
+#: device even when a mesh is offered — below it the collective setup
+#: costs more than the factorization.  Env-overridable per process.
+DIST_DENSE_MIN_SIZE = 16384
+
+
+def _dist_dense_min_size() -> int:
+    v = os.environ.get("REPRO_DIST_DENSE_MIN_SIZE")
+    return DIST_DENSE_MIN_SIZE if v is None else int(v)
+
+
+def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
+              q: int = 0, tol: float | None = None, b: int = 8,
+              max_K: int | None = None, mu=None, center: bool = False,
               shift: ShiftSchedule | jax.Array | None = None,
               stop: StopRule | int | None = None,
               mesh=None, key: jax.Array | None = None, seed: int = 0,
               row_axis: str = "model", col_axis: str = "data",
               engine: contact.ContactEngine | None = None,
               ) -> tuple[SVDResult, ConvergenceReport]:
-    """Rank-k factorization of ``X - mu 1^T`` for any operator family.
+    """Factorization of ``X - mu 1^T`` for any operator family: rank-k
+    with ``k=``, or tolerance-first adaptive rank with ``tol=``
+    (exactly one of the two).
 
     Args:
       x_or_op: dense array, ``CSRMatrix``, BCOO, any ``LinOp``
@@ -80,6 +110,12 @@ def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
         family picks the execution path, the caller never does.
       k / K / q: target rank, sampling rank (default 2k), power-
         iteration ceiling.
+      tol / b / max_K: instead of ``k``, a target certified relative
+        residual — the adaptive range finder (DESIGN.md §16) grows the
+        basis ``b`` columns at a time (capped at ``max_K``) until the
+        certificate clears ``tol``, and the report's ``k_found`` is
+        the discovered rank.  Mutually exclusive with ``k``, ``K``,
+        and ``stop`` (the certificate IS the stop rule).
       mu: (m,) shifting vector, or None.  ``center=True`` computes the
         column mean through the operator protocol instead (sparse- and
         stream-safe) and shifts by it — implicit-centering PCA.
@@ -93,15 +129,26 @@ def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
         no ``fro_norm2`` probe — e.g. a bare ``CallableOp`` — must
         pass ``FixedIters(certificate=False)`` explicitly.)
       mesh: route distributed: sharded blocked operators stream via
-        ``dist_srsvd_streamed`` (each host reads its own range); a
-        dense global array runs the resident-shard ``dist_srsvd`` over
-        (``row_axis``, ``col_axis``).
+        ``dist_srsvd_streamed`` (``dist_srsvd_tol_streamed`` under
+        ``tol=``; each host reads its own range); a dense global array
+        runs the resident-shard ``dist_srsvd`` over (``row_axis``,
+        ``col_axis``) when it has at least ``REPRO_DIST_DENSE_MIN_SIZE``
+        elements (default 16384) — smaller arrays take the
+        single-device path, byte-identical to calling with no mesh.
       key / seed: PRNG key for the Gaussian test matrix; ``key`` wins,
         else ``PRNGKey(seed)``.  Same key => same factors as the
         underlying path, which is what the serving layer's cache and
         parity gates lean on.
       engine: contact engine override (single-device paths).
     """
+    if (k is None) == (tol is None):
+        raise ValueError(
+            "pass exactly one of k (fixed rank) or tol (adaptive rank)"
+            f" — got k={k!r}, tol={tol!r}")
+    if tol is not None and (K is not None or stop is not None):
+        raise ValueError(
+            "tol= discovers the rank under its own certificate — K and "
+            "stop rules belong to the fixed-k path")
     rule = as_rule(stop)
     if rule is None:
         rule = FixedIters()
@@ -114,6 +161,11 @@ def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
         if isinstance(x_or_op, RowShardedBlockedOp):
             if center and mu is None:
                 mu = x_or_op.col_mean()
+            if tol is not None:
+                return dist_srsvd_tol_streamed(
+                    x_or_op, mu, tol, b=b, max_K=max_K, mesh=mesh,
+                    key=key, shift=sched, shard_axis="rows",
+                    row_axis=row_axis, engine=engine)
             return dist_srsvd_streamed(
                 x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
                 stop=rule, shard_axis="rows", row_axis=row_axis,
@@ -121,6 +173,11 @@ def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
         if isinstance(x_or_op, ShardedBlockedOp):
             if center and mu is None:
                 mu = x_or_op.col_mean()
+            if tol is not None:
+                return dist_srsvd_tol_streamed(
+                    x_or_op, mu, tol, b=b, max_K=max_K, mesh=mesh,
+                    key=key, shift=sched, col_axis=col_axis,
+                    row_axis=row_axis, engine=engine)
             return dist_srsvd_streamed(
                 x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
                 stop=rule, col_axis=col_axis, row_axis=row_axis,
@@ -132,15 +189,26 @@ def factorize(x_or_op, k: int, *, K: int | None = None, q: int = 0,
                 f"{type(x_or_op).__name__} — drop mesh for the "
                 "single-device paths or wrap per-host ranges in a "
                 "(Row)ShardedBlockedOp")
-        if center and mu is None:
-            mu = dist_col_mean(x_or_op, mesh, row_axis, col_axis)
-        return dist_srsvd(x_or_op, mu, k, K, q, mesh=mesh, key=key,
-                          shift=sched, stop=rule, row_axis=row_axis,
-                          col_axis=col_axis)
+        # Dense + mesh: worth the collectives only at scale.  Small
+        # arrays fall through to the single-device path below —
+        # byte-identical factors to a no-mesh call (the routing gate
+        # test pins this).  The adaptive path always falls through: a
+        # dense array fits on the single device that would have to
+        # drive the adaptive host loop anyway.
+        if tol is None and int(onp.prod(jnp.shape(x_or_op))) \
+                >= _dist_dense_min_size():
+            if center and mu is None:
+                mu = dist_col_mean(x_or_op, mesh, row_axis, col_axis)
+            return dist_srsvd(x_or_op, mu, k, K, q, mesh=mesh, key=key,
+                              shift=sched, stop=rule, row_axis=row_axis,
+                              col_axis=col_axis)
     op = as_linop(x_or_op)
     eng = engine if engine is not None else contact.get_engine()
     if center and mu is None:
         mu = eng.col_mean(op)
+    if tol is not None:
+        return srsvd_tol(op, mu, tol=tol, b=b, q=q, key=key,
+                         max_K=max_K, shift=sched, engine=eng)
     return srsvd(op, mu, k, K, q, key=key, shift=sched, stop=rule,
                  engine=eng)
 
@@ -225,7 +293,7 @@ def refresh_rank1(base: SVDResult, x_new, u, w, *, mu=None,
         sigma_estimates=S2,
         posterior_rel_err=post,
         xbar_fro2=None if fro2 is None else jnp.asarray(fro2),
-        qmax=0)
+        qmax=0, k_found=k)
     return res, report
 
 
@@ -247,7 +315,9 @@ def split_batched(res: SVDResult, rep: ConvergenceReport,
                 else rep.posterior_rel_err[i],
                 xbar_fro2=None if rep.xbar_fro2 is None
                 else rep.xbar_fro2[i],
-                qmax=rep.qmax)))
+                qmax=rep.qmax,
+                k_eff=None if rep.k_eff is None else rep.k_eff[i],
+                k_found=rep.k_found)))
     return out
 
 
@@ -264,12 +334,19 @@ class FactorizationRequest:
     previously factored base (by fingerprint): the server then takes
     the :func:`refresh_rank1` fast path when the base is still cached.
     ``tag`` is an opaque caller correlation id, echoed on the response.
+
+    Exactly one of ``k`` / ``tol`` — a tol request rides the server's
+    serial lane (its discovered rank makes it non-coalescable) and its
+    response carries ``k_found``.
     """
 
     matrix: Any
-    k: int
+    k: int | None = None
     K: int | None = None
     q: int = 0
+    tol: float | None = None
+    b: int = 8
+    max_K: int | None = None
     mu: Any = None
     center: bool = False
     shift: ShiftSchedule | Any = None
@@ -318,7 +395,8 @@ def run_request(req: FactorizationRequest, *, mesh=None,
     """Execute one request through :func:`factorize` — the offline
     (serverless) execution of exactly what the server computes, which
     is what the serving parity gates compare against."""
-    return factorize(req.matrix, req.k, K=req.K, q=req.q, mu=req.mu,
+    return factorize(req.matrix, req.k, K=req.K, q=req.q, tol=req.tol,
+                     b=req.b, max_K=req.max_K, mu=req.mu,
                      center=req.center, shift=req.shift, stop=req.stop,
                      mesh=mesh, seed=req.seed, engine=engine)
 
@@ -327,11 +405,12 @@ def request_cache_key(req: FactorizationRequest) -> tuple:
     """Hashable identity of a request's *result*: the matrix
     fingerprint plus every field that changes the factors.
 
-    Fields in the key: fingerprint(matrix), k, K, q, center, a content
-    token of ``mu`` (None-safe), the shift schedule (hashable frozen
-    dataclass) or a content token of a shift *vector*, the normalized
-    stop rule, and the seed.  ``tag`` and the refresh declaration are
-    deliberately excluded — they do not change the factors.
+    Fields in the key: fingerprint(matrix), k, the adaptive triple
+    (tol, b, max_K), K, q, center, a content token of ``mu``
+    (None-safe), the shift schedule (hashable frozen dataclass) or a
+    content token of a shift *vector*, the normalized stop rule, and
+    the seed.  ``tag`` and the refresh declaration are deliberately
+    excluded — they do not change the factors.
     """
     fp = fingerprint(req.matrix)
     mu_tok = None if req.mu is None else array_token(req.mu)
@@ -339,5 +418,5 @@ def request_cache_key(req: FactorizationRequest) -> tuple:
     if shift_key is not None and not isinstance(shift_key,
                                                ShiftSchedule):
         shift_key = array_token(shift_key)
-    return (fp, req.k, req.K, req.q, req.center, mu_tok, shift_key,
-            as_rule(req.stop), req.seed)
+    return (fp, req.k, req.tol, req.b, req.max_K, req.K, req.q,
+            req.center, mu_tok, shift_key, as_rule(req.stop), req.seed)

@@ -2,10 +2,17 @@
 
 Public API:
   srsvd / rsvd            single-device (Algorithm 1 / Halko baseline)
+  srsvd_tol               tolerance-first adaptive rank: grow the basis
+                          until the certified residual clears tol
+                          (DESIGN.md §16)
+  RangeFinder / FixedRangeFinder / BlockedAdaptiveRangeFinder
+                          the pluggable basis-building phase behind both
   dist_srsvd / dist_pca_fit  shard_map multi-device versions
   dist_srsvd_streamed / dist_pca_fit_streamed  host-sharded out-of-core
                           streaming front-end (per-host column ranges
                           from disk; DESIGN.md §10)
+  dist_srsvd_tol_streamed adaptive rank against on-disk operators, one
+                          disk pass per growth round
   PCA                     implicit-centering principal component analysis
   qr_rank1_update         Golub & Van Loan rank-1 thin-QR update
   as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
@@ -23,7 +30,8 @@ from repro.core.contact import (ContactEngine, available_backends,
                                 register_backend, register_sparse_backend)
 from repro.core.distributed import (dist_col_mean, dist_pca_fit,
                                     dist_pca_fit_streamed, dist_srsvd,
-                                    dist_srsvd_streamed, tsqr)
+                                    dist_srsvd_streamed,
+                                    dist_srsvd_tol_streamed, tsqr)
 from repro.core.linop import (BlockedOp, CallableOp, ChainedOp,
                               CSRBlockedOp, CSRShardedBlockedOp, DenseOp,
                               LinOp, RowShardedBlockedOp,
@@ -33,9 +41,12 @@ from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
 from repro.core.fingerprint import Fingerprint, array_token, fingerprint
+from repro.core.rangefinder import (BlockedAdaptiveRangeFinder,
+                                    FixedRangeFinder, GrowthState,
+                                    RangeFinder)
 from repro.core.srsvd import (SVDResult, batched_trace_count,
                               expected_error_bound, rsvd, srsvd,
-                              srsvd_batched, svd_jit)
+                              srsvd_batched, srsvd_tol, svd_jit)
 from repro.core.stopping import (ConvergenceReport, FixedIters, PVEStop,
                                  ResidualStop, StopRule, as_rule)
 
@@ -48,10 +59,12 @@ __all__ = [
     "get_engine", "register_backend", "register_sparse_backend",
     "qr_rank1_update", "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "srsvd_batched",
-    "batched_trace_count", "svd_jit", "PCA",
+    "srsvd_tol", "batched_trace_count", "svd_jit", "PCA",
+    "RangeFinder", "FixedRangeFinder", "BlockedAdaptiveRangeFinder",
+    "GrowthState",
     "Fingerprint", "array_token", "fingerprint",
     "dist_col_mean", "dist_pca_fit", "dist_pca_fit_streamed", "dist_srsvd",
-    "dist_srsvd_streamed", "tsqr",
+    "dist_srsvd_streamed", "dist_srsvd_tol_streamed", "tsqr",
     "ShiftSchedule", "FixedShift", "DecayingShift", "DynamicShift",
     "as_schedule",
     "StopRule", "FixedIters", "PVEStop", "ResidualStop",

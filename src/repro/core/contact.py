@@ -355,6 +355,21 @@ class ContactEngine:
             return G if mu is None else rank1_correct(G, mu, s)
         return self.shifted_matmat(op, self.shifted_rmatmat(op, B, mu), mu)
 
+    def project_residual(self, op, Q, B, mu):
+        """``(I - Q Q^T)(X - mu 1^T) @ B`` — the adaptive range finder's
+        growth contact (DESIGN.md §16): sample the *residual* of the
+        accumulated basis Q without ever materializing the deflated
+        operator or re-contacting prior blocks.  One ``shifted_matmat``
+        through whatever fused/sparse/streamed path the operator takes,
+        plus an O(m·K·b) on-device deflation.  ``Q=None`` (or a
+        zero-column Q) means no deflation yet — round zero.
+        """
+        Y = self.shifted_matmat(op, B, mu)
+        if Q is None or Q.shape[1] == 0:
+            return Y
+        Qc = jnp.asarray(Q, Y.dtype)
+        return Y - Qc @ (Qc.T @ Y)
+
     # -- sharded (per-column-range) contact points ---------------------
     #    One host's side of a streamed product: the input is a block
     #    source covering that host's column range (range-local j0), the
@@ -460,6 +475,55 @@ class ContactEngine:
             s = s + Zt_blk.sum(axis=0).astype(dt)
         return G, s
 
+    def sharded_growth_contact(self, source, B_loc, Qb, mu):
+        """One column range's share of an adaptive growth round, in a
+        **single pass** over its blocks (DESIGN.md §16): returns
+
+            P_loc = sum_blk blk @ B_slk          (m, b)   partial — psum
+            Z_loc = (X_loc - mu 1^T)^T @ Qb      (n_loc, b_prev) — owned
+
+        i.e. the *sample* partial for this round's draw ``B_loc`` (the
+        (n_loc, b) slice of omega this range owns; shift correction
+        rides the caller's combine, as in ``sharded_matmat``) and the
+        previous round's certificate/projection rows, both computed
+        from each slab while it is resident — the pipelining that keeps
+        a growth round at one disk pass.  ``Qb=None`` (round zero — no
+        block to certify yet) returns ``Z_loc=None``.
+        """
+        if Qb is None:
+            return self.sharded_matmat(source, B_loc), None
+        m = int(source.shape[0])
+        dt = result_dtype(canonical_dtype(source.dtype), B_loc.dtype)
+        if mu is not None:
+            dt = result_dtype(dt, jnp.asarray(mu).dtype)
+        P_acc = jnp.zeros((m, B_loc.shape[1]), dt)
+        Qb = Qb.astype(dt)
+        w = None if mu is None else jnp.asarray(mu, dt) @ Qb
+        Z_parts = []
+        for j0, blk in source.iter_blocks():
+            Bs = B_loc[j0:j0 + blk.shape[1]]
+            if getattr(blk, "is_sparse", False):
+                P_acc = P_acc + self._sparse_block_product(blk.csr, Bs,
+                                                           None, None)
+                u = None if mu is None else jnp.ones((blk.shape[1],),
+                                                     w.dtype)
+                Z_parts.append(self._sparse_block_product(blk.csr_t, Qb,
+                                                          u, w))
+                continue
+            blk = jnp.asarray(blk, dt)
+            P_acc = P_acc + blk @ Bs.astype(dt)
+            if mu is None:
+                Z_parts.append(blk.T @ Qb)
+            else:
+                u = jnp.ones((blk.shape[1],), w.dtype)
+                Z_parts.append(self.matmul_rank1(blk, Qb, u, w,
+                                                 transpose_a=True))
+        if not Z_parts:
+            Z = jnp.zeros((int(source.shape[1]), Qb.shape[1]), dt)
+        else:
+            Z = jnp.concatenate(Z_parts, axis=0)
+        return P_acc, Z
+
     # -- row-sharded (per-row-range) contact points --------------------
     #    The m >> n transpose of the contacts above (DESIGN.md §11):
     #    the input is a row-block source covering one host's row range
@@ -512,6 +576,48 @@ class ContactEngine:
             blk = jnp.asarray(blk, dt)
             acc = acc + blk.T @ B_loc[i0:i0 + blk.shape[0]].astype(dt)
         return acc
+
+    def row_sharded_growth_contact(self, source, B, Qb_loc, mu_loc):
+        """One row range's share of an adaptive growth round, single
+        pass (the m >> n transpose of ``sharded_growth_contact``):
+
+            Y_loc = (X_loc - mu_loc 1^T) @ B     (m_loc, b)  — owned rows
+            Z_loc = X_loc^T @ Qb_loc             (n, b_prev) partial — psum
+
+        with ``B`` the full (n, b) draw (replicated — n is small in
+        this regime), ``Qb_loc`` this range's rows of the previous
+        round's block, ``mu_loc`` this range's slice of the shift.  The
+        shift's K-vector ``mu_loc^T Qb_loc`` needs no disk contact, so
+        the caller computes it and rides it on the same collective as
+        ``Z_loc``, exactly like ``row_sharded_rmatmat``.  ``Qb_loc=None``
+        (round zero) returns ``Z_loc=None``.
+        """
+        if Qb_loc is None:
+            return self.row_sharded_shifted_matmat(source, B, mu_loc), \
+                None
+        n = int(source.shape[1])
+        dt = result_dtype(canonical_dtype(source.dtype), B.dtype,
+                          Qb_loc.dtype)
+        if mu_loc is not None:
+            dt = result_dtype(dt, jnp.asarray(mu_loc).dtype)
+        B = B.astype(dt)
+        Qb_loc = Qb_loc.astype(dt)
+        w = None if mu_loc is None else B.sum(axis=0)
+        Y_parts = []
+        Z_acc = jnp.zeros((n, Qb_loc.shape[1]), dt)
+        for i0, blk in source.iter_blocks():
+            blk = jnp.asarray(blk, dt)
+            if mu_loc is None:
+                Y_parts.append(blk @ B)
+            else:
+                Y_parts.append(self.matmul_rank1(
+                    blk, B, mu_loc[i0:i0 + blk.shape[0]], w))
+            Z_acc = Z_acc + blk.T @ Qb_loc[i0:i0 + blk.shape[0]]
+        if not Y_parts:
+            Y = jnp.zeros((int(source.shape[0]), B.shape[1]), dt)
+        else:
+            Y = jnp.concatenate(Y_parts, axis=0)
+        return Y, Z_acc
 
     def col_mean(self, op):
         return op.col_mean()

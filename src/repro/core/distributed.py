@@ -38,7 +38,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import contact, stopping as _stopping
+from repro.core import (contact, rangefinder as _rangefinder,
+                        stopping as _stopping)
 from repro.core.linop import RowShardedBlockedOp, ShardedBlockedOp
 from repro.core.schedule import ShiftSchedule, as_schedule
 from repro.core.srsvd import SVDResult
@@ -264,7 +265,8 @@ def dist_srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         U, S, Vt = outs
         return SVDResult(U, S, Vt)
     U, S, Vt, tstate = outs
-    report = _stopping.build_report(rule, tstate, S, m, qmax, fro2)
+    report = _stopping.build_report(rule, tstate, S, m, qmax, fro2,
+                                    k_found=K)
     return SVDResult(U, S, Vt), report
 
 
@@ -419,6 +421,56 @@ def _streamed_power_combine(Zp, sp, mu_t, Q, alpha, *, mesh, col_axis,
         in_specs=(P(col_axis, None, None), P(col_axis, None), P(), P()),
         out_specs=(P(None, None), P(None, None)), check_vma=False)(
             Zp, sp, mu_t, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "col_axis",
+                                             "shifted", "deflate"))
+def _streamed_growth_sample(Xp, vp, mu, Q, *, mesh, col_axis, shifted,
+                            deflate):
+    """The adaptive column path's per-round combine (DESIGN.md §16):
+    psum the per-host sample partials, fold the rank-1 shift, deflate
+    against the accumulated basis (replicated in this regime — the
+    deflation is local, no new collective), and QR the block with a
+    re-orthogonalization pass (twice-is-enough block Gram-Schmidt, so
+    the existing Q columns stay untouched bit-for-bit)."""
+
+    def body(Xp_loc, vp_loc, mu_, Q_):
+        X1 = lax.psum(Xp_loc[0], col_axis)
+        if shifted:
+            v = lax.psum(vp_loc[0], col_axis)
+            X1 = contact.rank1_correct(X1, mu_, v)
+        if deflate:
+            X1 = X1 - Q_ @ (Q_.T @ X1)
+        Qb, _ = _qr_replicated(X1)
+        if deflate:
+            Qb = Qb - Q_ @ (Q_.T @ Qb)
+            Qb, _ = _qr_replicated(Qb)
+        return Qb
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(col_axis, None, None), P(col_axis, None), P(), P()),
+        out_specs=P(None, None), check_vma=False)(Xp, vp, mu, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "row_axis"))
+def _streamed_rows_deflate(Q, Y, *, mesh, row_axis):
+    """Two-pass block Gram-Schmidt of the row-sharded sample against the
+    row-sharded accumulated basis: only the (K, b) inner products ride a
+    psum over the row axis (K·b floats — the adaptive row path's one
+    extra collective per round); the updates stay local.  The basis QR
+    that follows is the existing ``_streamed_tsqr``."""
+
+    def body(Q_loc, Y_loc):
+        C = lax.psum(Q_loc.T @ Y_loc, row_axis)
+        Y1 = Y_loc - Q_loc @ C
+        C2 = lax.psum(Q_loc.T @ Y1, row_axis)
+        return Y1 - Q_loc @ C2
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, None), P(row_axis, None)),
+        out_specs=P(row_axis, None), check_vma=False)(Q, Y)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "col_axis"))
@@ -606,7 +658,7 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
     if rule is None:
         return res
     return res, _stopping.build_report(rule, tstate, S[:k], m, qmax,
-                                       fro2)
+                                       fro2, k_found=K)
 
 
 def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
@@ -742,7 +794,311 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
     if rule is None:
         return res
     return res, _stopping.build_report(rule, tstate, S[:k], m, qmax,
-                                       fro2)
+                                       fro2, k_found=K)
+
+
+def dist_srsvd_tol_streamed(op, mu, tol: float, *, b: int = 8,
+                            mesh: Mesh, key: jax.Array,
+                            max_K: int | None = None,
+                            shift: ShiftSchedule | None = None,
+                            col_axis="data", row_axis="model",
+                            shard_axis: str = "cols",
+                            engine: contact.ContactEngine | None = None):
+    """Tolerance-first streamed distributed S-RSVD (DESIGN.md §16): grow
+    the basis in blocks of ``b`` columns until the certified relative
+    residual clears ``tol``, against an on-disk operator — the adaptive
+    analogue of :func:`dist_srsvd_streamed`, same operator contracts
+    (equal-width / equal-height ranges, one host range per device on the
+    shard axis).
+
+    Each growth round costs **one disk pass** over every host's range:
+    the rounds are pipelined, so round ``t``'s single pass computes both
+    the previous block's certificate/projection rows ``Xbar^T Q_{t-1}``
+    and the new draw's sample — the fused per-host contact is the
+    engine's ``sharded_growth_contact`` (``row_sharded_growth_contact``
+    on the row path).  The collectives are the existing schedule: the
+    sample psum + replicated QR on the column path, the TSQR over
+    ``row_axis`` on the row path (plus one (K, b)-float Gram-Schmidt
+    psum for the deflation — the inner products ride a collective, the
+    basis update stays local).  When the certificate fires at round T
+    the basis and the final projection Y are already complete (the
+    certificates double as Y's rows), so the total is T + 1 passes plus
+    the one-time ``||Xbar||_F^2`` probe, and the post-process pays no
+    extra contact.
+
+    Returns ``(SVDResult, ConvergenceReport)`` with all ``k_found``
+    discovered components; the report's ``posterior_rel_err`` is the
+    same PR 5 certificate the single-device ``srsvd_tol`` emits.
+    Factors are laid out like :func:`dist_srsvd_streamed`'s.
+    """
+    if shard_axis == "rows":
+        if not isinstance(op, RowShardedBlockedOp):
+            raise TypeError(
+                'dist_srsvd_tol_streamed(shard_axis="rows") needs a '
+                "RowShardedBlockedOp (per-host row-range block "
+                f"sources), got {type(op).__name__}")
+        return _dist_srsvd_tol_streamed_rows(
+            op, mu, tol, b=b, mesh=mesh, key=key, max_K=max_K,
+            shift=shift, row_axis=row_axis, engine=engine)
+    if shard_axis != "cols":
+        raise ValueError(
+            f"shard_axis must be 'cols' or 'rows', got {shard_axis!r}")
+    if not isinstance(op, ShardedBlockedOp):
+        raise TypeError(
+            "dist_srsvd_tol_streamed needs a ShardedBlockedOp (per-host "
+            f"column-range block sources), got {type(op).__name__}; "
+            'pass shard_axis="rows" with a RowShardedBlockedOp for '
+            "row-range sharding")
+    m, n = op.shape
+    P_ = _mesh_axis_size(mesh, col_axis)
+    if op.num_shards != P_:
+        raise ValueError(
+            f"operator has {op.num_shards} column shards but the mesh "
+            f"{col_axis!r} axis has {P_} devices — one host range per "
+            "device")
+    widths = {int(s.shape[1]) for s in op.shards}
+    if len(widths) != 1:
+        raise ValueError(
+            "shard_map needs equal-width column ranges, got widths "
+            f"{sorted(int(s.shape[1]) for s in op.shards)}; use "
+            "ColumnBlockLoader.split on a divisible n")
+    if not (tol >= 0.0):
+        raise ValueError(f"need tol >= 0, got {tol=}")
+    if b < 1:
+        raise ValueError(f"need a block of >= 1 columns, got {b=}")
+
+    dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = contact.result_dtype(dt, jnp.float32)
+    sched = as_schedule(shift)
+    if sched.spectral:
+        raise ValueError(
+            "adaptive growth runs plain deflated power-free rounds under "
+            "the target shift; a spectral schedule "
+            f"({type(sched).__name__}) has no deflated Gram body — use "
+            "shift=None or FixedShift with dist_srsvd_tol_streamed")
+    shifted = mu is not None
+    _stopping.validate_certified_schedule(
+        sched, shifted, what="dist_srsvd_tol_streamed")
+    eng = engine if engine is not None else contact.get_engine()
+    mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
+    mu_rep = _put(mu, mesh, P())
+    starts = op.col_starts
+    kmax = min(m, n) if max_K is None else min(max_K, min(m, n))
+    fro2 = jnp.maximum(
+        jnp.asarray(eng.xbar_fro_norm2(op, mu if shifted else None), dt),
+        jnp.finfo(dt).tiny)
+
+    Q = jnp.zeros((m, 0), dt)
+    Qb_prev = None                 # newest block, not yet certified
+    Zs, resid = [], []             # per-block (n, b) rows of Xbar^T Q_b
+    captured2 = jnp.zeros((), dt)
+    cols = 1                       # the fro2 probe's K=1 matmat
+    rounds = 0
+    t = 0
+    while True:
+        grow = Q.shape[1] < kmax
+        if grow:
+            # one fused pass: sample partials for the new draw + the
+            # previous block's owned certificate rows.
+            bt = min(b, kmax - Q.shape[1])
+            omega = jax.random.normal(jax.random.fold_in(key, t),
+                                      (n, bt), dtype=dt)
+            parts = [eng.sharded_growth_contact(
+                op.shards[p], omega[starts[p]:starts[p + 1]],
+                Qb_prev, mu if shifted else None) for p in range(P_)]
+            Xp = _put(jnp.stack([pr[0] for pr in parts]), mesh,
+                      P(col_axis, None, None))
+            vp = _put(jnp.stack(
+                [omega[starts[p]:starts[p + 1]].sum(axis=0)
+                 for p in range(P_)]), mesh, P(col_axis, None))
+            Zl = [pr[1] for pr in parts]
+            cols += bt + (0 if Qb_prev is None else Qb_prev.shape[1])
+        else:
+            # basis cap hit: one certificate-only pass for the last
+            # block, then return what we have (the report says honestly
+            # how far the residual is from tol).
+            Zl = [eng.sharded_shifted_rmatmat(
+                op.shards[p], Qb_prev, mu if shifted else None)
+                for p in range(P_)]
+            cols += Qb_prev.shape[1]
+        if Qb_prev is not None:
+            Z_prev = jnp.concatenate(Zl, axis=0)    # (n, b_prev)
+            Zs.append(Z_prev)
+            captured2 = captured2 + jnp.sum(Z_prev * Z_prev)
+            rounds += 1
+            rel = float(jnp.sqrt(
+                jnp.clip(fro2 - captured2, 0.0, None) / fro2))
+            resid.append(rel)
+            if rel <= tol or not grow:
+                break
+        Qb = _streamed_growth_sample(
+            Xp, vp, mu_rep, Q, mesh=mesh, col_axis=col_axis,
+            shifted=shifted, deflate=bool(Q.shape[1]))
+        Q = jnp.concatenate([Q, Qb], axis=1) if Q.shape[1] else Qb
+        Qb_prev = Qb
+        t += 1
+
+    # The certificates ARE the final projection's rows: Y = Q^T Xbar
+    # assembled from the per-round passes, no extra disk contact.
+    Y = jnp.concatenate(Zs, axis=1).T               # (k_found, n)
+    U1, S, Vt = _streamed_small_svd(
+        _put(Y, mesh, P(None, col_axis)), mesh=mesh, col_axis=col_axis)
+    U = Q @ U1
+    res = SVDResult(U, S, Vt)
+    growth = _rangefinder.GrowthState(
+        k_found=int(Q.shape[1]), rounds=rounds, qmax=rounds,
+        contact_cols=cols, fro2=fro2, captured2=captured2, Y=Y,
+        tstate=None, sched_state=None,
+        resid_trace=jnp.asarray(resid,
+                                dtype=jnp.zeros((), dt).real.dtype))
+    return res, _rangefinder.build_adaptive_report(growth, S, m)
+
+
+def _dist_srsvd_tol_streamed_rows(op, mu, tol: float, *, b: int,
+                                  mesh: Mesh, key: jax.Array,
+                                  max_K: int | None,
+                                  shift: ShiftSchedule | None,
+                                  row_axis="model",
+                                  engine: contact.ContactEngine | None
+                                  = None):
+    """The row-sharded adaptive growth schedule (DESIGN.md §§11, 16):
+    the basis Q is genuinely row-sharded, so each round's fused pass
+    yields owned sample rows (no psum on the product) plus the previous
+    block's (n, b) rmatmat partials that ride the psum with the shift's
+    K-vector — ``row_sharded_growth_contact`` per host, then the
+    existing ``_streamed_rows_rmatmat_combine``.  Deflation against the
+    row-sharded basis psums only the (K, b) Gram-Schmidt inner products
+    (``_streamed_rows_deflate``); the block QR is the same TSQR over
+    ``row_axis`` the fixed driver runs."""
+    m, n = op.shape
+    P_ = _mesh_axis_size(mesh, row_axis)
+    if op.num_shards != P_:
+        raise ValueError(
+            f"operator has {op.num_shards} row shards but the mesh "
+            f"{row_axis!r} axis has {P_} devices — one host range per "
+            "device")
+    heights = {int(s.shape[0]) for s in op.shards}
+    if len(heights) != 1:
+        raise ValueError(
+            "shard_map needs equal-height row ranges, got heights "
+            f"{sorted(int(s.shape[0]) for s in op.shards)}; use "
+            "RowBlockLoader.split on a divisible m")
+    if not (tol >= 0.0):
+        raise ValueError(f"need tol >= 0, got {tol=}")
+    if b < 1:
+        raise ValueError(f"need a block of >= 1 columns, got {b=}")
+
+    dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = contact.result_dtype(dt, jnp.float32)
+    sched = as_schedule(shift)
+    if sched.spectral:
+        raise ValueError(
+            "adaptive growth runs plain deflated power-free rounds under "
+            "the target shift; a spectral schedule "
+            f"({type(sched).__name__}) has no deflated Gram body — use "
+            "shift=None or FixedShift with dist_srsvd_tol_streamed")
+    shifted = mu is not None
+    _stopping.validate_certified_schedule(
+        sched, shifted, what="dist_srsvd_tol_streamed")
+    eng = engine if engine is not None else contact.get_engine()
+    mu = jnp.zeros((m,), dt) if mu is None else jnp.asarray(mu, dt)
+    starts = op.row_starts
+    kmax = min(m, n) if max_K is None else min(max_K, min(m, n))
+    fro2 = jnp.maximum(
+        jnp.asarray(eng.xbar_fro_norm2(op, mu if shifted else None), dt),
+        jnp.finfo(dt).tiny)
+
+    def prev_partials(Qb_prev):
+        """Host-side slices of the previous (row-sharded) block + the
+        K-vectors that ride the psum — the rmatmat_partials idiom."""
+        vecs = []
+        for p in range(P_):
+            Qb_loc = Qb_prev[starts[p]:starts[p + 1]]
+            vecs.append(mu[starts[p]:starts[p + 1]] @ Qb_loc if shifted
+                        else jnp.zeros((Qb_prev.shape[1],), dt))
+        return vecs
+
+    Q = _put(jnp.zeros((m, 0), dt), mesh, P(row_axis, None))
+    Qb_prev = None
+    Zs, resid = [], []
+    captured2 = jnp.zeros((), dt)
+    cols = 1
+    rounds = 0
+    t = 0
+    while True:
+        grow = Q.shape[1] < kmax
+        Zl = []
+        if grow:
+            bt = min(b, kmax - Q.shape[1])
+            omega = jax.random.normal(jax.random.fold_in(key, t),
+                                      (n, bt), dtype=dt)
+            Yl = []
+            for p in range(P_):
+                Qb_loc = (None if Qb_prev is None
+                          else Qb_prev[starts[p]:starts[p + 1]])
+                Yp, Zp = eng.row_sharded_growth_contact(
+                    op.shards[p], omega, Qb_loc,
+                    mu[starts[p]:starts[p + 1]] if shifted else None)
+                Yl.append(Yp)
+                Zl.append(Zp)
+            Y_s = _put(jnp.concatenate(Yl, axis=0), mesh,
+                       P(row_axis, None))
+            cols += bt + (0 if Qb_prev is None else Qb_prev.shape[1])
+        else:
+            Zl = [eng.row_sharded_rmatmat(
+                op.shards[p], Qb_prev[starts[p]:starts[p + 1]])
+                for p in range(P_)]
+            cols += Qb_prev.shape[1]
+        if Qb_prev is not None:
+            Z_prev = _streamed_rows_rmatmat_combine(
+                _put(jnp.stack(Zl), mesh, P(row_axis, None, None)),
+                _put(jnp.stack(prev_partials(Qb_prev)), mesh,
+                     P(row_axis, None)),
+                mesh=mesh, row_axis=row_axis,
+                shifted=shifted)                    # (n, b_prev)
+            Zs.append(Z_prev)
+            captured2 = captured2 + jnp.sum(Z_prev * Z_prev)
+            rounds += 1
+            rel = float(jnp.sqrt(
+                jnp.clip(fro2 - captured2, 0.0, None) / fro2))
+            resid.append(rel)
+            if rel <= tol or not grow:
+                break
+        if Q.shape[1]:
+            Y_s = _streamed_rows_deflate(Q, Y_s, mesh=mesh,
+                                         row_axis=row_axis)
+        Qb, _ = _streamed_tsqr(Y_s, mesh=mesh, axis=row_axis)
+        if Q.shape[1]:
+            # re-orthogonalize after the QR: a rank-deficient deflated
+            # sample (tol nearly met) makes TSQR fill its nullspace with
+            # arbitrary directions, which must be pushed off Q again —
+            # the same twice-is-enough pass the column path's combine
+            # and the single-device ``_orth_against`` run.
+            Qb = _streamed_rows_deflate(Q, Qb, mesh=mesh,
+                                        row_axis=row_axis)
+            Qb, _ = _streamed_tsqr(Qb, mesh=mesh, axis=row_axis)
+        Q = _put(jnp.concatenate([Q, Qb], axis=1), mesh,
+                 P(row_axis, None)) if Q.shape[1] else Qb
+        Qb_prev = Qb
+        t += 1
+
+    # Same replicated small-factor assembly as the fixed row driver,
+    # with Y^T pre-assembled from the per-round certificate combines.
+    Yt = jnp.concatenate(Zs, axis=1)                # (n, k_found)
+    Qv, R = _qr_replicated(Yt)
+    U1, S, Wt = jnp.linalg.svd(R.T, full_matrices=False)
+    Vt = Wt @ Qv.T
+    U = Q @ U1                                      # row-sharded
+    res = SVDResult(U, S, Vt)
+    growth = _rangefinder.GrowthState(
+        k_found=int(Q.shape[1]), rounds=rounds, qmax=rounds,
+        contact_cols=cols, fro2=fro2, captured2=captured2, Y=Yt.T,
+        tstate=None, sched_state=None,
+        resid_trace=jnp.asarray(resid,
+                                dtype=jnp.zeros((), dt).real.dtype))
+    return res, _rangefinder.build_adaptive_report(growth, S, m)
 
 
 def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,

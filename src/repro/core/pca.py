@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import contact
 from repro.core.linop import as_linop
 from repro.core.schedule import ShiftSchedule
-from repro.core.srsvd import SVDResult, srsvd
+from repro.core.srsvd import SVDResult, srsvd, srsvd_tol
 from repro.core.stopping import ConvergenceReport, StopRule
 
 
@@ -36,18 +36,30 @@ class PCA:
     iteration *ceiling* and the fit stops as soon as the monitored
     components converge, DESIGN.md §12).
 
+    ``PCA(tol=...)`` discovers the number of components instead of
+    fixing it: the adaptive range finder (DESIGN.md §16) grows the
+    basis until the certified relative residual clears ``tol`` —
+    exactly one of ``k`` / ``tol``, and ``K``/``stop`` belong to the
+    fixed-k path.  After an adaptive fit ``report_.k_found`` is the
+    discovered component count.
+
     Attributes after ``fit``:
       components_: (k, m) rows are principal axes (left singular vectors^T).
       mean_: (m,) column mean used as the shifting vector.
       singular_values_: (k,).
       report_: the :class:`~repro.core.stopping.ConvergenceReport` when
-        a stop rule was attached (None otherwise).
-      n_iter_: power iterations actually run (None without a rule).
+        a stop rule was attached or ``tol`` drove the fit (None
+        otherwise).
+      n_iter_: power iterations actually run (growth rounds for an
+        adaptive fit; None without a rule).
     """
 
-    k: int
+    k: int | None = None
     K: int | None = None
     q: int = 0
+    tol: float | None = None
+    b: int = 8
+    max_K: int | None = None
     center: bool = True
     backend: str | None = None
     shift: ShiftSchedule | None = None
@@ -80,6 +92,17 @@ class PCA:
         required — each host streams its own range, the full matrix
         never loads (DESIGN.md §10).
         """
+        if (self.k is None) == (self.tol is None):
+            raise ValueError(
+                "pass exactly one of PCA(k=...) (fixed component "
+                "count) or PCA(tol=...) (adaptive) — got "
+                f"k={self.k!r}, tol={self.tol!r}")
+        if self.tol is not None and (self.K is not None
+                                     or self.stop is not None):
+            raise ValueError(
+                "PCA(tol=...) discovers the component count under its "
+                "own certificate — K and stop rules belong to the "
+                "fixed-k path")
         if streamed:
             if mesh is None:
                 raise ValueError(
@@ -103,6 +126,19 @@ class PCA:
                     "in-memory paths")
             shard_axis = ("rows" if isinstance(X, RowShardedBlockedOp)
                           else "cols")
+            if self.tol is not None:
+                from repro.core.distributed import dist_srsvd_tol_streamed
+                mu = X.col_mean() if self.center else None
+                res, self.report_ = dist_srsvd_tol_streamed(
+                    X, mu, self.tol, b=self.b, max_K=self.max_K,
+                    mesh=mesh, key=key, shift=self.shift,
+                    shard_axis=shard_axis, engine=self._engine)
+                self.n_iter_ = int(self.report_.iters_run)
+                self.components_ = res.U.T
+                self.singular_values_ = res.S
+                self.mean_ = (mu if mu is not None
+                              else jnp.zeros((X.shape[0],), res.U.dtype))
+                return self
             from repro.core.distributed import dist_pca_fit_streamed
             res, mu = dist_pca_fit_streamed(
                 X, self.k, self.K, mesh=mesh, key=key, q=self.q,
@@ -122,6 +158,17 @@ class PCA:
         op = as_linop(X)
         eng = self._engine
         mu = eng.col_mean(op) if self.center else None
+        if self.tol is not None:
+            res, self.report_ = srsvd_tol(
+                op, mu, tol=self.tol, b=self.b, q=self.q, key=key,
+                max_K=self.max_K, shift=self.shift, engine=eng)
+            self.n_iter_ = int(self.report_.iters_run)
+            self.components_ = res.U.T
+            self.singular_values_ = res.S
+            m = op.shape[0]
+            self.mean_ = (mu if mu is not None
+                          else jnp.zeros((m,), res.U.dtype))
+            return self
         res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key,
                                shift=self.shift, stop=self.stop,
                                engine=eng)

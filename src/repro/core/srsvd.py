@@ -29,9 +29,9 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core import contact, schedule as _schedule, stopping as _stopping
+from repro.core import (contact, rangefinder as _rangefinder,
+                        schedule as _schedule, stopping as _stopping)
 from repro.core.linop import as_linop
-from repro.core.qr_update import qr_rank1_update
 from repro.core.schedule import ShiftSchedule
 from repro.core.stopping import StopRule
 
@@ -52,10 +52,6 @@ class SVDResult:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
-
-
-def _qr(A):
-    return jnp.linalg.qr(A, mode="reduced")
 
 
 ShiftMode = Literal["exact", "paper"]
@@ -128,41 +124,21 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     if not (k <= K <= min(m, n)):
         raise ValueError(f"need k <= K <= min(m, n), got {k=} {K=} {m=} {n=}")
     mu, sched = _schedule.resolve_shift(mu, shift)
-
-    omega = jax.random.normal(key, (n, K), dtype=dt)        # line 2
-    X1 = eng.matmat(op, omega)                              # line 3
-    Q1, R1 = _qr(X1)                                        # line 4
-
-    if mu is not None:                                      # lines 5-7
+    if mu is not None:
         mu = jnp.asarray(mu, dt).reshape(m)
-        v = omega.sum(axis=0) if shift_mode == "exact" else jnp.ones(K, dt)
-        if use_qr_update:
-            Q, _ = qr_rank1_update(Q1, R1, -mu, v)          # line 6
-        else:
-            Q, _ = _qr(contact.rank1_correct(Q1 @ R1, mu, v))
-    else:
-        Q = Q1
-
-    # lines 8-11 under the shift schedule and the stop rule: line 9 /
-    # Eq. 7 then line 10 / Eq. 8 (or the spectral Gram body), every
-    # product through the engine's fused rank-1-epilogue contact points
-    # (Pallas on TPU).  One driver serves both loop spellings, so the
-    # (schedule state, stop state) init order is identical whichever
-    # loop runs — including the q = 0 degenerate case (pinned by
-    # tests/test_stopping.py parity tests).
     rule = _stopping.as_rule(stop)
     _stopping.validate_rule_schedule(rule, sched, mu is not None)
-    qmax = q if rule is None else rule.resolve_q(q)
-    state = sched.init(dt)
-    tstate = None
-    # ||Xbar||_F^2 for the residual criterion / the posterior
-    # certificate: the fro_norm2 probe + one K=1 matmat, once.
-    fro2 = _stopping.resolve_fro2(rule, eng, op, mu)
-    if rule is not None:
-        tstate = rule.init(dt, K, qmax, k, fro2)
-    Q, state, tstate = _stopping.run_power_loop(
-        sched, rule, eng, op, Q, mu, qmax, state, tstate, loop=loop)
 
+    # Phase 1 — range finding (lines 2-11): the one-shot sketch + shift
+    # correction + scheduled power loop, packaged as the fixed-K
+    # RangeFinder implementation (DESIGN.md §16).  srsvd_tol swaps in
+    # the blocked adaptive finder here; everything below is shared.
+    finder = _rangefinder.FixedRangeFinder(
+        K=K, use_qr_update=use_qr_update, shift_mode=shift_mode,
+        loop=loop)
+    Q, growth = finder.find(eng, op, mu, sched, rule, key=key, k=k, q=q)
+
+    # Phase 2 — shift-corrected post-process.
     # line 12 / Eq. 10:  Y = Q^T X - (Q^T mu) 1^T  ==  ((Xbar)^T Q)^T.
     Y = eng.shifted_rmatmat(op, Q, mu).T                    # (K, n)
 
@@ -171,7 +147,9 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     res = SVDResult(U[:, :k], S[:k], Vt[:k, :])
     if rule is None:
         return res
-    return res, _stopping.build_report(rule, tstate, S[:k], m, qmax, fro2)
+    return res, _stopping.build_report(rule, growth.tstate, S[:k], m,
+                                       growth.qmax, growth.fro2,
+                                       k_found=growth.k_found)
 
 
 def rsvd(X, k: int, K: int | None = None, q: int = 0, *,
@@ -185,6 +163,80 @@ def rsvd(X, k: int, K: int | None = None, q: int = 0, *,
     """
     return srsvd(X, None, k, K, q, key=key, shift=shift, stop=stop,
                  engine=engine)
+
+
+def srsvd_tol(X, mu=None, *, tol: float, b: int = 8, q: int = 0,
+              key: jax.Array, max_K: int | None = None,
+              shift: ShiftSchedule | jax.Array | None = None,
+              engine: contact.ContactEngine | None = None):
+    """Tolerance-first adaptive-rank SVD of ``X - mu 1^T``.
+
+    The dual of :func:`srsvd` for callers who know their error budget,
+    not their rank: the :class:`~repro.core.rangefinder
+    .BlockedAdaptiveRangeFinder` grows the basis ``b`` columns at a
+    time against the residual (the engine's ``project_residual``
+    contact — prior blocks are never re-materialized) and stops once
+    the certified relative Frobenius residual from PR 5's exact
+    identity clears ``tol``; the discovered rank is
+    ``report.k_found``.  Each round's certificate contact doubles as
+    that block's rows of the final projection, so the post-process
+    pays no extra contact of X (DESIGN.md §16).
+
+    Args:
+      X: (m, n) array, sparse matrix, or LinOp (including the
+        out-of-core blocked operators — growth is just more engine
+        contacts, so they work unchanged; the streamed sharded
+        operators have their own driver,
+        ``dist_srsvd_tol_streamed``).
+      mu: (m,) shifting vector, or None for the unshifted algorithm.
+      tol: target relative Frobenius error; the run stops at the first
+        block whose certificate clears it.
+      b: growth-block width.  q: deflated power iterations per block.
+      key: PRNG key; block ``t`` draws from ``fold_in(key, t)``, so
+        runs at different tolerances share their basis prefix
+        (``k_found`` is monotone non-increasing in ``tol``).
+      max_K: basis cap (default min(m, n)); when hit, the factors are
+        returned as-is and ``posterior_rel_err`` reports honestly.
+      shift: constant-target schedules (or a shifting vector) only —
+        annealed profiles break the certificate
+        (``validate_certified_schedule``) and spectral bodies have no
+        deflated form here.
+      engine: contact engine (default: the hardware-resolved backend).
+
+    Returns:
+      ``(SVDResult, ConvergenceReport)`` — always the pair; the report
+      carries ``k_found``, a certified ``posterior_rel_err <= tol``
+      (when the cap was not hit), and a (rounds, 1) residual trace in
+      ``pve_trace``.  Host-driven (the rank is data-dependent), so not
+      jittable — like the streamed drivers' host loops.
+    """
+    op = as_linop(X)
+    eng = engine if engine is not None else contact.get_engine()
+    m, _ = op.shape
+    dt = op.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = contact.result_dtype(dt, jnp.float32)
+    mu, sched = _schedule.resolve_shift(mu, shift)
+    if sched.spectral:
+        raise ValueError(
+            "adaptive growth runs plain deflated power iterations under "
+            f"the target shift; a spectral schedule "
+            f"({type(sched).__name__}) has no deflated Gram body — use "
+            "shift=None or FixedShift with srsvd_tol")
+    if mu is not None:
+        mu = jnp.asarray(mu, dt).reshape(m)
+
+    finder = _rangefinder.BlockedAdaptiveRangeFinder(tol=tol, b=b,
+                                                     max_K=max_K)
+    Q, growth = finder.find(eng, op, mu, sched, None, key=key, q=q)
+
+    # The certificate contacts already assembled Y = Q^T Xbar — the
+    # final projection is free.
+    U1, S, Vt = jnp.linalg.svd(growth.Y, full_matrices=False)
+    U = Q @ U1
+    kf = growth.k_found
+    res = SVDResult(U[:, :kf], S[:kf], Vt[:kf, :])
+    return res, _rangefinder.build_adaptive_report(growth, S[:kf], m)
 
 
 def expected_error_bound(m: int, k: int, q: int, sigma_k1: float) -> float:

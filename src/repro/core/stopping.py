@@ -150,6 +150,18 @@ class ConvergenceReport:
         criterion did not need ``||Xbar||_F^2`` either.
       xbar_fro2: the ``||Xbar||_F^2`` probe behind the certificate
         (None when not computed).
+      k_eff: banded per-component convergence count — how many
+        monitored components' final PVE sits inside the rule's
+        ``k_eff_band`` (int32 array; 0 when no power iteration ran, so
+        a q=0 run honestly reports that nothing was *iterated to*
+        convergence — the posterior certificate still covers the
+        factors).  Adaptive runs count the components resolved above
+        the certified residual floor instead (DESIGN.md §16).
+      k_found: the basis width this run actually used — the sampling
+        width K on the fixed-K paths, the *discovered* rank on the
+        adaptive-tolerance paths (``srsvd_tol``).  Host-static (it
+        shapes the factors), so it lives in pytree aux_data and
+        survives the server's vmapped batching.
     """
 
     iters_run: jax.Array
@@ -158,6 +170,8 @@ class ConvergenceReport:
     posterior_rel_err: jax.Array | None
     xbar_fro2: jax.Array | None
     qmax: int = dataclasses.field(default=0)
+    k_eff: jax.Array | None = dataclasses.field(default=None)
+    k_found: int | None = dataclasses.field(default=None)
 
     @property
     def stopped_early(self):
@@ -165,11 +179,18 @@ class ConvergenceReport:
 
     def tree_flatten(self):
         return ((self.iters_run, self.pve_trace, self.sigma_estimates,
-                 self.posterior_rel_err, self.xbar_fro2), (self.qmax,))
+                 self.posterior_rel_err, self.xbar_fro2, self.k_eff),
+                (self.qmax, self.k_found))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, qmax=aux[0])
+        (iters_run, pve_trace, sigma_estimates, posterior_rel_err,
+         xbar_fro2, k_eff) = children
+        return cls(iters_run=iters_run, pve_trace=pve_trace,
+                   sigma_estimates=sigma_estimates,
+                   posterior_rel_err=posterior_rel_err,
+                   xbar_fro2=xbar_fro2, k_eff=k_eff, qmax=aux[0],
+                   k_found=aux[1])
 
 
 class StopRule:
@@ -249,6 +270,14 @@ class StopRule:
     def decide(self, s, pve, state) -> jax.Array:
         """Rule-specific criterion; returns a scalar bool (traceable)."""
         return jnp.zeros((), bool)
+
+    @property
+    def k_eff_band(self) -> float:
+        """PVE band inside which a component counts as converged for the
+        report's ``k_eff``: the rule's own tolerance when it has one
+        (PVEStop/ResidualStop), 1e-2 otherwise (FixedIters)."""
+        band = getattr(self, "tol", None)
+        return 1e-2 if band is None else float(band)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,6 +399,31 @@ def as_rule(stop) -> StopRule | None:
         f"{type(stop).__name__}")
 
 
+def validate_certified_schedule(sched, shifted: bool, *,
+                                what: str) -> None:
+    """Reject schedules whose iterates break the captured-energy
+    certificate — the shared half of ``validate_rule_schedule`` that the
+    adaptive range finder (DESIGN.md §16) validates against too.
+
+    Any tolerance criterion built on PR 5's identity ``||Xbar - Q Q^T
+    Xbar||^2 = ||Xbar||^2 - ||Q^T Xbar||^2`` needs every contact to run
+    under the target shift itself; an annealed scalar profile
+    (``scale_at != 1``) iterates ``X - c_t mu 1^T``, whose un-removed
+    ``(1 - c_t)`` mean energy inflates the captured ``sum s^2`` past
+    ``||Xbar||_F^2`` and would certify garbage.  Unshifted runs
+    (``mu=None``) have no mean component, so any schedule is fine.
+    """
+    if not shifted or sched.runs_target_shift:
+        return
+    raise ValueError(
+        f"{what}'s residual certificate is only valid when every "
+        "iteration runs under the target shift itself; "
+        f"{type(sched).__name__} anneals it (scale_at != 1), which "
+        "would inflate the captured energy and certify garbage. "
+        f"Use PVEStop / FixedIters with this schedule, or a "
+        f"constant-scale schedule with {what}")
+
+
 def validate_rule_schedule(rule: StopRule | None, sched,
                            shifted: bool) -> None:
     """Reject criterion/schedule pairings whose math does not hold.
@@ -382,16 +436,10 @@ def validate_rule_schedule(rule: StopRule | None, sched,
     a certification (DESIGN.md §12).  Unshifted runs (``mu=None``)
     have no mean component, so any schedule is fine there.
     """
-    if rule is None or not shifted:
+    if rule is None:
         return
-    if isinstance(rule, ResidualStop) and not sched.runs_target_shift:
-        raise ValueError(
-            "ResidualStop's residual bound is only valid when every "
-            "iteration runs under the target shift itself; "
-            f"{type(sched).__name__} anneals it (scale_at != 1), which "
-            "would inflate the captured energy and certify garbage. "
-            "Use PVEStop / FixedIters with this schedule, or a "
-            "constant-scale schedule with ResidualStop")
+    if isinstance(rule, ResidualStop):
+        validate_certified_schedule(sched, shifted, what="ResidualStop")
 
 
 def resolve_fro2(rule: StopRule | None, eng, op, mu):
@@ -452,16 +500,23 @@ def posterior_rel_err(S, fro2, m: int, K: int | None = None):
 
 
 def build_report(rule: StopRule, state: StopState, S, m: int,
-                 qmax: int, fro2=None) -> ConvergenceReport:
+                 qmax: int, fro2=None, *,
+                 k_found: int | None = None) -> ConvergenceReport:
     """Assemble the report from the final stop state and the returned
-    top-k singular values (``S``)."""
+    top-k singular values (``S``).  ``k_found`` is the basis width the
+    driver used (its K on the fixed paths); ``k_eff`` counts the
+    monitored components whose final PVE sits inside the rule's
+    ``k_eff_band`` — 0 when no power iteration ran (the init PVE is
+    inf), since nothing was iterated to convergence."""
     post = None if fro2 is None else posterior_rel_err(
         S, fro2, m, K=state.prev_s.shape[0])
+    k_eff = jnp.sum(
+        state.mask & (state.pve <= rule.k_eff_band)).astype(jnp.int32)
     return ConvergenceReport(
         iters_run=state.t, pve_trace=state.trace,
         sigma_estimates=state.prev_s, posterior_rel_err=post,
         xbar_fro2=None if fro2 is None else jnp.asarray(fro2),
-        qmax=qmax)
+        qmax=qmax, k_eff=k_eff, k_found=k_found)
 
 
 def run_power_loop(sched, rule: StopRule | None, eng, op, Q, mu,

@@ -86,6 +86,40 @@ def row_sharded_rmatmat(source, B_loc, *,
         .row_sharded_rmatmat(source, B_loc)
 
 
+def project_residual(X, Q, B, mu, *, interpret: bool | None = None,
+                     backend: str | None = None):
+    """``(I - Q Q^T)(X - mu 1^T) @ B`` — the adaptive range finder's
+    growth contact (DESIGN.md §16): sample the residual of the
+    accumulated basis Q without materializing the deflated operator.
+    One shifted matmat through the operator's own path plus an
+    O(m·K·b) deflation; accepts anything ``as_linop`` does."""
+    from repro.core.linop import as_linop
+    return contact.get_engine(backend, interpret=interpret) \
+        .project_residual(as_linop(X), Q, B, mu)
+
+
+def sharded_growth_contact(source, B_loc, Qb, mu, *,
+                           interpret: bool | None = None,
+                           backend: str | None = None):
+    """One column range's share of an adaptive growth round in a single
+    pass over its blocks (DESIGN.md §16): the new draw's sample partial
+    (psum) plus the previous block's certificate/projection rows
+    (owned).  ``Qb=None`` is round zero (no block to certify yet)."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .sharded_growth_contact(source, B_loc, Qb, mu)
+
+
+def row_sharded_growth_contact(source, B, Qb_loc, mu_loc, *,
+                               interpret: bool | None = None,
+                               backend: str | None = None):
+    """One row range's share of an adaptive growth round in a single
+    pass — owned sample rows plus the previous block's (n, b) rmatmat
+    partial (psum); the m >> n transpose of
+    ``sharded_growth_contact``."""
+    return contact.get_engine(backend, interpret=interpret) \
+        .row_sharded_growth_contact(source, B, Qb_loc, mu_loc)
+
+
 def sparse_shifted_matmat(source, B, mu, *, interpret: bool | None = None,
                           backend: str | None = None):
     """(X - mu 1^T) @ B from a CSR column-block source, one fused sparse

@@ -19,8 +19,15 @@ this module applies the same architecture to factorization jobs
      (``repro.api.factorize_batched``): one jit trace per signature,
      one device dispatch per round;
   5. everything else (blocked / sharded / sparse / CSR operators,
-     vector-shift jobs) routes through ``repro.api.run_request`` to
-     the single-device or streamed distributed paths.
+     vector-shift jobs, and ``tol=`` adaptive-rank jobs — their
+     discovered rank has no static signature to coalesce under)
+     routes through ``repro.api.run_request`` to the single-device or
+     streamed distributed paths.
+
+:meth:`FactorServer.submit_async` is the asynchronous front: a lazy
+daemon worker thread wraps :meth:`FactorServer.step` and resolves one
+``concurrent.futures.Future`` per request;
+:meth:`FactorServer.shutdown` drains and joins it.
 
 Every response is a :class:`repro.api.FactorizationResult` carrying
 the factors, the request's own ``ConvergenceReport`` (the per-request
@@ -43,7 +50,9 @@ from __future__ import annotations
 
 import argparse
 import collections
+import concurrent.futures
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -62,6 +71,10 @@ def _is_batchable(req: api.FactorizationRequest) -> bool:
     if not isinstance(x, np.ndarray | jax.Array) or x.ndim != 2:
         return False
     if req.refresh_of is not None:
+        return False
+    if req.tol is not None:
+        # adaptive-rank jobs discover their own rank in a host loop —
+        # no static signature to coalesce under; serial lane
         return False
     # a shift *vector* (anything shaped) is per-job data, not a static
     # argument; normalize those through the serial path
@@ -153,6 +166,16 @@ class FactorServer:
         self.queue: collections.deque[_Pending] = collections.deque()
         self.active = np.zeros(batch, bool)     # device slot occupancy
         self._rid = 0
+        # -- async front (submit_async / shutdown): a lazy daemon
+        # worker owns queue/step/cache exclusively once started;
+        # submitters only touch the staging list under the lock.
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._staged: list[tuple[api.FactorizationRequest,
+                                 concurrent.futures.Future]] = []
+        self._futures: dict[int, concurrent.futures.Future] = {}
+        self._stop_worker = False
+        self._worker: threading.Thread | None = None
 
     @property
     def pending(self) -> int:
@@ -227,6 +250,72 @@ class FactorServer:
             for rid, res in self.step():
                 out[rid] = res
         return out
+
+    # -- async front -----------------------------------------------------
+
+    def submit_async(self, req: api.FactorizationRequest,
+                     ) -> concurrent.futures.Future:
+        """Enqueue one request and return a
+        :class:`concurrent.futures.Future` resolving to its
+        :class:`repro.api.FactorizationResult`.
+
+        The first call lazily starts a daemon worker thread that wraps
+        :meth:`step` — from then on the worker owns the scheduling loop
+        (don't mix with manual :meth:`step`/:meth:`drain` calls);
+        coalescing, caching, and the serial lanes behave exactly as in
+        synchronous stepping.  Execution failures resolve the future
+        with a result whose ``ok`` is False (``error`` set) — the
+        future itself never raises.  :meth:`shutdown` drains pending
+        work and joins the worker; a later ``submit_async`` restarts
+        it.
+        """
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        with self._lock:
+            self._staged.append((req, fut))
+            if self._worker is None:
+                self._stop_worker = False
+                self._worker = threading.Thread(
+                    target=self._worker_loop, name="factor-serve-worker",
+                    daemon=True)
+                self._worker.start()
+        self._wake.set()
+        return fut
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the async worker.  ``wait=True`` (default) lets it
+        drain everything already staged or queued — every returned
+        future resolves — then joins the thread.  No-op when
+        ``submit_async`` was never called."""
+        with self._lock:
+            worker = self._worker
+            if worker is None:
+                return
+            self._stop_worker = True
+        self._wake.set()
+        if wait:
+            worker.join()
+
+    def _worker_loop(self) -> None:
+        while True:
+            self._wake.wait(timeout=0.05)
+            self._wake.clear()
+            with self._lock:
+                staged, self._staged = self._staged, []
+                stop = self._stop_worker
+            for req, fut in staged:
+                self._futures[self.submit(req)] = fut
+            while self.queue:
+                for rid, res in self.step():
+                    fut = self._futures.pop(rid, None)
+                    if fut is not None:
+                        fut.set_result(res)
+            if stop:
+                with self._lock:
+                    # late submissions may have raced the stop flag;
+                    # loop once more for them, exit only when drained
+                    if not self._staged:
+                        self._worker = None
+                        return
 
     # -- execution lanes -------------------------------------------------
 

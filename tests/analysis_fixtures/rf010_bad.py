@@ -1,0 +1,22 @@
+"""RF010 negative fixture: RangeFinder implementations whose ``find``
+breaks the (Q, growth_state) protocol pair — a bare basis return, a
+3-tuple, and a bare ``return`` each fire once."""
+
+
+class RangeFinder:
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        raise NotImplementedError
+
+
+class BareBasisFinder(RangeFinder):
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        Q = eng.matmat(op, key)
+        return Q
+
+
+class WideTupleFinder(RangeFinder):
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        Q = eng.matmat(op, key)
+        if rule is None:
+            return Q, None, k
+        return

@@ -1,0 +1,21 @@
+"""RF010 positive fixture: every implementation's ``find`` returns the
+literal (Q, growth_state) pair on every path; the base protocol class
+(no returns) and non-finder classes are out of scope."""
+
+
+class RangeFinder:
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        raise NotImplementedError
+
+
+class OneShotFinder(RangeFinder):
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        Q = eng.matmat(op, key)
+        if rule is None:
+            return Q, None
+        return Q, rule.init(k)
+
+
+class NotAFinder:
+    def find(self, eng, op, mu, sched, rule, *, key, k, q):
+        return None

@@ -413,6 +413,85 @@ def check_factorize_routes_sharded():
         assert rep.posterior_rel_err is not None
 
 
+def check_adaptive_matches_dense():
+    """The tolerance-first adaptive drivers over both streamed shard
+    axes (`dist_srsvd_tol_streamed` on a ShardedBlockedOp and a
+    RowShardedBlockedOp, 8 hosts, awkward block size): same fold_in
+    draws as the single-device `srsvd_tol`, so the discovered rank
+    matches exactly and the factors match to 1e-5 relative; each
+    growth round costs one disk pass and the exit certificate clears
+    tol.  Also covers the `factorize(tol=..., mesh=...)` front-door
+    routing and the capped-basis honest certificate."""
+    import tempfile
+    from repro import api
+    from repro.core import (RowShardedBlockedOp, ShardedBlockedOp,
+                            dist_srsvd_tol_streamed, srsvd_tol)
+    rng = onp.random.default_rng(31)
+    tol = 1e-3
+    with tempfile.TemporaryDirectory() as tmp:
+        for cls, shard_axis, mesh_shape, (m, n) in (
+                (ShardedBlockedOp, "cols", (1, 8), (48, 256)),
+                (RowShardedBlockedOp, "rows", (8, 1), (256, 48))):
+            mesh = _mesh(mesh_shape, ("model", "data"))
+            # exactly rank 6 after mean-shifting: the adaptive runs
+            # certify ~0 residual at k_found ~ 6 and both paths
+            # reconstruct Xbar to float32 roundoff
+            X = (rng.standard_normal((m, 6))
+                 @ rng.standard_normal((6, n)) + 2.0) \
+                .astype(onp.float32)
+            mu = X.mean(axis=1)
+            Xbar = X - mu[:, None]
+            nrm = onp.linalg.norm(Xbar)
+            path = os.path.join(tmp, f"X_{shard_axis}.f32")
+            X.tofile(path)
+            # block 9 does not divide the per-host ranges: the final
+            # partial block is exercised on every growth contact
+            op = cls.from_memmap(path, (m, n), "float32", num_shards=8,
+                                 block_size=9)
+            for shifted in (True, False):
+                mu_arg = mu if shifted else None
+                key = jax.random.PRNGKey(5)
+                stream, srep = dist_srsvd_tol_streamed(
+                    op, mu_arg, tol, b=4, mesh=mesh, key=key,
+                    shard_axis=shard_axis)
+                single, hrep = srsvd_tol(jnp.asarray(X),
+                                         None if mu_arg is None
+                                         else jnp.asarray(mu), tol=tol,
+                                         b=4, key=key)
+                assert srep.k_found == hrep.k_found, \
+                    f"{shard_axis}: discovered rank diverged " \
+                    f"({srep.k_found} vs {hrep.k_found})"
+                assert float(srep.posterior_rel_err) <= tol
+                ref = Xbar if shifted else X
+                refn = nrm if shifted else onp.linalg.norm(X)
+                rel = onp.linalg.norm(
+                    onp.asarray(stream.reconstruct()) - ref) / refn
+                assert rel <= 1e-5, \
+                    f"{shard_axis} shifted={shifted}: rel err {rel:.2e}"
+                gap = onp.linalg.norm(
+                    onp.asarray(stream.reconstruct())
+                    - onp.asarray(single.reconstruct())) / refn
+                assert gap <= 1e-5, \
+                    f"{shard_axis} shifted={shifted}: " \
+                    f"streamed vs single gap {gap:.2e}"
+                onp.testing.assert_allclose(
+                    onp.asarray(stream.S), onp.asarray(single.S),
+                    rtol=1e-4, atol=1e-4 * float(single.S[0]))
+            # capped basis: honest certificate above tol
+            _, crep = dist_srsvd_tol_streamed(
+                op, mu, tol, b=4, max_K=4, mesh=mesh,
+                key=jax.random.PRNGKey(5), shard_axis=shard_axis)
+            assert crep.k_found == 4
+            assert float(crep.posterior_rel_err) > tol
+            # front door: factorize(tol=..., mesh=...) routes here
+            fres, frep = api.factorize(op, tol=tol, b=4, mu=mu,
+                                       mesh=mesh, seed=5)
+            assert frep.k_found == 8      # two rounds of b=4 cover rank 6
+            rel = onp.linalg.norm(
+                onp.asarray(fres.reconstruct()) - Xbar) / nrm
+            assert rel <= 1e-5, f"{shard_axis} factorize: {rel:.2e}"
+
+
 def check_tsqr():
     from repro.core import tsqr
     from jax import shard_map

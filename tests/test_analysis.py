@@ -25,7 +25,7 @@ def rules_hit(paths):
 # -- per-rule fixtures ------------------------------------------------------
 
 PER_FILE_RULES = ["RC001", "RS002", "BA003", "DT004", "DT005", "IM006",
-                  "SV009"]
+                  "SV009", "RF010"]
 
 
 @pytest.mark.parametrize("rule", PER_FILE_RULES)
@@ -66,6 +66,17 @@ def test_de008_fixture_pair():
     assert "DE008" in {v.rule for v in bad}
     assert any("orphan_export" in v.message for v in bad)
     assert run_lint([FIXTURES / "de008_ok"]) == []
+
+
+def test_rf010_scopes_and_counts():
+    """RF010 fires once per protocol-breaking return path (bare basis,
+    wide tuple, bare return = 3) and only inside RangeFinder
+    subclasses; the real finders' module is in scope and clean."""
+    violations = run_lint([FIXTURES / "rf010_bad.py"])
+    assert len(violations) == 3
+    finders = REPO_SRC / "core" / "rangefinder.py"
+    assert finders.is_file()
+    assert run_lint([finders]) == []
 
 
 def test_sv009_pins_the_real_server_module():
@@ -189,7 +200,8 @@ def _run_cli(*args):
 def test_cli_nonzero_on_fixtures():
     for bad in ["rc001_bad.py", "rs002_bad.py", "ba003_bad.py",
                 "dt004_bad.py", "dt005_bad.py", "im006_bad.py",
-                "de008_bad.py", "ow007_bad", "sv009_bad.py"]:
+                "de008_bad.py", "ow007_bad", "sv009_bad.py",
+                "rf010_bad.py"]:
         proc = _run_cli(str(FIXTURES / bad))
         assert proc.returncode == 1, (bad, proc.stdout, proc.stderr)
 

@@ -17,7 +17,7 @@ import pytest
 
 from repro import api
 from repro.core import (BlockedOp, CallableOp, ChainedOp, DenseOp,
-                        FixedIters, PVEStop, srsvd)
+                        FixedIters, PVEStop, srsvd, srsvd_tol)
 from repro.data import (ColumnBlockLoader, CSRMatrix, open_memmap_matrix,
                         prefetch)
 
@@ -93,6 +93,106 @@ def test_factorize_accepts_stop_rules_and_mesh_guard():
     op = BlockedOp(ColumnBlockLoader(X, block_size=8))
     with pytest.raises(TypeError, match="mesh"):
         api.factorize(op, 5, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# tolerance-first adaptive rank through the front door
+
+
+def test_factorize_tol_discovers_rank():
+    """factorize(tol=...) routes the adaptive range finder: the pair
+    comes back with k_found-shaped factors, a certificate <= tol, and
+    byte-identical results to calling srsvd_tol directly (same key)."""
+    rng = np.random.default_rng(30)
+    A = (rng.standard_normal((40, 6)) @ rng.standard_normal((6, 60))) \
+        .astype(np.float32)
+    mu = jnp.asarray(A.mean(axis=1))
+    res, rep = api.factorize(A, tol=1e-3, b=4, mu=mu, seed=3)
+    assert res.S.shape[0] == rep.k_found
+    assert 6 <= rep.k_found <= 9
+    assert float(rep.posterior_rel_err) <= 1e-3
+    ref, _ = srsvd_tol(jnp.asarray(A), mu, tol=1e-3, b=4,
+                       key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(ref.S))
+
+
+def test_factorize_k_tol_mutually_exclusive():
+    X = _rand(20, 30, seed=31)
+    with pytest.raises(ValueError, match="exactly one"):
+        api.factorize(X, 4, tol=1e-2)
+    with pytest.raises(ValueError, match="exactly one"):
+        api.factorize(X)
+    with pytest.raises(ValueError, match="fixed-k"):
+        api.factorize(X, tol=1e-2, K=8)
+    with pytest.raises(ValueError, match="fixed-k"):
+        api.factorize(X, tol=1e-2, stop=PVEStop(1e-2))
+
+
+def test_factorize_dense_mesh_size_threshold(monkeypatch):
+    """Satellite routing gate: a dense array under mesh= goes
+    distributed only at REPRO_DIST_DENSE_MIN_SIZE elements or more;
+    below the threshold the factors are byte-identical to a no-mesh
+    call (the mesh is never touched), and tol= always stays on the
+    single-device path."""
+    X = _rand(24, 32, seed=32)          # 768 elements
+
+    calls = []
+
+    def spy(*a, **kw):
+        calls.append(a)
+        return "routed-dist"
+
+    monkeypatch.setattr(api, "dist_srsvd", spy)
+    # below the (default 16384) threshold: single-device, mesh unused —
+    # a non-mesh object proves the path never reaches a collective
+    res, rep = api.factorize(X, 4, q=1, seed=2, mesh=object())
+    ref, _ = api.factorize(X, 4, q=1, seed=2)
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    assert calls == []
+    # env override drops the threshold below 768: the dist path runs
+    monkeypatch.setenv("REPRO_DIST_DENSE_MIN_SIZE", "512")
+    assert api._dist_dense_min_size() == 512
+    assert api.factorize(X, 4, q=1, seed=2, mesh=object()) \
+        == "routed-dist"
+    assert len(calls) == 1
+    # tol= never routes dense-dist, whatever the threshold says
+    out = api.factorize(X, tol=0.5, seed=2, mesh=object())
+    assert len(calls) == 1 and isinstance(out, tuple)
+
+
+def test_run_request_tol_matches_factorize():
+    X = _rand(30, 44, seed=33)
+    req = api.FactorizationRequest(X, tol=1e-2, b=3, center=True,
+                                   seed=5)
+    res, rep = api.run_request(req)
+    ref, ref_rep = api.factorize(X, tol=1e-2, b=3, center=True, seed=5)
+    assert rep.k_found == ref_rep.k_found
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(ref.S))
+
+
+def test_request_cache_key_tol_fields():
+    """Every adaptive-request field that changes the factors perturbs
+    the cache key — and a tol request never collides with a fixed-k
+    request on the same bytes."""
+    X = _rand(20, 30, seed=34)
+    fixed = api.request_cache_key(api.FactorizationRequest(X, k=4))
+    base = api.request_cache_key(
+        api.FactorizationRequest(X, tol=1e-2, b=8))
+    assert base != fixed
+    assert base == api.request_cache_key(
+        api.FactorizationRequest(X.copy(), tol=1e-2, b=8, tag="zzz"))
+    seen = {fixed, base}
+    for other in (
+            api.FactorizationRequest(X, tol=5e-3, b=8),
+            api.FactorizationRequest(X, tol=1e-2, b=4),
+            api.FactorizationRequest(X, tol=1e-2, b=8, max_K=16),
+            api.FactorizationRequest(X, tol=1e-2, b=8, seed=1),
+    ):
+        key = api.request_cache_key(other)
+        assert key not in seen
+        seen.add(key)
 
 
 # ---------------------------------------------------------------------------

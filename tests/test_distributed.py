@@ -101,6 +101,15 @@ def test_early_stop_matches_dense_distributed():
     _run("early_stop_matches_dense")
 
 
+def test_adaptive_tol_matches_dense_distributed():
+    """`dist_srsvd_tol_streamed` on both streamed shard axes discovers
+    the same rank as the single-device `srsvd_tol` (same fold_in draws)
+    and matches its factors to 1e-5, with an honest certificate under a
+    basis cap and the factorize(tol=, mesh=) front-door route — 8 fake
+    devices (DESIGN.md §16)."""
+    _run("adaptive_matches_dense")
+
+
 def test_factorize_routes_sharded_families():
     """`repro.api.factorize(op, k, mesh=...)` routes ShardedBlockedOp /
     RowShardedBlockedOp to the streamed distributed paths and a dense

@@ -221,6 +221,94 @@ def test_timing_fields_and_unfingerprintable_requests():
     assert not server.drain()[rid2].cache_hit   # uncacheable, recomputed
 
 
+def test_tol_requests_take_the_serial_lane():
+    """Adaptive-rank jobs have no static signature to coalesce under
+    (the rank is discovered in a host loop), so a tol request rides the
+    serial lane — batch_width 1, zero new batched-solver traces — while
+    same-shape fixed-k requests around it still coalesce; and its
+    result matches the direct factorize(tol=...) call."""
+    server = FactorServer(batch=4)
+    rng = np.random.default_rng(97)
+    A = (rng.standard_normal((32, 5)) @ rng.standard_normal((5, 48))) \
+        .astype(np.float32)
+    fixed_rids = [server.submit(api.FactorizationRequest(
+        _rand(32, 48, seed=200 + i), k=4, q=1, seed=i))
+        for i in range(3)]
+    tol_rid = server.submit(api.FactorizationRequest(
+        A, tol=1e-3, b=4, seed=7))
+    t0 = batched_trace_count()
+    results = server.drain()
+    assert batched_trace_count() - t0 == 1   # only the fixed-k batch
+    r = results[tol_rid]
+    assert r.ok and r.batch_width == 1
+    assert all(results[rid].batch_width == 3 for rid in fixed_rids)
+    ref, ref_rep = api.factorize(A, tol=1e-3, b=4, seed=7)
+    assert r.report.k_found == ref_rep.k_found
+    np.testing.assert_array_equal(np.asarray(r.result.S),
+                                  np.asarray(ref.S))
+    assert float(r.report.posterior_rel_err) <= 1e-3
+    # tol results cache like any other
+    rid2 = server.submit(api.FactorizationRequest(A.copy(), tol=1e-3,
+                                                  b=4, seed=7))
+    assert server.drain()[rid2].cache_hit
+    # a different tolerance is a different cache entry
+    rid3 = server.submit(api.FactorizationRequest(A, tol=1e-1, b=4,
+                                                  seed=7))
+    res3 = server.drain()[rid3]
+    assert not res3.cache_hit
+    assert res3.report.k_found <= r.report.k_found
+
+
+def test_submit_async_futures_resolve():
+    """The async front: submit_async returns concurrent.futures
+    promises a daemon worker resolves off-thread — same results as the
+    synchronous drain, including failures (ok=False rides the result,
+    the future never raises)."""
+    server = FactorServer(batch=2)
+    Xs = [_rand(28, 20, seed=300 + i) for i in range(4)]
+    futs = [server.submit_async(api.FactorizationRequest(
+        X, k=3, q=1, seed=i)) for i, X in enumerate(Xs)]
+    results = [f.result(timeout=60) for f in futs]
+    for i, res in enumerate(results):
+        assert res.ok, res.error
+        ref, _ = api.factorize(Xs[i], 3, q=1, seed=i)
+        np.testing.assert_allclose(np.asarray(res.result.S),
+                                   np.asarray(ref.S),
+                                   rtol=1e-5, atol=1e-5)
+    # a poisoned request resolves its own future with ok=False
+    bad = Xs[0].copy()
+    bad[0, 0] = np.nan
+    jax.config.update("jax_debug_nans", True)
+    try:
+        fut = server.submit_async(api.FactorizationRequest(
+            bad, k=3, q=1, seed=9))
+        res = fut.result(timeout=60)
+    finally:
+        jax.config.update("jax_debug_nans", False)
+    assert not res.ok and res.error
+    server.shutdown()
+
+
+def test_submit_async_shutdown_joins_and_restarts():
+    """shutdown(wait=True) drains staged work, joins the worker thread,
+    and leaves the server reusable: a later submit_async spins up a
+    fresh worker."""
+    server = FactorServer(batch=2)
+    fut = server.submit_async(api.FactorizationRequest(
+        _rand(24, 18, seed=310), k=3, q=1))
+    server.shutdown(wait=True)
+    assert fut.done() and fut.result().ok
+    assert server._worker is None
+    # shutdown with nothing running is a no-op
+    server.shutdown(wait=True)
+    # the server restarts its worker on the next async submission
+    fut2 = server.submit_async(api.FactorizationRequest(
+        _rand(24, 18, seed=311), k=3, q=1))
+    assert fut2.result(timeout=60).ok
+    server.shutdown(wait=True)
+    assert server._worker is None
+
+
 def test_serve_cli_smoke(capsys):
     from repro.launch import factor_serve
     factor_serve.main(["--smoke", "--requests", "7", "--batch", "2",

@@ -25,6 +25,7 @@ else:
         "hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
+import rangefinder_properties as rf_props
 import stopping_properties as props
 from repro.core import qr_rank1_update, rsvd, srsvd
 from repro.sharding import logical_to_spec
@@ -120,6 +121,47 @@ def test_posterior_bound_covers_true_error(m, n, k, q, r, noise, seed):
     Frobenius error of the returned factors (and within a few percent
     of it — the certificate is tight, not vacuous)."""
     props.check_posterior_bound_covers_true_error(m, n, k, q, r, noise,
+                                                  seed)
+
+
+# ---------------------------------------------------------------------------
+# adaptive range finder (DESIGN.md §16) — shared implementations in
+# tests/rangefinder_properties.py (seed-grid twin: tests/test_rangefinder.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(30, 60), n=st.integers(80, 160), r=st.integers(3, 8),
+       b=st.integers(2, 6), q=st.integers(0, 1), seed=st.integers(0, 2**16),
+       kind=st.sampled_from(["dense", "sparse", "blocked"]))
+def test_adaptive_matches_fixed_at_discovered_rank(m, n, r, b, q, seed,
+                                                   kind):
+    """forall exact-rank-r X: srsvd_tol discovers k_found ~ r with a
+    certificate <= tol and matches the fixed-K srsvd at K = k_found to
+    1e-5 relative — dense, sparse and out-of-core blocked operators."""
+    rf_props.check_adaptive_matches_fixed(m, n, r, b, q, seed, kind)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(30, 60), n=st.integers(80, 160), r=st.integers(4, 10),
+       noise=st.floats(0.1, 0.5), b=st.integers(2, 5),
+       seed=st.integers(0, 2**16))
+def test_k_found_monotone_nonincreasing_in_tol(m, n, r, noise, b, seed):
+    """forall X, tol1 >= tol2: k_found(tol1) <= k_found(tol2) — exact,
+    because block t always draws from fold_in(key, t), so a tighter
+    tolerance replays the looser run's basis prefix verbatim."""
+    rf_props.check_k_found_monotone(m, n, r, noise, b, seed)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(30, 60), n=st.integers(80, 160), r=st.integers(3, 8),
+       noise=st.floats(0.05, 0.4), b=st.integers(2, 6),
+       q=st.integers(0, 2), seed=st.integers(0, 2**16))
+def test_adaptive_certificate_covers_true_error(m, n, r, noise, b, q,
+                                                seed):
+    """forall low-rank + noise X: the adaptive run exits with
+    posterior_rel_err <= tol and the true relative error within
+    cancellation slack of the certificate (the identity is exact)."""
+    rf_props.check_certified_residual_covers_true(m, n, r, noise, b, q,
                                                   seed)
 
 

@@ -22,20 +22,23 @@ from repro.api import (FactorizationRequest, FactorizationResult,
                        request_cache_key, run_request, split_batched)
 from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
                         save_checkpoint)
-from repro.core import (PCA, BlockedOp, CallableOp, ChainedOp,
-                        ContactEngine, ConvergenceReport, CSRBlockedOp,
+from repro.core import (PCA, BlockedAdaptiveRangeFinder, BlockedOp,
+                        CallableOp, ChainedOp, ContactEngine,
+                        ConvergenceReport, CSRBlockedOp,
                         CSRShardedBlockedOp, DecayingShift, DenseOp,
-                        DynamicShift, FixedIters, FixedShift, LinOp,
-                        PVEStop, ResidualStop, RowShardedBlockedOp,
+                        DynamicShift, FixedIters, FixedRangeFinder,
+                        FixedShift, GrowthState, LinOp, PVEStop,
+                        RangeFinder, ResidualStop, RowShardedBlockedOp,
                         ShardedBlockedOp, ShiftSchedule, SparseOp,
                         StopRule, SVDResult, array_token, as_linop,
                         as_rule, as_schedule, available_backends,
                         available_sparse_backends, default_backend,
                         dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
                         dist_srsvd, dist_srsvd_streamed,
-                        expected_error_bound, get_engine, qr_rank1_update,
-                        register_backend, register_sparse_backend, rsvd,
-                        srsvd, srsvd_batched, svd_jit, tsqr)
+                        dist_srsvd_tol_streamed, expected_error_bound,
+                        get_engine, qr_rank1_update, register_backend,
+                        register_sparse_backend, rsvd, srsvd,
+                        srsvd_batched, srsvd_tol, svd_jit, tsqr)
 from repro.data import (ColumnBlockLoader, CSRColumnBlockSource, CSRMatrix,
                         DataPipeline, PrefetchingBlockSource,
                         RowBlockLoader, SparseBlock, open_csr,
@@ -57,6 +60,8 @@ _PACKAGES = {
         get_engine, register_backend, register_sparse_backend,
         qr_rank1_update, SVDResult, expected_error_bound, rsvd, srsvd,
         srsvd_batched, batched_trace_count, svd_jit, PCA, Fingerprint,
+        RangeFinder, FixedRangeFinder, BlockedAdaptiveRangeFinder,
+        GrowthState, srsvd_tol, dist_srsvd_tol_streamed,
         array_token, fingerprint, dist_col_mean, dist_pca_fit,
         dist_pca_fit_streamed, dist_srsvd, dist_srsvd_streamed, tsqr,
         ShiftSchedule, FixedShift, DecayingShift, DynamicShift,

@@ -1,0 +1,182 @@
+"""The pluggable range-finder layer (DESIGN.md §16): protocol shape,
+the fixed finder's bit-for-bit equivalence with the pre-split loop,
+and the tolerance-first adaptive path (``srsvd_tol``) — discovered
+rank, certificate honesty, max_K cap, and the seed-grid half of the
+shared property checks (tests/rangefinder_properties.py; the
+hypothesis half lives in tests/test_properties.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import rangefinder_properties as props
+from repro.core import (BlockedAdaptiveRangeFinder, DynamicShift,
+                        FixedIters, FixedRangeFinder, GrowthState,
+                        PVEStop, RangeFinder, get_engine, srsvd,
+                        srsvd_tol)
+from repro.core.linop import as_linop
+from repro.core.schedule import resolve_shift
+
+
+# -- protocol ---------------------------------------------------------------
+
+def test_base_finder_is_abstract():
+    with pytest.raises(NotImplementedError):
+        RangeFinder().find(None, None, None, None, None, key=None,
+                           k=1, q=0)
+
+
+def test_fixed_finder_returns_protocol_pair(rng):
+    """FixedRangeFinder.find yields the (Q, GrowthState) pair RF010
+    pins: an orthonormal (m, K) basis plus the one-shot growth record
+    (k_found = K, one round, no pre-assembled Y)."""
+    X = (rng.standard_normal((30, 80)) + 2.0).astype(np.float32)
+    op = as_linop(jnp.asarray(X))
+    mu, sched = resolve_shift(jnp.asarray(X.mean(1)), None)
+    finder = FixedRangeFinder(K=10)
+    Q, growth = finder.find(get_engine(), op, mu, sched, None,
+                            key=jax.random.PRNGKey(0), k=5, q=1)
+    assert isinstance(growth, GrowthState)
+    assert Q.shape == (30, 10)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(10),
+                               atol=1e-4)
+    assert growth.k_found == 10 and growth.rounds == 1
+    assert growth.Y is None and growth.captured2 is None
+    assert growth.contact_cols == (2 + 2 * 1) * 10
+
+
+def test_adaptive_finder_growth_state(rng):
+    """The adaptive finder's GrowthState carries the certificate pieces
+    the post-process and the bench gate consume: the pre-assembled
+    Y = Q^T Xbar (its certificate contacts), additive captured energy,
+    and the per-round contact-column account."""
+    X = props.exact_lowrank_matrix(40, 96, r=6, seed=3)
+    mu = jnp.asarray(X.mean(1))
+    op = as_linop(jnp.asarray(X))
+    _, sched = resolve_shift(mu, None)
+    finder = BlockedAdaptiveRangeFinder(tol=1e-3, b=4)
+    Q, growth = finder.find(get_engine(), op, mu, sched, None,
+                            key=jax.random.PRNGKey(1), q=0)
+    assert growth.k_found == Q.shape[1] == growth.rounds * 4
+    assert growth.Y.shape == (growth.k_found, 96)
+    np.testing.assert_allclose(
+        np.asarray(growth.Y),
+        np.asarray(Q.T @ jnp.asarray(X - X.mean(1)[:, None])), atol=2e-3)
+    np.testing.assert_allclose(float(growth.captured2),
+                               float(jnp.sum(growth.Y ** 2)), rtol=1e-5)
+    # the accounting the tol bench gates on: fro2 probe + per round
+    # (sample b + certificate b) at q=0
+    assert growth.contact_cols == 1 + growth.rounds * (4 + 4)
+    assert growth.resid_trace.shape == (growth.rounds,)
+
+
+def test_adaptive_finder_validation():
+    with pytest.raises(ValueError):
+        BlockedAdaptiveRangeFinder(tol=-0.5)
+    with pytest.raises(ValueError):
+        BlockedAdaptiveRangeFinder(b=0)
+
+
+def test_srsvd_tol_rejects_spectral_schedules(rng):
+    X = jnp.asarray((rng.standard_normal((20, 50)) + 1.0)
+                    .astype(np.float32))
+    with pytest.raises(ValueError, match="spectral"):
+        srsvd_tol(X, X.mean(axis=1), tol=1e-2,
+                  key=jax.random.PRNGKey(0), shift=DynamicShift())
+
+
+# -- srsvd_tol end to end ---------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "sparse", "blocked"])
+@pytest.mark.parametrize("q", [0, 1])
+def test_adaptive_matches_fixed_at_discovered_rank(kind, q):
+    """Seed grid of the shared property: adaptive == fixed-K at the
+    discovered rank to 1e-5 relative, on all three single-device
+    operator families (the streamed sharded families have their own
+    8-device worker check, adaptive_matches_dense)."""
+    for seed in (0, 1, 2):
+        props.check_adaptive_matches_fixed(48, 128, r=6, b=4, q=q,
+                                           seed=seed, kind=kind)
+
+
+def test_k_found_monotone_in_tol_grid():
+    for seed in (0, 5, 11):
+        props.check_k_found_monotone(50, 140, r=8, noise=0.3, b=3,
+                                     seed=seed)
+
+
+def test_certified_residual_covers_true_grid():
+    for seed in (2, 7):
+        props.check_certified_residual_covers_true(40, 110, r=5,
+                                                   noise=0.2, b=4, q=1,
+                                                   seed=seed)
+
+
+def test_max_k_cap_reports_honestly():
+    """Capping the basis below the true rank returns the capped factors
+    with a certificate that does NOT claim tol was met."""
+    X = props.exact_lowrank_matrix(40, 100, r=8, seed=4)
+    mu = jnp.asarray(X.mean(1))
+    res, rep = srsvd_tol(jnp.asarray(X), mu, tol=1e-3, b=2, max_K=4,
+                         key=jax.random.PRNGKey(2))
+    assert rep.k_found == 4 and res.S.shape == (4,)
+    assert float(rep.posterior_rel_err) > 1e-3
+    assert float(rep.pve_trace[-1, 0]) > 1e-3
+    assert not bool(rep.stopped_early)   # ran to its (capped) ceiling
+
+
+def test_unshifted_adaptive(rng):
+    """mu=None runs the plain (unshifted) adaptive algorithm — the
+    rsvd dual of srsvd_tol — and its certificate covers ||X||_F."""
+    X = props.exact_lowrank_matrix(36, 90, r=5, seed=9)
+    res, rep = srsvd_tol(jnp.asarray(X), None, tol=1e-3, b=5,
+                         key=jax.random.PRNGKey(3))
+    rel = (np.linalg.norm(X - np.asarray(res.reconstruct()))
+           / np.linalg.norm(X))
+    assert float(rep.posterior_rel_err) <= 1e-3
+    assert rel <= 1e-3 + props.CERT_SLACK
+    # the rank-1 offset plane rides on top of the rank-5 product
+    assert 6 <= rep.k_found <= 6 + 5
+
+
+def test_adaptive_integer_operator_promotes(rng):
+    X = (props.exact_lowrank_sparse_matrix(30, 80, r=4, seed=6)
+         * 10).astype(np.int32)
+    mu = jnp.asarray(X.astype(np.float32).mean(1))
+    res, rep = srsvd_tol(jnp.asarray(X), mu, tol=1e-2, b=4,
+                         key=jax.random.PRNGKey(5))
+    assert res.S.dtype == jnp.float32
+    assert np.isfinite(np.asarray(res.S)).all()
+    assert float(rep.posterior_rel_err) <= 1e-2
+
+
+# -- k_eff / k_found on the fixed-K paths -----------------------------------
+
+def test_fixed_path_report_k_found_and_k_eff(rng):
+    """The fixed-K report now names its basis width (k_found = K) and
+    counts converged components: all k monitored components sit inside
+    the PVE band after enough iterations; a q=0 run honestly reports
+    k_eff = 0 (nothing was iterated to convergence)."""
+    X = props.lowrank_noise_matrix(40, 120, r=5, noise=0.05, seed=8)
+    mu = jnp.asarray(X.mean(1))
+    key = jax.random.PRNGKey(4)
+    _, rep = srsvd(jnp.asarray(X), mu, 6, q=8, key=key,
+                   stop=PVEStop(1e-2))
+    assert rep.k_found == 12                      # default K = 2k
+    assert int(rep.k_eff) == 6                    # all monitored converged
+    _, rep0 = srsvd(jnp.asarray(X), mu, 6, q=0, key=key,
+                    stop=FixedIters())
+    assert rep0.k_found == 12 and int(rep0.k_eff) == 0
+
+
+def test_report_k_found_survives_flatten(rng):
+    """k_found lives in pytree aux_data (host-static, shapes the
+    factors) — a flatten/unflatten round trip keeps it, which is what
+    lets the server's batched reports carry it through vmap."""
+    X = props.exact_lowrank_matrix(30, 70, r=4, seed=12)
+    _, rep = srsvd_tol(jnp.asarray(X), jnp.asarray(X.mean(1)), tol=1e-2,
+                       b=4, key=jax.random.PRNGKey(6))
+    leaves, treedef = jax.tree_util.tree_flatten(rep)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.k_found == rep.k_found
+    assert int(rebuilt.k_eff) == int(rep.k_eff)
