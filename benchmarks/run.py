@@ -20,9 +20,9 @@ import sys
 import time
 
 from benchmarks import (compress_bench, dist_svd_bench, fig1_random,
-                        roofline, schedule_bench, serve_bench,
-                        sparse_bench, stream_bench, table1_images,
-                        table1_words, tol_bench)
+                        incremental_bench, roofline, schedule_bench,
+                        serve_bench, sparse_bench, stream_bench,
+                        table1_images, table1_words, tol_bench)
 
 SECTIONS = {
     "fig1": fig1_random.main,
@@ -30,6 +30,7 @@ SECTIONS = {
     "table1_words": table1_words.main,
     "compress": compress_bench.main,
     "dist_svd": dist_svd_bench.main,
+    "incremental": incremental_bench.main,
     "roofline": roofline.main,
     "schedule": schedule_bench.main,
     "serve": serve_bench.main,

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import factorize
+from repro.api import factorize, refresh_block
 from repro.core import PCA, DynamicShift, PVEStop, SparseOp, rsvd
 from repro.data import zipf_cooccurrence
 
@@ -96,6 +96,27 @@ def main():
                                  mu=jnp.asarray(mu), key=key)
     print(f"factorize(tol=0.5): discovered k_found={int(rep_tol.k_found)}"
           f" (certified rel err <= {float(rep_tol.posterior_rel_err):.4f})")
+
+    # --- 7. evolving data: warm-start the next revision's sketch from
+    #        this one's factors (the sample pass lands on the converged
+    #        basis, so the PVE rule fires iterations earlier), and fold
+    #        a *declared* rank-1 revision into the cached factors with
+    #        zero power iterations via refresh_block.
+    X_drift = X + 0.01 * np.random.default_rng(1) \
+        .standard_normal(X.shape).astype(X.dtype)
+    res_warm, rep_warm = factorize(X_drift, k, q=8, mu=jnp.asarray(mu),
+                                   key=key, stop=PVEStop(1e-2),
+                                   warm_start=res_stop)
+    print(f"warm refresh: ran {int(rep_warm.iters_run)} iterations "
+          f"(cold ran {int(report.iters_run)}), certified rel err "
+          f"<= {float(rep_warm.posterior_rel_err):.4f}")
+    u = np.zeros((X.shape[0],), X.dtype)
+    u[:4] = 0.5                                 # four rows gain events
+    w = np.ones((X.shape[1],), X.dtype)
+    res_upd, rep_upd = refresh_block(res_warm, X_drift + np.outer(u, w),
+                                     u, w, mu=jnp.asarray(mu))
+    print(f"refresh_block(rank-1): 0 power iterations, certified rel "
+          f"err <= {float(rep_upd.posterior_rel_err):.4f}")
 
     # --- high-level API
     pca = PCA(k=8, q=8, stop=PVEStop(1e-2)).fit(X_sparse, key=key)

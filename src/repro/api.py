@@ -38,11 +38,14 @@ single device that would drive the adaptive host loop anyway).
 same objects; :func:`run_request` executes one request through exactly
 the routing above.  :func:`factorize_batched` is the device-batching
 primitive (vmapped ``srsvd`` over stacked same-shape operators) the
-server's coalescing loop uses, and :func:`refresh_rank1` is the
-cache-adjacent fast path: refresh a cached factorization after a
-declared rank-1 update via the Givens thin-QR update
-(``core/qr_update.py``) plus one projection contact — no fresh sample,
-no power passes.
+server's coalescing loop uses, and :func:`refresh_block` /
+:func:`refresh_rank1` are the cache-adjacent fast paths: refresh a
+cached factorization after a declared rank-b update (plus the
+mean-shift correction when the column mean itself moved) via the
+Givens thin-QR block update (``core/qr_update.py``) plus one
+projection contact — no fresh sample, no power passes.  For coarser
+drift, ``factorize(warm_start=prior)`` seeds a fresh sketch from the
+prior basis instead (DESIGN.md §17).
 """
 from __future__ import annotations
 
@@ -61,7 +64,7 @@ from repro.core.distributed import (dist_col_mean, dist_srsvd,
 from repro.core.fingerprint import Fingerprint, array_token, fingerprint
 from repro.core.linop import (LinOp, RowShardedBlockedOp,
                               ShardedBlockedOp, as_linop)
-from repro.core.qr_update import qr_rank1_update
+from repro.core.qr_update import qr_block_update
 from repro.core.schedule import ShiftSchedule, resolve_shift
 from repro.core.srsvd import (SVDResult, batched_trace_count,
                               srsvd, srsvd_batched, srsvd_tol)
@@ -71,13 +74,31 @@ from repro.core.stopping import (ConvergenceReport, FixedIters, StopRule,
 __all__ = [
     "FactorizationRequest", "FactorizationResult", "Fingerprint",
     "batched_trace_count", "factorize", "factorize_batched",
-    "fingerprint", "refresh_rank1", "request_cache_key", "run_request",
-    "split_batched",
+    "fingerprint", "refresh_block", "refresh_rank1",
+    "request_cache_key", "run_request", "split_batched",
 ]
 
 
 def _resolve_key(key, seed: int):
     return jax.random.PRNGKey(seed) if key is None else key
+
+
+def _warm_vt(warm_start):
+    """Normalize a ``warm_start`` argument down to a prior ``Vt`` (or
+    None): accepts a :class:`FactorizationResult`, the ``(SVDResult,
+    report)`` pair :func:`factorize` returns, a bare ``SVDResult``, or
+    a raw ``(k_prior, n)`` array."""
+    if warm_start is None:
+        return None
+    if isinstance(warm_start, FactorizationResult):
+        if warm_start.result is None:
+            raise ValueError(
+                "warm_start FactorizationResult carries no factors "
+                f"(failed request: {warm_start.error!r})")
+        warm_start = warm_start.result
+    if isinstance(warm_start, tuple):
+        warm_start = warm_start[0]
+    return getattr(warm_start, "Vt", warm_start)
 
 
 #: Dense arrays smaller than this many elements stay on the single
@@ -98,6 +119,7 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
               stop: StopRule | int | None = None,
               mesh=None, key: jax.Array | None = None, seed: int = 0,
               row_axis: str = "model", col_axis: str = "data",
+              warm_start=None,
               engine: contact.ContactEngine | None = None,
               ) -> tuple[SVDResult, ConvergenceReport]:
     """Factorization of ``X - mu 1^T`` for any operator family: rank-k
@@ -139,6 +161,20 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
         else ``PRNGKey(seed)``.  Same key => same factors as the
         underlying path, which is what the serving layer's cache and
         parity gates lean on.
+      warm_start: a prior factorization of a nearby matrix to seed the
+        sketch from (DESIGN.md §17) — a prior
+        :class:`FactorizationResult`, the ``(SVDResult, report)`` pair
+        this function returns, a bare ``SVDResult``, or a raw ``Vt``
+        (k_prior, n).  The sketch's leading columns become the prior
+        right singular vectors padded with ``fold_in`` fresh
+        Gaussians, so a refresh of slightly-changed data converges in
+        ~1 power pass (~1 disk pass per host range on the streamed
+        sharded paths) with the stop rule certifying when.  Fixed-k
+        only (``tol=`` grows its own residual-directed basis —
+        ``ValueError``); the resident-shard dense+mesh path above the
+        size threshold runs cold with the warm start dropped (its
+        sketch is collective-internal) — the forced-cold cases are
+        listed in DESIGN.md §17.
       engine: contact engine override (single-device paths).
     """
     if (k is None) == (tol is None):
@@ -149,6 +185,12 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
         raise ValueError(
             "tol= discovers the rank under its own certificate — K and "
             "stop rules belong to the fixed-k path")
+    if tol is not None and warm_start is not None:
+        raise ValueError(
+            "warm_start seeds a fixed-K sketch; the tol= path grows "
+            "its basis against the residual instead — pass k= to "
+            "warm-start a refresh (DESIGN.md §17)")
+    warm_start = _warm_vt(warm_start)
     rule = as_rule(stop)
     if rule is None:
         rule = FixedIters()
@@ -169,7 +211,7 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
             return dist_srsvd_streamed(
                 x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
                 stop=rule, shard_axis="rows", row_axis=row_axis,
-                engine=engine)
+                warm_start=warm_start, engine=engine)
         if isinstance(x_or_op, ShardedBlockedOp):
             if center and mu is None:
                 mu = x_or_op.col_mean()
@@ -181,7 +223,7 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
             return dist_srsvd_streamed(
                 x_or_op, mu, k, K, q, mesh=mesh, key=key, shift=sched,
                 stop=rule, col_axis=col_axis, row_axis=row_axis,
-                engine=engine)
+                warm_start=warm_start, engine=engine)
         if isinstance(x_or_op, LinOp):
             raise TypeError(
                 "factorize(mesh=...) routes sharded blocked operators "
@@ -199,6 +241,9 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
                 >= _dist_dense_min_size():
             if center and mu is None:
                 mu = dist_col_mean(x_or_op, mesh, row_axis, col_axis)
+            # Forced-cold case (DESIGN.md §17): the resident-shard
+            # collective draws its sketch inside the shard_map, so the
+            # warm start is dropped and the solve runs cold.
             return dist_srsvd(x_or_op, mu, k, K, q, mesh=mesh, key=key,
                               shift=sched, stop=rule, row_axis=row_axis,
                               col_axis=col_axis)
@@ -210,7 +255,7 @@ def factorize(x_or_op, k: int | None = None, *, K: int | None = None,
         return srsvd_tol(op, mu, tol=tol, b=b, q=q, key=key,
                          max_K=max_K, shift=sched, engine=eng)
     return srsvd(op, mu, k, K, q, key=key, shift=sched, stop=rule,
-                 engine=eng)
+                 warm_start=warm_start, engine=eng)
 
 
 def factorize_batched(Xs, mus, k: int, *, K: int | None = None,
@@ -233,51 +278,96 @@ def factorize_batched(Xs, mus, k: int, *, K: int | None = None,
                          stop=rule)
 
 
-def refresh_rank1(base: SVDResult, x_new, u, w, *, mu=None,
+def refresh_block(base: SVDResult, x_new, U_b, W_b, *, mu=None,
+                  mu_prev=None,
                   engine: contact.ContactEngine | None = None,
                   ) -> tuple[SVDResult, ConvergenceReport]:
-    """Refresh a rank-k factorization after ``X_new = X_old + u w^T``.
+    """Refresh a rank-k factorization after ``X_new = X_old + U_b W_b^T``
+    (a declared rank-b update), folding in the mean-shift correction
+    when the shifting vector itself moved.
 
-    The cache-adjacent fast path (DESIGN.md §15): instead of a fresh
-    Gaussian sample plus q power passes over ``X_new``, fold the
-    declared update into the cached basis with the Givens thin-QR
-    rank-1 update — ``Y_new V = U diag(S) + u (Vt w)`` — then run ONE
-    projection contact against the new operator.  Total cost: O(m k)
-    for the QR update + one ``shifted_rmatmat``; for blocked/streamed
+    The cache-adjacent fast path (DESIGN.md §15, §17): instead of a
+    fresh Gaussian sample plus q power passes over ``X_new``, fold the
+    declared update into the cached basis with the Givens thin-QR block
+    update — ``Y_new V = U diag(S) + U_b (Vt W_b)`` — then run ONE
+    projection contact against the new operator.  Total cost: O(m k b)
+    for the QR updates + one ``shifted_rmatmat``; for blocked/streamed
     operators that is one disk pass instead of ``2 + 2q``.
 
-    Accuracy: exact when ``span(U, u)`` contains the range of
-    ``X_new - mu 1^T`` (e.g. a low-rank matrix plus a rank-1 edit);
-    otherwise the returned report's ``posterior_rel_err`` certifies
-    exactly how much the refreshed basis captures — a caller seeing it
-    degrade resubmits a full :func:`factorize`.
+    ``mu`` is the shifting vector for the NEW matrix and ``mu_prev``
+    the one the cached ``base`` was factored against.  When
+    ``mu_prev`` is given, the correction ``-(mu - mu_prev) 1^T`` is
+    folded in as one more update column (DESIGN.md §17) — the cached
+    basis is rotated from the old centering to the new one without
+    recomputing, so appended rows that moved the column mean cost
+    nothing extra.  ``U_b=None`` (with ``W_b=None``) runs the pure
+    mean-shift refresh.
 
-    ``mu`` is the shifting vector for the NEW matrix (a rank-1 row
-    update moves the column mean; pass the updated mean when
-    centering).
+    Accuracy: exact when ``span(U, U_b, mu - mu_prev)`` contains the
+    range of ``X_new - mu 1^T`` (e.g. a low-rank matrix plus a rank-b
+    edit); otherwise the returned report's ``posterior_rel_err``
+    certifies exactly how much the refreshed basis captures — a caller
+    seeing it degrade resubmits a full :func:`factorize`.
+
+    ``b=1`` with vector ``U_b``/``W_b`` and no ``mu_prev`` is exactly
+    :func:`refresh_rank1` (which delegates here).
     """
     op = as_linop(x_new)
     eng = engine if engine is not None else contact.get_engine()
     U, S, Vt = base.U, base.S, base.Vt
     k = int(S.shape[0])
-    u = jnp.asarray(u, U.dtype).reshape(U.shape[0])
-    w = jnp.asarray(w, Vt.dtype).reshape(Vt.shape[1])
+    m, n = U.shape[0], Vt.shape[1]
+    if (U_b is None) != (W_b is None):
+        raise ValueError("pass U_b and W_b together (or both None for "
+                         "a pure mean-shift refresh)")
+    if U_b is None:
+        U_b = jnp.zeros((m, 0), U.dtype)
+        W_b = jnp.zeros((n, 0), Vt.dtype)
+    U_b = jnp.asarray(U_b, U.dtype)
+    W_b = jnp.asarray(W_b, Vt.dtype)
+    if U_b.ndim == 1:
+        U_b = U_b[:, None]
+    if W_b.ndim == 1:
+        W_b = W_b[:, None]
+    if U_b.shape[1] != W_b.shape[1]:
+        raise ValueError("refresh_block needs matching update widths, "
+                         f"got U_b {U_b.shape} vs W_b {W_b.shape}")
+    if mu_prev is not None:
+        # Xbar_new = Xbar_old + U_b W_b^T - (mu - mu_prev) 1^T: the
+        # mean shift IS one more rank-1 update column (DESIGN.md §17).
+        d = ((jnp.zeros((m,), U.dtype) if mu is None
+              else jnp.asarray(mu, U.dtype))
+             - jnp.asarray(mu_prev, U.dtype))
+        U_b = jnp.concatenate([U_b, -d[:, None]], axis=1)
+        W_b = jnp.concatenate([W_b, jnp.ones((n, 1), Vt.dtype)], axis=1)
+    b = int(U_b.shape[1])
+    if b == 0:
+        raise ValueError("refresh_block got an empty update: pass "
+                         "U_b/W_b, mu_prev, or both")
     # U diag(S) is already a thin QR (diag is upper triangular), so the
-    # update lands directly on the cached factors.
-    Q, _ = qr_rank1_update(U, jnp.diag(S), u, Vt @ w)
-    # Q spans (X_new) V_old — k dims.  Append the component of u
-    # orthogonal to it so the basis spans span(U, u) ⊇ range(X_new)
-    # whenever the base was (numerically) exact; the subsequent
-    # truncation is then the *optimal* rank-k of X_new.
-    r = u - Q @ (Q.T @ u)
-    rn = jnp.linalg.norm(r)
-    eps = jnp.finfo(U.dtype).eps * jnp.linalg.norm(u)
-    Q = jnp.where(rn > eps,
-                  jnp.concatenate([Q, (r / jnp.where(rn > eps, rn, 1.0))
-                                   [:, None]], axis=1),
-                  jnp.concatenate([Q, jnp.zeros_like(u)[:, None]],
-                                  axis=1))
-    Y = eng.shifted_rmatmat(op, Q, mu).T                    # (k+1, n)
+    # update lands directly on the cached factors, column by column.
+    Q, _ = qr_block_update(U, jnp.diag(S), U_b, Vt @ W_b)
+    # Q spans (X_new) V_old — k dims.  Append an orthonormal basis of
+    # the update block's component orthogonal to it so the final basis
+    # spans span(U, U_b) ⊇ range(X_new) whenever the base was
+    # (numerically) exact; the subsequent truncation is then the
+    # *optimal* rank-k of X_new.  Two deflation passes (CGS2 — "twice
+    # is enough", as in the adaptive range finder), then an SVD of the
+    # residual block instead of per-column normalization: the Givens
+    # update already rotated most of each update column into Q, so
+    # in-span columns leave residuals of pure float32 cancellation
+    # noise — normalizing those would feed basis-destroying junk into
+    # Q (after which the certificate identity silently over-counts
+    # captured energy).  The SVD pushes noise into trailing singular
+    # values, which the eps^(2/3)-scaled gate zeroes; zero columns are
+    # harmless in the projection below.
+    Rb = U_b - Q @ (Q.T @ U_b)
+    Rb = Rb - Q @ (Q.T @ Rb)
+    Ub_o, sv, _ = jnp.linalg.svd(Rb, full_matrices=False)
+    tau = jnp.finfo(U.dtype).eps ** (2.0 / 3.0) * jnp.linalg.norm(U_b)
+    Q = jnp.concatenate([Q, Ub_o * (sv > tau)[None, :].astype(U.dtype)],
+                        axis=1)
+    Y = eng.shifted_rmatmat(op, Q, mu).T                    # (k+b, n)
     U1, S2, Vt2 = jnp.linalg.svd(Y, full_matrices=False)
     res = SVDResult((Q @ U1)[:, :k], S2[:k], Vt2[:k, :])
     try:
@@ -295,6 +385,19 @@ def refresh_rank1(base: SVDResult, x_new, u, w, *, mu=None,
         xbar_fro2=None if fro2 is None else jnp.asarray(fro2),
         qmax=0, k_found=k)
     return res, report
+
+
+def refresh_rank1(base: SVDResult, x_new, u, w, *, mu=None,
+                  engine: contact.ContactEngine | None = None,
+                  ) -> tuple[SVDResult, ConvergenceReport]:
+    """Refresh a rank-k factorization after ``X_new = X_old + u w^T`` —
+    the b=1 case of :func:`refresh_block` (a thin delegation, kept as
+    the named entry point the serving layer's rank-1 declarations and
+    older scripts call)."""
+    U = base.U
+    u = jnp.asarray(u, U.dtype).reshape(U.shape[0])
+    w = jnp.asarray(w, base.Vt.dtype).reshape(base.Vt.shape[1])
+    return refresh_block(base, x_new, u, w, mu=mu, engine=engine)
 
 
 def split_batched(res: SVDResult, rep: ConvergenceReport,
@@ -330,10 +433,14 @@ class FactorizationRequest:
     ``matrix`` is any operator spec :func:`factorize` accepts.  ``seed``
     derives the PRNG key (``PRNGKey(seed)``) so a request names its
     randomness — equal requests are cacheable.  ``refresh_of`` +
-    ``update=(u, w)`` declare the matrix as a rank-1 update of a
-    previously factored base (by fingerprint): the server then takes
-    the :func:`refresh_rank1` fast path when the base is still cached.
-    ``tag`` is an opaque caller correlation id, echoed on the response.
+    ``update=(U_b, W_b)`` declare the matrix as a rank-b update of a
+    previously factored base (by fingerprint; vectors for b=1): the
+    server then takes the :func:`refresh_block` fast path when the
+    base is still cached.  ``mu_prev`` is the shifting vector the base
+    was factored against — pass it when the update moved the column
+    mean so the refresh folds in the mean-shift correction
+    (DESIGN.md §17).  ``tag`` is an opaque caller correlation id,
+    echoed on the response.
 
     Exactly one of ``k`` / ``tol`` — a tol request rides the server's
     serial lane (its discovered rank makes it non-coalescable) and its
@@ -354,6 +461,7 @@ class FactorizationRequest:
     seed: int = 0
     refresh_of: Fingerprint | None = None
     update: tuple[Any, Any] | None = None
+    mu_prev: Any = None
     tag: Any = None
 
 
@@ -365,7 +473,8 @@ class FactorizationResult:
 
     ``cache_hit`` marks a result served from the fingerprint cache
     (bit-identical to the cold computation it stored).  ``refreshed``
-    marks the rank-1 fast path.  ``batch_width`` is how many requests
+    marks the rank-b refresh fast path (False on the evicted-base
+    fallback to a full solve).  ``batch_width`` is how many requests
     shared this result's device batch (1 = solo).  ``queue_ms`` /
     ``compute_ms`` split time-in-queue from device time; cache hits
     carry the lookup cost in ``compute_ms``.  A failed request (e.g. a
@@ -409,8 +518,9 @@ def request_cache_key(req: FactorizationRequest) -> tuple:
     (tol, b, max_K), K, q, center, a content token of ``mu``
     (None-safe), the shift schedule (hashable frozen dataclass) or a
     content token of a shift *vector*, the normalized stop rule, and
-    the seed.  ``tag`` and the refresh declaration are deliberately
-    excluded — they do not change the factors.
+    the seed.  ``tag`` and the refresh declaration (``refresh_of``,
+    ``update``, ``mu_prev``) are deliberately excluded — they do not
+    change the factors, only how fast the server may get them.
     """
     fp = fingerprint(req.matrix)
     mu_tok = None if req.mu is None else array_token(req.mu)

@@ -7,6 +7,10 @@ Public API:
                           (DESIGN.md §16)
   RangeFinder / FixedRangeFinder / BlockedAdaptiveRangeFinder
                           the pluggable basis-building phase behind both
+  WarmStartRangeFinder / warm_omega
+                          seed the sketch from a prior factorization's
+                          right singular vectors — warm-started
+                          refreshes of evolving data (DESIGN.md §17)
   dist_srsvd / dist_pca_fit  shard_map multi-device versions
   dist_srsvd_streamed / dist_pca_fit_streamed  host-sharded out-of-core
                           streaming front-end (per-host column ranges
@@ -14,7 +18,9 @@ Public API:
   dist_srsvd_tol_streamed adaptive rank against on-disk operators, one
                           disk pass per growth round
   PCA                     implicit-centering principal component analysis
-  qr_rank1_update         Golub & Van Loan rank-1 thin-QR update
+  qr_rank1_update / qr_block_update / qr_mean_shift_update
+                          Golub & Van Loan thin-QR updates: rank-1,
+                          rank-b block, and the shifted-mean correction
   as_linop / DenseOp / SparseOp / CallableOp   operator protocol over X
   BlockedOp / ChainedOp   out-of-core streaming / lazy-composition operators
   ContactEngine / get_engine / register_backend   unified contact layer
@@ -37,13 +43,15 @@ from repro.core.linop import (BlockedOp, CallableOp, ChainedOp,
                               LinOp, RowShardedBlockedOp,
                               ShardedBlockedOp, SparseOp, as_linop)
 from repro.core.pca import PCA
-from repro.core.qr_update import qr_rank1_update
+from repro.core.qr_update import (qr_block_update, qr_mean_shift_update,
+                                  qr_rank1_update)
 from repro.core.schedule import (DecayingShift, DynamicShift, FixedShift,
                                  ShiftSchedule, as_schedule)
 from repro.core.fingerprint import Fingerprint, array_token, fingerprint
 from repro.core.rangefinder import (BlockedAdaptiveRangeFinder,
                                     FixedRangeFinder, GrowthState,
-                                    RangeFinder)
+                                    RangeFinder, WarmStartRangeFinder,
+                                    warm_omega)
 from repro.core.srsvd import (SVDResult, batched_trace_count,
                               expected_error_bound, rsvd, srsvd,
                               srsvd_batched, srsvd_tol, svd_jit)
@@ -57,11 +65,12 @@ __all__ = [
     "as_linop", "ContactEngine", "available_backends",
     "available_sparse_backends", "default_backend",
     "get_engine", "register_backend", "register_sparse_backend",
-    "qr_rank1_update", "SVDResult",
+    "qr_block_update", "qr_mean_shift_update", "qr_rank1_update",
+    "SVDResult",
     "expected_error_bound", "rsvd", "srsvd", "srsvd_batched",
     "srsvd_tol", "batched_trace_count", "svd_jit", "PCA",
     "RangeFinder", "FixedRangeFinder", "BlockedAdaptiveRangeFinder",
-    "GrowthState",
+    "WarmStartRangeFinder", "warm_omega", "GrowthState",
     "Fingerprint", "array_token", "fingerprint",
     "dist_col_mean", "dist_pca_fit", "dist_pca_fit_streamed", "dist_srsvd",
     "dist_srsvd_streamed", "dist_srsvd_tol_streamed", "tsqr",

@@ -498,6 +498,7 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                         stop: StopRule | int | None = None,
                         col_axis="data", row_axis="model",
                         shard_axis: str = "cols",
+                        warm_start=None,
                         engine: contact.ContactEngine | None = None):
     """Distributed S-RSVD of ``X - mu 1^T`` where X never fully loads:
     host ``p`` streams its own column (or row) range from disk, block by
@@ -525,6 +526,16 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
       pass over every host's range (the biggest win of DESIGN.md §12).
       With a rule the return value is ``(SVDResult,
       ConvergenceReport)``.
+    warm_start: a prior factorization of a nearby matrix — an
+      ``SVDResult`` or its raw ``Vt`` (k_prior, n) — seeding the
+      sketch (``rangefinder.warm_omega``, DESIGN.md §17): the sample's
+      leading columns are the prior right singular vectors, padded
+      with ``fold_in`` fresh Gaussians.  Combined with an early-firing
+      stop rule (or ``q=0``) a streamed refresh pays ~1 disk pass per
+      host range instead of ``2 + 2q`` — the sample pass already lands
+      on the converged basis, so every skipped power iteration saves
+      two full passes over every host's range.  ``None`` is the cold
+      draw, bit-for-bit.
 
     Factors come back laid out like ``dist_srsvd``'s: U (m, k) and S
     replicated, Vt (k, n) sharded over ``col_axis`` (``shard_axis=
@@ -541,7 +552,7 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
                 f"sources), got {type(op).__name__}")
         return _dist_srsvd_streamed_rows(
             op, mu, k, K, q, mesh=mesh, key=key, shift=shift, stop=stop,
-            row_axis=row_axis, engine=engine)
+            row_axis=row_axis, warm_start=warm_start, engine=engine)
     if shard_axis != "cols":
         raise ValueError(
             f"shard_axis must be 'cols' or 'rows', got {shard_axis!r}")
@@ -587,8 +598,12 @@ def dist_srsvd_streamed(op, mu, k: int, K: int | None = None, q: int = 0,
     if rule is not None:
         tstate = rule.init(dt, K, qmax, k, fro2)
 
-    # line 2: the same global draw as the dense path (key parity).
-    omega = jax.random.normal(key, (n, K), dtype=dt)
+    # line 2: the same global draw as the dense path (key parity) —
+    # warm-started from the prior basis when one is given, exactly as
+    # the single-device WarmStartRangeFinder seeds its sketch.
+    omega = _rangefinder.warm_omega(
+        key, n, K, dt,
+        getattr(warm_start, "Vt", warm_start))
 
     def partial_sum_contact(fn):
         """Stack per-host (m, K) partials, sharded one per col device."""
@@ -666,6 +681,7 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
                               shift: ShiftSchedule | None,
                               stop: StopRule | int | None = None,
                               row_axis="model",
+                              warm_start=None,
                               engine: contact.ContactEngine | None = None
                               ):
     """The row-sharded collective schedule (DESIGN.md §11): host ``p``
@@ -733,8 +749,11 @@ def _dist_srsvd_streamed_rows(op, mu, k: int, K: int | None, q: int, *,
                 _put(jnp.stack(vecs), mesh, P(row_axis, None)))
 
     # line 2: same global draw as the dense path (key parity); omega is
-    # (n, K) and replicated — n is the small dimension here.
-    omega = jax.random.normal(key, (n, K), dtype=dt)
+    # (n, K) and replicated — n is the small dimension here.  A warm
+    # start seeds it from the prior basis (DESIGN.md §17).
+    omega = _rangefinder.warm_omega(
+        key, n, K, dt,
+        getattr(warm_start, "Vt", warm_start))
 
     # lines 3-7: the sample's rows are owned per host (no psum on the
     # product); the only collective is the basis TSQR over the row axis.
@@ -1107,20 +1126,23 @@ def dist_pca_fit_streamed(op, k, K: int | None = None, *, mesh: Mesh,
                           stop: StopRule | int | None = None,
                           col_axis="data", row_axis="model",
                           shard_axis: str = "cols", center: bool = True,
+                          warm_start=None,
                           engine: contact.ContactEngine | None = None):
     """Streamed distributed PCA: the column mean comes from one extra
     disk pass over each host's range (a per-host partial — the streamed
     analogue of ``dist_col_mean``'s single psum), then the factorization
     streams the same ranges.  ``shard_axis="rows"`` takes the m >> n
-    row-range layout (DESIGN.md §11).  Returns ``(SVDResult, mu)`` —
-    with ``stop`` the first element is the ``(SVDResult,
-    ConvergenceReport)`` pair, as in ``dist_srsvd_streamed``.
+    row-range layout (DESIGN.md §11).  ``warm_start`` seeds the sketch
+    from a prior factorization, as in ``dist_srsvd_streamed``.  Returns
+    ``(SVDResult, mu)`` — with ``stop`` the first element is the
+    ``(SVDResult, ConvergenceReport)`` pair, as in
+    ``dist_srsvd_streamed``.
     """
     mu = op.col_mean() if center else None
     res = dist_srsvd_streamed(op, mu, k, K, q, mesh=mesh, key=key,
                               shift=shift, stop=stop, col_axis=col_axis,
                               row_axis=row_axis, shard_axis=shard_axis,
-                              engine=engine)
+                              warm_start=warm_start, engine=engine)
     m = op.shape[0]
     S = (res[0] if isinstance(res, tuple) else res).S
     return res, (mu if mu is not None

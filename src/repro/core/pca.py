@@ -82,7 +82,7 @@ class PCA:
                 ".fit(X, key=jax.random.PRNGKey(...)) first")
 
     def fit(self, X, *, key: jax.Array, mesh=None,
-            streamed: bool = False) -> PCA:
+            streamed: bool = False, warm_start=None) -> PCA:
         """Fit on X.  ``streamed=True`` routes through the host-sharded
         distributed path (``dist_srsvd_streamed``): X must be a
         :class:`repro.core.linop.ShardedBlockedOp` (per-host column
@@ -91,7 +91,26 @@ class PCA:
         ranges — the m >> n layout, DESIGN.md §11), and ``mesh`` is
         required — each host streams its own range, the full matrix
         never loads (DESIGN.md §10).
+
+        ``warm_start`` seeds the sketch from a prior factorization of
+        nearby data (DESIGN.md §17): pass an ``SVDResult`` or a raw
+        prior ``Vt`` (k_prior, n) — combined with ``stop=PVEStop(...)``
+        a refresh converges in ~1 power pass (one disk pass per host
+        range on the streamed path).  Fixed-k fits only: the adaptive
+        ``tol=`` path draws its own residual-directed blocks.  A
+        fitted ``PCA`` itself is *not* accepted — it keeps only the
+        left factors (``components_ = U^T``), which span the wrong
+        side of the sketch.
         """
+        if warm_start is not None and self.tol is not None:
+            raise ValueError(
+                "PCA(tol=...) grows its basis against the residual — "
+                "warm starts apply to the fixed-k path (DESIGN.md §17)")
+        if isinstance(warm_start, PCA):
+            raise TypeError(
+                "pass the prior factorization's SVDResult (or its Vt) "
+                "as warm_start — a fitted PCA keeps only the left "
+                "factors U^T, which span the wrong side of the sketch")
         if (self.k is None) == (self.tol is None):
             raise ValueError(
                 "pass exactly one of PCA(k=...) (fixed component "
@@ -143,7 +162,8 @@ class PCA:
             res, mu = dist_pca_fit_streamed(
                 X, self.k, self.K, mesh=mesh, key=key, q=self.q,
                 shift=self.shift, stop=self.stop, center=self.center,
-                shard_axis=shard_axis, engine=self._engine)
+                shard_axis=shard_axis, warm_start=warm_start,
+                engine=self._engine)
             if self.stop is not None:
                 res, self.report_ = res
                 self.n_iter_ = int(self.report_.iters_run)
@@ -171,7 +191,7 @@ class PCA:
             return self
         res: SVDResult = srsvd(op, mu, self.k, self.K, self.q, key=key,
                                shift=self.shift, stop=self.stop,
-                               engine=eng)
+                               warm_start=warm_start, engine=eng)
         if self.stop is not None:
             res, self.report_ = res
             self.n_iter_ = int(self.report_.iters_run)

@@ -1,15 +1,38 @@
-"""Rank-1 thin-QR update (Golub & Van Loan, Matrix Computations §12.5).
+"""Rank-1 / rank-b thin-QR updates (Golub & Van Loan, Matrix
+Computations §12.5).
 
 Given a thin factorization ``A = Q R`` (Q: m x K, R: K x K) and vectors
 ``u`` (m,), ``v`` (K,), compute a thin QR of ``A + u v^T`` in O(mK + K^2)
 — this is the paper's line 6, the step that folds the shift ``-mu 1^T``
 into the sample-matrix basis without re-touching X.
 
+``qr_block_update`` generalizes to rank-b updates ``A + U_b W_b^T``
+(b sequential rank-1 applications, so ``b=1`` is *bit-identical* to
+``qr_rank1_update`` by construction — the incremental property suite
+pins that), and ``qr_mean_shift_update`` is the paper's shift algebra
+applied incrementally: when the column mean moves from ``mu`` to
+``mu'``, fold the rank-1 correction ``-(mu' - mu) v^T`` into the cached
+factorization instead of recomputing it (DESIGN.md §17).
+
 TPU adaptation note: the classical formulation is a sequence of scalar
 Givens rotations.  We keep the rotation *sequence* (it is inherently
 sequential along K) but each rotation is applied to whole rows/columns as
 vector ops (VPU-friendly), driven by ``lax.fori_loop``.  K is small
 (K = 2k <= a few hundred) so this is never a bottleneck; see DESIGN.md §3.
+
+Known edge (DESIGN.md §16, pinned by ``tests/test_qr_update.py``): when
+R is *exactly* singular — zero pivots from a base factored past its
+rank, or a downdate that zeroes a column — the Givens sweeps still
+return an orthonormal Q' and a triangular R' with ``Q' R' = Q R +
+u v^T`` to roundoff: the ``_givens`` tiny-guard passes identity
+rotations through zero pivots, and the extension column gets a second
+Gram-Schmidt pass so an in-span ``u`` contributes *orthogonal* noise
+rather than oblique junk (the singular-downdate rotation angle is
+noise-determined, so obliquity there would corrupt the basis) —
+but callers folding a correction into null directions of a singular
+sketch (fixed K > rank) should use the re-factorization spelling
+(``use_qr_update=False``) instead; the update cannot rotate energy into
+directions the factorization never had.
 """
 from __future__ import annotations
 
@@ -55,9 +78,19 @@ def qr_rank1_update(Q: jax.Array, R: jax.Array, u: jax.Array, v: jax.Array
     u = u.astype(dt)
     v = v.astype(dt)
 
-    # Project u into / out of range(Q):  u = Q w + rho * q_ext.
+    # Project u into / out of range(Q):  u = Q w + rho * q_ext.  The
+    # second Gram-Schmidt pass (CGS2, correction folded into w so the
+    # decomposition stays exact) matters at the singular-downdate edge:
+    # with u numerically inside range(Q) the one-pass residual is pure
+    # cancellation noise, NOT orthogonal to Q — and a downdate that
+    # zeroes a pivot makes the final re-triangularization rotation's
+    # angle noise-determined O(1), mixing that junk into the returned
+    # basis.  Orthogonal junk is harmless; oblique junk destroys Q'.
     w = Q.T @ u                                   # (K,)
     r = u - Q @ w
+    c2 = Q.T @ r
+    r = r - Q @ c2
+    w = w + c2
     rho = jnp.linalg.norm(r)
     tiny = jnp.asarray(jnp.finfo(dt).tiny, dt)
     q_ext = r / jnp.maximum(rho, tiny)
@@ -94,3 +127,59 @@ def qr_rank1_update(Q: jax.Array, R: jax.Array, u: jax.Array, v: jax.Array
     Qe, Re = lax.fori_loop(0, K, body2, (Qe, Re))
 
     return Qe[:, :K], Re[:K, :]
+
+
+def qr_block_update(Q: jax.Array, R: jax.Array, U_b: jax.Array,
+                    W_b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Thin QR of ``Q @ R + U_b @ W_b^T`` — the rank-b block update.
+
+    ``U_b`` is (m, b) and ``W_b`` is (K, b); 1-D inputs are treated as
+    single columns, so the rank-1 case needs no reshaping at call
+    sites.  Implemented as ``b`` sequential Givens rank-1 applications
+    (each O(mK + K^2), total O(b·mK)): ``b=1`` is bit-identical to
+    :func:`qr_rank1_update` by construction, which is the property the
+    serving layer's refresh lane leans on when it routes rank-1
+    refreshes through this path.  ``b=0`` returns the factors
+    untouched.
+
+    Returns (Q', R') with Q': m x K orthonormal, R': K x K upper
+    triangular.
+    """
+    U_b = jnp.asarray(U_b)
+    W_b = jnp.asarray(W_b)
+    if U_b.ndim == 1:
+        U_b = U_b[:, None]
+    if W_b.ndim == 1:
+        W_b = W_b[:, None]
+    if U_b.shape[1] != W_b.shape[1]:
+        raise ValueError(
+            "qr_block_update needs matching update widths, got "
+            f"U_b {U_b.shape} vs W_b {W_b.shape}")
+    for j in range(U_b.shape[1]):
+        Q, R = qr_rank1_update(Q, R, U_b[:, j], W_b[:, j])
+    return Q, R
+
+
+def qr_mean_shift_update(Q: jax.Array, R: jax.Array, mu_old, mu_new,
+                         v: jax.Array | None = None,
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fold a *moved column mean* into a cached thin QR: the factors
+    held ``Xbar_old = X - mu_old 1^T``; appended rows (or recounted
+    events) moved the mean to ``mu_new``, so the new target is
+
+        ``Xbar_new = Xbar_old - (mu_new - mu_old) 1^T``
+
+    — one more rank-1 correction of exactly the paper's line-6 shape,
+    applied incrementally instead of recomputing from scratch
+    (DESIGN.md §17).  ``v`` is the right-hand vector the all-ones row
+    projects to in the factors' column space — ``Omega^T 1`` for a
+    sample-matrix QR (the ``shift_mode="exact"`` convention), ``Vt @
+    1_n`` for cached SVD factors — defaulting to ``1_K`` (the printed
+    Algorithm 1 / ``shift_mode="paper"`` convention).  ``mu_old=None``
+    means the base was unshifted.
+    """
+    d = (jnp.asarray(mu_new, Q.dtype) if mu_old is None
+         else jnp.asarray(mu_new, Q.dtype) - jnp.asarray(mu_old, Q.dtype))
+    if v is None:
+        v = jnp.ones((R.shape[1],), Q.dtype)
+    return qr_rank1_update(Q, R, -d, v)

@@ -10,6 +10,17 @@ basis into factors.  Two finders ship:
                                   ``srsvd`` body (lines 2-11 of
                                   Algorithm 1).  Jittable — it is the body
                                   ``svd_jit`` / ``srsvd_batched`` trace.
+  ``WarmStartRangeFinder``        the fixed finder with the sketch seeded
+                                  from a prior basis: omega's leading
+                                  columns are the prior ``V`` (APGL's
+                                  ``svd(omega=...)`` pattern), padded to
+                                  width K with ``fold_in`` fresh Gaussian
+                                  columns — a refresh of a slightly-
+                                  changed matrix converges in ~1 power
+                                  pass with the PVE stop certifying when
+                                  (DESIGN.md §17).  Bit-compatible with
+                                  ``FixedRangeFinder`` when no prior is
+                                  given.
   ``BlockedAdaptiveRangeFinder``  the blocked adaptive scheme of
                                   Halko/Martinsson/Shkolnisky/Tygert
                                   (arXiv:1007.5510): grow the basis in
@@ -48,6 +59,41 @@ from repro.core.qr_update import qr_rank1_update
 
 def _qr(A):
     return jnp.linalg.qr(A, mode="reduced")
+
+
+def warm_omega(key, n: int, K: int, dt, prior_Vt=None):
+    """The (n, K) sample matrix of a possibly warm-started fixed-K
+    sketch (DESIGN.md §17).
+
+    With no prior this is exactly ``jax.random.normal(key, (n, K))`` —
+    bit-identical to the cold draw, which is the
+    ``WarmStartRangeFinder``-degenerates-to-``FixedRangeFinder``
+    contract.  With a prior ``Vt`` (k_prior, n) the leading columns of
+    omega are the prior right singular vectors (APGL's
+    ``RandomisedSVD.svd(omega=...)`` pattern): for an evolved matrix
+    ``X' = X + dX`` the sample ``X'bar omega`` then already contains
+    ``U diag(S) + O(||dX||)`` — the basis starts converged up to the
+    drift, so a PVE/residual stop fires after ~1 power pass.  The
+    remaining ``K - k_used`` columns are *fresh* Gaussians drawn from
+    ``fold_in(key, k_used)``: they chase whatever new directions the
+    update opened.  At least one fresh column is always kept (the prior
+    is truncated to K - 1 columns when wider) — a sketch with no
+    Gaussian component would never see range directions the prior
+    missed.
+    """
+    if prior_Vt is None:
+        return jax.random.normal(key, (n, K), dtype=dt)
+    Vp = jnp.asarray(prior_Vt, dt)
+    if Vp.ndim != 2 or Vp.shape[1] != n:
+        raise ValueError(
+            "warm_omega needs the prior as Vt rows over the operator's "
+            f"n={n} columns, got shape {Vp.shape}")
+    k_used = min(int(Vp.shape[0]), max(K - 1, 0))
+    fresh = jax.random.normal(jax.random.fold_in(key, k_used),
+                              (n, K - k_used), dtype=dt)
+    if k_used == 0:
+        return fresh
+    return jnp.concatenate([Vp[:k_used].T, fresh], axis=1)
 
 
 def work_dtype(op):
@@ -131,12 +177,17 @@ class FixedRangeFinder(RangeFinder):
     shift_mode: str = "exact"
     loop: str = "python"
 
+    def _draw(self, key, n, K, dt):
+        """The line-2 sample draw — the one seam
+        :class:`WarmStartRangeFinder` overrides."""
+        return jax.random.normal(key, (n, K), dtype=dt)
+
     def find(self, eng, op, mu, sched, rule, *, key, k, q):
         m, n = op.shape
         dt = work_dtype(op)
         K = self.K
 
-        omega = jax.random.normal(key, (n, K), dtype=dt)        # line 2
+        omega = self._draw(key, n, K, dt)                       # line 2
         X1 = eng.matmat(op, omega)                              # line 3
         Q1, R1 = _qr(X1)                                        # line 4
 
@@ -173,6 +224,32 @@ class FixedRangeFinder(RangeFinder):
             contact_cols=(2 + 2 * qmax) * K + (0 if fro2 is None else 1),
             fro2=fro2, captured2=None, Y=None, tstate=tstate,
             sched_state=state)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WarmStartRangeFinder(FixedRangeFinder):
+    """:class:`FixedRangeFinder` with the sketch seeded from a prior
+    basis (DESIGN.md §17): omega's leading columns are ``prior_Vt``'s
+    rows transposed — the right singular vectors of a previous
+    factorization of a nearby matrix — padded to width K with
+    ``fold_in`` fresh Gaussian columns (see :func:`warm_omega`).
+    Everything after the draw (engine sample contact, QR, the rank-1
+    shift correction, the scheduled power loop under the stop rule) is
+    the fixed finder's body verbatim, so a warm refresh composes with
+    every schedule/rule and a ``PVEStop``/``ResidualStop`` certifies
+    *when* the warm basis has converged — typically after ~1 pass
+    instead of q.
+
+    ``prior_Vt=None`` degenerates to :class:`FixedRangeFinder`
+    bit-for-bit (same draw, same body) — the property suite pins it.
+    ``eq=False``: the prior is a concrete array; these finders are
+    built per call, never used as jit cache keys.
+    """
+
+    prior_Vt: jax.Array | None = None
+
+    def _draw(self, key, n, K, dt):
+        return warm_omega(key, n, K, dt, self.prior_Vt)
 
 
 @dataclasses.dataclass(frozen=True)

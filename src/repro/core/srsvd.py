@@ -66,6 +66,7 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
           shift: ShiftSchedule | jax.Array | None = None,
           stop: StopRule | int | None = None,
           loop: PowerLoop = "python",
+          warm_start=None,
           engine: contact.ContactEngine | None = None):
     """Rank-k SVD of ``X - mu 1^T`` (Algorithm 1).
 
@@ -99,6 +100,15 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
         iterations actually run, per-component PVE trace, posterior
         error certificate (DESIGN.md §12).  ``q`` stays the iteration
         ceiling unless the rule carries its own.
+      warm_start: a prior factorization of a nearby matrix — an
+        :class:`SVDResult` or its raw ``Vt`` (k_prior, n) — to seed
+        the sketch from (DESIGN.md §17): omega's leading columns
+        become the prior right singular vectors, padded to width K
+        with ``fold_in`` fresh Gaussians
+        (:class:`~repro.core.rangefinder.WarmStartRangeFinder`), so a
+        refresh of a slightly-changed matrix converges in ~1 power
+        pass with a ``PVEStop``/``ResidualStop`` certifying when.
+        ``None`` (the default) is the cold draw, bit-for-bit.
       loop: "python" unrolls the power loop (required for the streaming
         ``BlockedOp``, whose block iteration is host-side; a firing
         stop rule breaks the host loop, saving the skipped iterations'
@@ -132,10 +142,17 @@ def srsvd(X, mu, k: int, K: int | None = None, q: int = 0, *,
     # Phase 1 — range finding (lines 2-11): the one-shot sketch + shift
     # correction + scheduled power loop, packaged as the fixed-K
     # RangeFinder implementation (DESIGN.md §16).  srsvd_tol swaps in
-    # the blocked adaptive finder here; everything below is shared.
-    finder = _rangefinder.FixedRangeFinder(
-        K=K, use_qr_update=use_qr_update, shift_mode=shift_mode,
-        loop=loop)
+    # the blocked adaptive finder here; a warm start swaps in the
+    # prior-seeded sketch (DESIGN.md §17); everything below is shared.
+    if warm_start is not None:
+        prior_Vt = getattr(warm_start, "Vt", warm_start)
+        finder = _rangefinder.WarmStartRangeFinder(
+            K=K, use_qr_update=use_qr_update, shift_mode=shift_mode,
+            loop=loop, prior_Vt=jnp.asarray(prior_Vt))
+    else:
+        finder = _rangefinder.FixedRangeFinder(
+            K=K, use_qr_update=use_qr_update, shift_mode=shift_mode,
+            loop=loop)
     Q, growth = finder.find(eng, op, mu, sched, rule, key=key, k=k, q=q)
 
     # Phase 2 — shift-corrected post-process.

@@ -10,9 +10,12 @@ this module applies the same architecture to factorization jobs
   2. each scheduling round (:meth:`FactorServer.step`) first serves
      every request whose cache key hits the LRU result cache — a
      dict lookup returning the stored factors bit-identical;
-  3. then declared rank-1 refreshes (``refresh_of`` + ``update``)
-     whose base is still cached take the ``repro.api.refresh_rank1``
-     fast path — one projection contact, no power passes;
+  3. then declared rank-b refreshes (``refresh_of`` + ``update``
+     and/or ``mu_prev`` for the mean-shift correction) whose base is
+     still cached take the ``repro.api.refresh_block`` fast path —
+     one projection contact, no power passes (rank-1 is the b=1
+     case); an evicted base falls through to a full solve with
+     ``refreshed=False`` on the response;
   4. then up to ``batch`` *coalescible* small dense jobs — same
      (shape, dtype, k, K, q, schedule, rule, shift-mode) signature —
      fill the device slots and run as ONE vmapped solve
@@ -378,13 +381,15 @@ class FactorServer:
         t0 = time.perf_counter()
         req = it.req
         try:
-            if req.refresh_of is not None and req.update is not None:
+            if req.refresh_of is not None and (
+                    req.update is not None or req.mu_prev is not None):
                 base = self.cache.get_by_fp(req.refresh_of)
                 if base is not None:
-                    u, w = req.update
-                    res, rep = api.refresh_rank1(
-                        base[0], req.matrix, u, w, mu=req.mu,
-                        engine=self.engine)
+                    U_b, W_b = (req.update if req.update is not None
+                                else (None, None))
+                    res, rep = api.refresh_block(
+                        base[0], req.matrix, U_b, W_b, mu=req.mu,
+                        mu_prev=req.mu_prev, engine=self.engine)
                     jax.block_until_ready(res.S)
                     return self._finish(it, res, rep, t0=t0,
                                         t1=time.perf_counter(),

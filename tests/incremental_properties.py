@@ -1,0 +1,243 @@
+"""Shared property checks for the incremental-factorization layer
+(DESIGN.md §17): warm-started refreshes and rank-b block updates.
+
+Each ``check_*`` below is one invariant, parameterized over matrix
+families, update widths and seeds, asserted by BOTH suites:
+``tests/test_incremental.py`` runs them over a fixed seed grid (always
+runnable — no extra deps) and ``tests/test_properties.py`` hammers them
+through hypothesis in CI (where hypothesis is a hard dependency).  One
+implementation means a tolerance calibrated here cannot drift between
+the two suites.
+
+Families: the refresh-matches-scratch checks use *exact* low-rank
+matrices with the base rank chosen to cover the updated matrix
+(``k >= rank(X) + b``) — there both the refreshed and the from-scratch
+factors reconstruct to float32 roundoff, so a 1e-5 relative comparison
+is meaningful.  The warm-iteration check uses low-rank + noise, where
+the power loop genuinely has work to do and the stop rule genuinely
+fires.  ``CERT_SLACK`` is shared with the range-finder suite: the
+refresh certificate is the same exact identity evaluated in float32.
+
+Not named ``test_*`` so pytest does not collect it as a suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import rangefinder_properties as rf_props
+from repro import api
+from repro.core import (PVEStop, qr_block_update, qr_mean_shift_update,
+                        qr_rank1_update, warm_omega)
+from repro.data import CSRMatrix
+
+CERT_SLACK = rf_props.CERT_SLACK
+
+#: refresh-vs-scratch agreement on exactly-covered updates: both sides
+#: are float32-roundoff reconstructions of the same matrix, so their
+#: gap is pure accumulation noise — same budget as the range-finder
+#: suite's adaptive-vs-fixed comparison.
+MATCH_TOL = 1e-5
+
+
+def _wrap_new(X: np.ndarray, kind: str):
+    """The single-device operator families a refresh contact can hit:
+    the range-finder suite's dense / sparse(BCOO) / out-of-core blocked
+    trio plus the CSR matrix the sparse workloads serve."""
+    if kind == "csr":
+        return CSRMatrix.from_dense(X)
+    return rf_props._wrap(X, kind)
+
+
+def _rel(X: np.ndarray, res) -> float:
+    return float(np.linalg.norm(X - np.asarray(res.reconstruct()))
+                 / np.linalg.norm(X))
+
+
+def check_block_update_matches_scratch(m: int, n: int, r: int, b: int,
+                                       seed: int,
+                                       kind: str = "dense") -> None:
+    """forall exact low-rank X and declared rank-b update: refresh_block
+    of the cached base equals the from-scratch factorization of
+    ``X + U_b W_b^T`` to 1e-5 relative (base k covers the update, so
+    both sides are exact), runs zero power iterations, and its
+    certificate covers the true error — on dense, sparse, blocked and
+    CSR operators."""
+    X = rf_props.exact_lowrank_matrix(m, n, r, seed)     # rank <= r+1
+    k = r + 1 + b
+    base, _ = api.factorize(X, k, q=2, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    U_b = rng.standard_normal((m, b)).astype(np.float32)
+    W_b = rng.standard_normal((n, b)).astype(np.float32)
+    Xn = X + U_b @ W_b.T
+    res, rep = api.refresh_block(base, _wrap_new(Xn, kind), U_b, W_b)
+    assert int(rep.iters_run) == 0          # no power passes by design
+    assert rep.k_found == k == res.S.shape[0]
+    rel = _rel(Xn, res)
+    assert rel <= MATCH_TOL, f"{kind}: refresh err {rel:.2e}"
+    # certificate honest: min-0 gap to the true error (the identity is
+    # exact; only float32 cancellation separates them)
+    cert = float(rep.posterior_rel_err)
+    assert rel <= cert + CERT_SLACK, \
+        f"{kind}: certificate {cert:.2e} does not cover {rel:.2e}"
+    scratch, _ = api.factorize(Xn, k, q=2, seed=seed + 7)
+    gap = (np.linalg.norm(np.asarray(res.reconstruct())
+                          - np.asarray(scratch.reconstruct()))
+           / np.linalg.norm(Xn))
+    assert gap <= MATCH_TOL, f"{kind}: refresh vs scratch gap {gap:.2e}"
+
+
+def check_mean_shift_matches_recenter(m: int, n: int, r: int, seed: int,
+                                      kind: str = "dense") -> None:
+    """forall exact low-rank X with the column mean moved from mu to
+    mu': the pure mean-shift refresh (U_b=None, mu_prev=mu) equals
+    recentering from scratch with mu' to 1e-5 relative — the rank-1
+    correction ``-(mu'-mu) 1^T`` folded into the cached factors IS the
+    recentered factorization."""
+    X = rf_props.exact_lowrank_matrix(m, n, r, seed)
+    mu_old = X.mean(axis=1).astype(np.float32)
+    # Xbar_old is exactly rank <= r (the offset lives in the column
+    # space of A); the shift moves it by one rank-1 term.
+    k = r + 1
+    base, _ = api.factorize(X, k, q=2, mu=mu_old, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    mu_new = (mu_old + rng.standard_normal(m)).astype(np.float32)
+    res, rep = api.refresh_block(base, _wrap_new(X, kind), None, None,
+                                 mu=mu_new, mu_prev=mu_old)
+    Xbar_new = X - mu_new[:, None]
+    rel = _rel(Xbar_new, res)
+    assert rel <= MATCH_TOL, f"{kind}: mean-shift refresh err {rel:.2e}"
+    assert rel <= float(rep.posterior_rel_err) + CERT_SLACK
+    scratch, _ = api.factorize(X, k, q=2, mu=mu_new, seed=seed + 7)
+    gap = (np.linalg.norm(np.asarray(res.reconstruct())
+                          - np.asarray(scratch.reconstruct()))
+           / np.linalg.norm(Xbar_new))
+    assert gap <= MATCH_TOL, \
+        f"{kind}: mean-shift vs recenter gap {gap:.2e}"
+
+
+def check_block_b1_bitwise_rank1(m: int, K: int, seed: int) -> None:
+    """forall Q R u v: qr_block_update with a width-1 block is
+    *bit-identical* to qr_rank1_update — vector and (.,1) spellings
+    both — the property the serving layer's rank-1 refresh lane leans
+    on when it routes through the block path."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    Q, R = jnp.asarray(Q), jnp.asarray(R)
+    u = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    Q1, R1 = qr_rank1_update(Q, R, u, v)
+    for spelling in ((u, v), (u[:, None], v[:, None])):
+        Q2, R2 = qr_block_update(Q, R, *spelling)
+        assert bool(jnp.all(Q1 == Q2)) and bool(jnp.all(R1 == R2)), \
+            "qr_block_update(b=1) must be bit-identical to " \
+            "qr_rank1_update"
+    # b=0 leaves the factors untouched (also bitwise)
+    Q0, R0 = qr_block_update(Q, R, jnp.zeros((m, 0)), jnp.zeros((K, 0)))
+    assert bool(jnp.all(Q0 == Q)) and bool(jnp.all(R0 == R))
+
+
+def check_refresh_rank1_is_block_b1(m: int, n: int, r: int,
+                                    seed: int) -> None:
+    """forall base and rank-1 update: refresh_rank1 == refresh_block
+    at b=1, bitwise (the delegation contract the server relies on)."""
+    X = rf_props.exact_lowrank_matrix(m, n, r, seed)
+    base, _ = api.factorize(X, r + 2, q=2, seed=seed)
+    rng = np.random.default_rng(seed + 3)
+    u = rng.standard_normal(m).astype(np.float32)
+    w = rng.standard_normal(n).astype(np.float32)
+    Xn = X + np.outer(u, w)
+    ra, rep_a = api.refresh_rank1(base, Xn, u, w)
+    rb, rep_b = api.refresh_block(base, Xn, u, w)
+    for a, b_ in ((ra.U, rb.U), (ra.S, rb.S), (ra.Vt, rb.Vt)):
+        assert bool(jnp.all(a == b_))
+    assert float(rep_a.posterior_rel_err) == \
+        float(rep_b.posterior_rel_err)
+
+
+def check_mean_shift_qr_parity(m: int, K: int, seed: int) -> None:
+    """forall Q R, mu -> mu': qr_mean_shift_update returns a thin QR of
+    ``QR - (mu'-mu) v^T`` with orthonormal Q' (and mu_old=None treats
+    the base as unshifted)."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    mu_old = rng.standard_normal(m).astype(np.float32)
+    mu_new = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+    Q2, R2 = qr_mean_shift_update(jnp.asarray(Q), jnp.asarray(R),
+                                  mu_old, mu_new, jnp.asarray(v))
+    target = A - np.outer(mu_new - mu_old, v)
+    scale = max(1.0, float(np.abs(target).max()))
+    assert np.abs(np.asarray(Q2 @ R2) - target).max() < 1e-4 * scale * m
+    assert np.abs(np.asarray(Q2.T @ Q2) - np.eye(K)).max() < 1e-4 * m
+    # mu_old=None == shifting an unshifted base by mu_new
+    Q3, R3 = qr_mean_shift_update(jnp.asarray(Q), jnp.asarray(R),
+                                  None, mu_new, jnp.asarray(v))
+    Q4, R4 = qr_mean_shift_update(jnp.asarray(Q), jnp.asarray(R),
+                                  np.zeros(m, np.float32), mu_new,
+                                  jnp.asarray(v))
+    assert bool(jnp.all(Q3 == Q4)) and bool(jnp.all(R3 == R4))
+
+
+def check_warm_refresh_never_slower(m: int, n: int, r: int,
+                                    noise: float, seed: int,
+                                    drift: float = 0.02) -> None:
+    """forall low-rank + noise X and a small drift dX: a PVE-stopped
+    refresh warm-started from X's factorization never takes more power
+    iterations on X + dX than the cold solve, and its certificate still
+    covers the true error (min-0 gap)."""
+    X0 = rf_props.lowrank_noise_matrix(m, n, r, noise, seed)
+    prior, _ = api.factorize(X0, r, q=6, stop=PVEStop(1e-2), seed=seed)
+    rng = np.random.default_rng(seed + 4)
+    X1 = (X0 + drift * rng.standard_normal((m, n))).astype(np.float32)
+    stop = PVEStop(1e-2)
+    cold, crep = api.factorize(X1, r, q=8, stop=stop, seed=seed + 1)
+    warm, wrep = api.factorize(X1, r, q=8, stop=stop, seed=seed + 1,
+                               warm_start=prior)
+    assert int(wrep.iters_run) <= int(crep.iters_run), \
+        f"warm took {int(wrep.iters_run)} iters vs cold " \
+        f"{int(crep.iters_run)}"
+    rel = _rel(X1, warm)
+    assert rel <= float(wrep.posterior_rel_err) + CERT_SLACK, \
+        f"warm certificate {float(wrep.posterior_rel_err):.2e} does " \
+        f"not cover true error {rel:.2e}"
+
+
+def check_warm_cold_bit_identity(m: int, n: int, k: int,
+                                 seed: int) -> None:
+    """forall X: factorize(warm_start=None) is bit-identical to the
+    plain cold call, and warm_omega with no prior is bit-identical to
+    the cold Gaussian draw — warm starts change nothing unless a prior
+    is actually given."""
+    X = rf_props.lowrank_noise_matrix(m, n, k, 0.1, seed)
+    a, _ = api.factorize(X, k, q=2, seed=seed)
+    b, _ = api.factorize(X, k, q=2, seed=seed, warm_start=None)
+    for x, y in ((a.U, b.U), (a.S, b.S), (a.Vt, b.Vt)):
+        assert bool(jnp.all(x == y))
+    key = jax.random.PRNGKey(seed % 4099)
+    cold = jax.random.normal(key, (n, 2 * k), dtype=jnp.float32)
+    assert bool(jnp.all(warm_omega(key, n, 2 * k, jnp.float32) == cold))
+
+
+def check_warm_omega_contract(n: int, K: int, k_prior: int,
+                              seed: int) -> None:
+    """warm_omega's leading columns ARE the prior (truncated to K-1
+    when wider — at least one fresh Gaussian column always remains),
+    the tail is the fold_in(key, k_used) fresh draw, and a
+    wrong-orientation prior raises."""
+    rng = np.random.default_rng(seed)
+    Vt = rng.standard_normal((k_prior, n)).astype(np.float32)
+    key = jax.random.PRNGKey(seed % 4099)
+    omega = warm_omega(key, n, K, jnp.float32, Vt)
+    assert omega.shape == (n, K)
+    k_used = min(k_prior, K - 1)
+    assert bool(jnp.all(omega[:, :k_used] == jnp.asarray(Vt[:k_used]).T))
+    fresh = jax.random.normal(jax.random.fold_in(key, k_used),
+                              (n, K - k_used), dtype=jnp.float32)
+    assert bool(jnp.all(omega[:, k_used:] == fresh))
+    try:
+        warm_omega(key, n, K, jnp.float32, Vt.T)   # (n, k_prior): wrong
+        assert n == k_prior, "wrong-orientation prior must raise"
+    except ValueError:
+        pass

@@ -316,3 +316,55 @@ def test_serve_cli_smoke(capsys):
     out = capsys.readouterr().out
     assert "served 7 requests" in out
     assert "cache hits 1" in out
+
+
+def test_block_refresh_lane_with_mean_shift():
+    """The refresh lane is rank-b: a request declaring a rank-2 update
+    plus a moved column mean takes the refresh_block fast path
+    (refreshed=True, zero power iterations) and matches the
+    from-scratch factorization of the recentered new matrix; a pure
+    mean-shift declaration (update=None, mu_prev only) rides the same
+    lane; with the base evicted both fall back to the full solve with
+    refreshed=False."""
+    rng = np.random.default_rng(91)
+    m, n, r = 40, 30, 4
+    A = (rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+         + 2.0).astype(np.float32)
+    k = r + 1 + 2                     # covers rank(A), the block, mu'
+    mu_old = A.mean(axis=1).astype(np.float32)
+    U_b = rng.standard_normal((m, 2)).astype(np.float32)
+    W_b = rng.standard_normal((n, 2)).astype(np.float32)
+    Anew = A + U_b @ W_b.T
+    mu_new = Anew.mean(axis=1).astype(np.float32)
+
+    server = FactorServer(batch=2, cache_size=8)
+    server.submit(api.FactorizationRequest(A, k=k, q=2, mu=mu_old,
+                                           seed=1))
+    server.drain()
+    fp = api.fingerprint(A)
+    rid = server.submit(api.FactorizationRequest(
+        Anew, k=k, q=2, mu=mu_new, seed=1, refresh_of=fp,
+        update=(U_b, W_b), mu_prev=mu_old))
+    res = server.drain()[rid]
+    assert res.ok and res.refreshed
+    assert int(res.report.iters_run) == 0
+    Abar = Anew - mu_new[:, None]
+    got = np.asarray(res.result.U) @ np.diag(np.asarray(res.result.S)) \
+        @ np.asarray(res.result.Vt)
+    assert np.linalg.norm(got - Abar) / np.linalg.norm(Abar) < 1e-5
+
+    # pure mean-shift lane: same matrix, mean declared moved
+    rid2 = server.submit(api.FactorizationRequest(
+        A, k=k, q=2, mu=mu_new, seed=2, refresh_of=fp, mu_prev=mu_old))
+    res2 = server.drain()[rid2]
+    assert res2.ok and res2.refreshed
+
+    cold = FactorServer(batch=2, cache_size=8)    # base never cached
+    rid3 = cold.submit(api.FactorizationRequest(
+        Anew, k=k, q=2, mu=mu_new, seed=1, refresh_of=fp,
+        update=(U_b, W_b), mu_prev=mu_old))
+    res3 = cold.drain()[rid3]
+    assert res3.ok and not res3.refreshed         # full solve fallback
+    np.testing.assert_allclose(
+        np.asarray(res3.result.S), np.asarray(res.result.S),
+        rtol=1e-3, atol=1e-3 * float(np.asarray(res.result.S)[0]))

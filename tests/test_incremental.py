@@ -1,0 +1,173 @@
+"""Seed-grid suite over the shared incremental-factorization property
+checks (tests/incremental_properties.py) plus the API surface of the
+warm-start / block-refresh layer: always runnable with no extra deps —
+the hypothesis fuzz of the same invariants lives in
+tests/test_properties.py (DESIGN.md §17).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import incremental_properties as inc
+from repro import api
+from repro.core import (DenseOp, FixedRangeFinder, PCA,
+                        WarmStartRangeFinder, contact)
+from repro.core.schedule import resolve_shift
+
+KINDS = ["dense", "sparse", "blocked", "csr"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("b,seed", [(1, 0), (3, 1)])
+def test_block_update_matches_scratch(kind, b, seed):
+    inc.check_block_update_matches_scratch(40, 30, 4, b, seed, kind)
+
+
+def test_block_update_wide_block():
+    # b wider than the base rank: the update dominates the refresh
+    inc.check_block_update_matches_scratch(48, 36, 3, 6, 5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_mean_shift_matches_recenter(kind):
+    inc.check_mean_shift_matches_recenter(40, 30, 4, 2, kind)
+
+
+@pytest.mark.parametrize("m,K,seed", [(16, 4, 0), (64, 16, 1),
+                                      (33, 7, 2)])
+def test_block_b1_bitwise_rank1(m, K, seed):
+    inc.check_block_b1_bitwise_rank1(m, K, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_refresh_rank1_is_block_b1(seed):
+    inc.check_refresh_rank1_is_block_b1(40, 30, 4, seed)
+
+
+@pytest.mark.parametrize("m,K,seed", [(24, 5, 0), (50, 9, 1)])
+def test_mean_shift_qr_parity(m, K, seed):
+    inc.check_mean_shift_qr_parity(m, K, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_warm_refresh_never_slower(seed):
+    inc.check_warm_refresh_never_slower(48, 36, 5, 0.3, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_warm_cold_bit_identity(seed):
+    inc.check_warm_cold_bit_identity(36, 28, 5, seed)
+
+
+@pytest.mark.parametrize("n,K,k_prior", [(30, 8, 4), (30, 8, 12),
+                                         (20, 6, 5)])
+def test_warm_omega_contract(n, K, k_prior):
+    inc.check_warm_omega_contract(n, K, k_prior, 11)
+
+
+# ------------------------------------------------------------ API surface
+
+
+def _lowrank(m=40, n=30, r=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+            + 2.0).astype(np.float32)
+
+
+def test_factorize_warm_start_accepts_all_prior_forms():
+    """FactorizationResult, the (SVDResult, report) pair, a bare
+    SVDResult and a raw Vt all name the same prior — identical warm
+    factors from identical keys."""
+    X = _lowrank()
+    prior, rep = api.factorize(X, 4, q=2, seed=0)
+    X2 = X + 0.01 * np.random.default_rng(1) \
+        .standard_normal(X.shape).astype(np.float32)
+    wrapped = api.FactorizationResult(result=prior, report=rep)
+    runs = [api.factorize(X2, 4, q=1, seed=1, warm_start=w)[0]
+            for w in (prior, (prior, rep), prior.Vt, wrapped)]
+    for other in runs[1:]:
+        for a, b in ((runs[0].U, other.U), (runs[0].S, other.S),
+                     (runs[0].Vt, other.Vt)):
+            assert bool(jnp.all(a == b))
+
+
+def test_factorize_warm_start_validation():
+    X = _lowrank()
+    prior, _ = api.factorize(X, 4, q=2, seed=0)
+    with pytest.raises(ValueError, match="warm_start"):
+        api.factorize(X, tol=1e-2, warm_start=prior)
+    with pytest.raises(ValueError, match="no factors"):
+        api.factorize(X, 4, warm_start=api.FactorizationResult(
+            result=None, report=None, error="boom"))
+
+
+def test_refresh_block_validation():
+    X = _lowrank()
+    base, _ = api.factorize(X, 4, q=2, seed=0)
+    m, n = X.shape
+    with pytest.raises(ValueError, match="matching update widths"):
+        api.refresh_block(base, X, np.zeros((m, 2), np.float32),
+                          np.zeros((n, 3), np.float32))
+    with pytest.raises(ValueError, match="together"):
+        api.refresh_block(base, X, np.zeros((m, 2), np.float32), None)
+    with pytest.raises(ValueError, match="empty update"):
+        api.refresh_block(base, X, None, None)
+
+
+def test_pca_warm_start_refresh():
+    """PCA.fit(warm_start=prior SVDResult / Vt) matches the cold fit's
+    subspace on a drifted matrix; a fitted PCA or a tol= fit is
+    rejected with an actionable error."""
+    X = _lowrank(seed=5)
+    cold = PCA(k=4, q=4).fit(jnp.asarray(X), key=jax.random.PRNGKey(0))
+    prior, _ = api.factorize(X, 4, q=4, center=True, seed=0)
+    X2 = X + 0.005 * np.random.default_rng(6) \
+        .standard_normal(X.shape).astype(np.float32)
+    warm = PCA(k=4, q=1).fit(jnp.asarray(X2), key=jax.random.PRNGKey(1),
+                             warm_start=prior)
+    # same principal subspace: projector gap, not component signs
+    P_c = np.asarray(cold.components_.T @ cold.components_)
+    P_w = np.asarray(warm.components_.T @ warm.components_)
+    assert np.abs(P_c - P_w).max() < 5e-2
+    with pytest.raises(TypeError, match="fitted PCA"):
+        PCA(k=4).fit(jnp.asarray(X2), key=jax.random.PRNGKey(1),
+                     warm_start=cold)
+    with pytest.raises(ValueError, match="tol"):
+        PCA(tol=1e-2).fit(jnp.asarray(X2), key=jax.random.PRNGKey(1),
+                          warm_start=prior)
+
+
+def test_warm_rangefinder_degenerates_to_fixed():
+    """WarmStartRangeFinder with no prior is bit-identical to
+    FixedRangeFinder — same draw, same contacts, same basis."""
+    X = jnp.asarray(_lowrank(seed=9))
+    eng = contact.get_engine()
+    op = DenseOp(X)
+    key = jax.random.PRNGKey(3)
+    mu, sched = resolve_shift(None, None)
+    kwargs = dict(key=key, k=4, q=1)
+    Q_fixed, _ = FixedRangeFinder(K=8).find(eng, op, mu, sched, None,
+                                            **kwargs)
+    Q_warm, _ = WarmStartRangeFinder(K=8).find(eng, op, mu, sched,
+                                               None, **kwargs)
+    assert bool(jnp.all(Q_fixed == Q_warm))
+    # and with a prior it is NOT the cold basis (the seed took hold)
+    prior, _ = api.factorize(np.asarray(X), 4, q=2, seed=0)
+    Q_seeded, _ = WarmStartRangeFinder(K=8, prior_Vt=prior.Vt).find(
+        eng, op, mu, sched, None, **kwargs)
+    assert not bool(jnp.all(Q_fixed == Q_seeded))
+
+
+def test_run_request_carries_mu_prev():
+    """FactorizationRequest grows the refresh declaration fields but
+    they stay out of the cache key — two requests differing only in
+    (refresh_of, update, mu_prev) share a cache identity."""
+    X = _lowrank()
+    r1 = api.FactorizationRequest(X, k=4, q=2, seed=0)
+    r2 = api.FactorizationRequest(
+        X, k=4, q=2, seed=0, refresh_of=api.fingerprint(X),
+        update=(np.zeros(X.shape[0], np.float32),
+                np.zeros(X.shape[1], np.float32)),
+        mu_prev=np.zeros(X.shape[0], np.float32))
+    assert api.request_cache_key(r1) == api.request_cache_key(r2)

@@ -25,6 +25,7 @@ else:
         "hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
+import incremental_properties as inc_props
 import rangefinder_properties as rf_props
 import stopping_properties as props
 from repro.core import qr_rank1_update, rsvd, srsvd
@@ -180,3 +181,64 @@ def test_logical_spec_never_reuses_axis(logical):
         axes = entry if isinstance(entry, tuple) else (entry,)
         used.extend(axes)
     assert len(used) == len(set(used))      # each mesh axis at most once
+
+
+# ------------------------------------------------------- incremental layer
+# (shared impls: tests/incremental_properties.py; seed grid:
+# tests/test_incremental.py — same invariants, same tolerances)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(24, 64), n=st.integers(16, 48), r=st.integers(2, 6),
+       b=st.integers(1, 5), seed=st.integers(0, 2**16),
+       kind=st.sampled_from(["dense", "sparse", "blocked", "csr"]))
+def test_block_refresh_matches_scratch(m, n, r, b, seed, kind):
+    """forall exact low-rank X, rank-b update: refresh_block ==
+    from-scratch factorization to 1e-5 on every operator family, with
+    an honest zero-iteration certificate."""
+    inc_props.check_block_update_matches_scratch(m, n, r, b, seed, kind)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(24, 64), n=st.integers(16, 48), r=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+def test_mean_shift_refresh_matches_recenter(m, n, r, seed):
+    """forall X with a moved column mean: folding -(mu'-mu)1^T into the
+    cached factors == recentering from scratch."""
+    inc_props.check_mean_shift_matches_recenter(m, n, r, seed)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(8, 60), K=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_qr_block_update_b1_bitwise(m, K, seed):
+    """forall Q R u v: the width-1 block update is bit-identical to the
+    rank-1 update (and b=0 is the identity)."""
+    inc_props.check_block_b1_bitwise_rank1(max(m, K), K, seed)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(10, 50), K=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_qr_mean_shift_parity(m, K, seed):
+    """forall Q R, mu -> mu': qr_mean_shift_update == thin QR of
+    QR - (mu'-mu) v^T with orthonormal Q'."""
+    inc_props.check_mean_shift_qr_parity(m, min(K, m), seed)
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), noise=st.floats(0.1, 0.5))
+def test_warm_refresh_never_more_iterations(seed, noise):
+    """forall drifted X: a PVE-stopped warm refresh never runs more
+    power iterations than the cold solve, certificate still honest."""
+    inc_props.check_warm_refresh_never_slower(48, 36, 5, noise, seed)
+
+
+@settings(**_SETTINGS)
+@given(n=st.integers(8, 60), K=st.integers(2, 12),
+       k_prior=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_warm_omega_seeding_contract(n, K, k_prior, seed):
+    """warm_omega: prior rows lead (truncated to K-1), fold_in fresh
+    tail, no-prior bit-identical to the cold draw."""
+    inc_props.check_warm_omega_contract(n, K, k_prior, seed)
+    inc_props.check_warm_cold_bit_identity(24, n, min(K, 4), seed)

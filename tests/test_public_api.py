@@ -18,8 +18,9 @@ from repro.analysis import (LintError, ModuleFile, Violation, all_rules,
                             run_lint)
 from repro.api import (FactorizationRequest, FactorizationResult,
                        Fingerprint, batched_trace_count, factorize,
-                       factorize_batched, fingerprint, refresh_rank1,
-                       request_cache_key, run_request, split_batched)
+                       factorize_batched, fingerprint, refresh_block,
+                       refresh_rank1, request_cache_key, run_request,
+                       split_batched)
 from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
                         save_checkpoint)
 from repro.core import (PCA, BlockedAdaptiveRangeFinder, BlockedOp,
@@ -36,9 +37,11 @@ from repro.core import (PCA, BlockedAdaptiveRangeFinder, BlockedOp,
                         dist_col_mean, dist_pca_fit, dist_pca_fit_streamed,
                         dist_srsvd, dist_srsvd_streamed,
                         dist_srsvd_tol_streamed, expected_error_bound,
-                        get_engine, qr_rank1_update, register_backend,
+                        get_engine, qr_block_update, qr_mean_shift_update,
+                        qr_rank1_update, register_backend,
                         register_sparse_backend, rsvd, srsvd,
-                        srsvd_batched, srsvd_tol, svd_jit, tsqr)
+                        srsvd_batched, srsvd_tol, svd_jit, tsqr,
+                        warm_omega, WarmStartRangeFinder)
 from repro.data import (ColumnBlockLoader, CSRColumnBlockSource, CSRMatrix,
                         DataPipeline, PrefetchingBlockSource,
                         RowBlockLoader, SparseBlock, open_csr,
@@ -58,9 +61,11 @@ _PACKAGES = {
         ShardedBlockedOp, SparseOp, as_linop, ContactEngine,
         available_backends, available_sparse_backends, default_backend,
         get_engine, register_backend, register_sparse_backend,
-        qr_rank1_update, SVDResult, expected_error_bound, rsvd, srsvd,
+        qr_rank1_update, qr_block_update, qr_mean_shift_update,
+        SVDResult, expected_error_bound, rsvd, srsvd,
         srsvd_batched, batched_trace_count, svd_jit, PCA, Fingerprint,
         RangeFinder, FixedRangeFinder, BlockedAdaptiveRangeFinder,
+        WarmStartRangeFinder, warm_omega,
         GrowthState, srsvd_tol, dist_srsvd_tol_streamed,
         array_token, fingerprint, dist_col_mean, dist_pca_fit,
         dist_pca_fit_streamed, dist_srsvd, dist_srsvd_streamed, tsqr,
@@ -71,7 +76,8 @@ _PACKAGES = {
     repro.api: [
         FactorizationRequest, FactorizationResult, Fingerprint,
         batched_trace_count, factorize, factorize_batched, fingerprint,
-        refresh_rank1, request_cache_key, run_request, split_batched,
+        refresh_block, refresh_rank1, request_cache_key, run_request,
+        split_batched,
     ],
     repro.optim: [AdamWConfig, adamw_init, adamw_update, CompressConfig,
                   comm_bytes, compress_state_init, compressed_pod_mean,

@@ -63,3 +63,114 @@ def test_qr_update_jit_compatible(rng):
                     jnp.asarray(v))
     np.testing.assert_allclose(np.asarray(Q2) @ np.asarray(R2),
                                A + np.outer(u, v), atol=2e-5)
+
+
+# ---------------------------------------------------------------------
+# Downdate / singular-R edges (DESIGN.md §16 caveat): the Givens sweeps
+# must keep Q' orthonormal and Q' R' == Q R + u v^T to roundoff even
+# when R carries exactly-zero pivots — the `_givens` tiny-guard passes
+# identity rotations through them.  What the update *cannot* do (rotate
+# energy into null directions a singular sketch never had) is a caller
+# contract, documented and handled by srsvd's use_qr_update=False
+# spelling; these tests pin the guard itself.
+
+
+def _assert_thin_qr_of(Q2, R2, target, K, tol=5e-5):
+    Q2, R2 = np.asarray(Q2), np.asarray(R2)
+    scale = max(1.0, np.abs(target).max())
+    np.testing.assert_allclose(Q2 @ R2, target, atol=tol * scale)
+    np.testing.assert_allclose(Q2.T @ Q2, np.eye(K), atol=tol)
+    assert np.abs(np.tril(R2, -1)).max() < tol * scale
+
+
+@pytest.mark.parametrize("zeros", [1, 3, 6])
+def test_qr_update_exactly_singular_diagonal_R(rng, zeros):
+    """R = diag(S) with a run of exactly-zero pivots — the shape every
+    refresh of a base factored at K > rank hits (base S has zero tail).
+    The update must stay an orthonormal thin QR of QR + uv^T."""
+    m, K = 40, 8
+    Q, _ = np.linalg.qr(rng.standard_normal((m, K)).astype(np.float32))
+    s = np.concatenate([np.linspace(9.0, 1.0, K - zeros),
+                        np.zeros(zeros)]).astype(np.float32)
+    R = np.diag(s)
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    _assert_thin_qr_of(Q2, R2, Q @ R + np.outer(u, v), K)
+
+
+def test_qr_update_zero_rows_in_R(rng):
+    """Zero *rows* of a non-diagonal R (deficient leading block)."""
+    m, K = 30, 6
+    Q, _ = np.linalg.qr(rng.standard_normal((m, K)).astype(np.float32))
+    R = np.triu(rng.standard_normal((K, K))).astype(np.float32)
+    R[2] = 0.0
+    R[4] = 0.0
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(K).astype(np.float32)
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    _assert_thin_qr_of(Q2, R2, Q @ R + np.outer(u, v), K)
+
+
+def test_qr_downdate_to_singular(rng):
+    """A rank-1 *downdate* that makes the result exactly singular:
+    subtract the last column's contribution entirely.  The sweeps must
+    not divide by the vanishing pivot (tiny-guard) and the returned R'
+    must expose the singularity rather than hide it."""
+    m, K = 32, 5
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    # u v^T = -(A e_K) e_K^T: column K of A + uv^T is exactly zero
+    u = (-A[:, K - 1]).astype(np.float32)
+    v = np.zeros(K, np.float32)
+    v[K - 1] = 1.0
+    Q2, R2 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(u), jnp.asarray(v))
+    target = A + np.outer(u, v)
+    _assert_thin_qr_of(Q2, R2, target, K)
+    # the downdated matrix is singular and R' says so
+    assert np.abs(np.asarray(R2)[:, K - 1]).max() < 5e-5 * \
+        max(1.0, np.abs(A).max())
+
+
+def test_qr_block_downdate(rng):
+    """Rank-b block *downdate* (negative update) through the block
+    path, including one width — the refresh lane's retraction case."""
+    from repro.core import qr_block_update
+    m, K, b = 36, 7, 3
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    U_b = rng.standard_normal((m, b)).astype(np.float32)
+    W_b = rng.standard_normal((K, b)).astype(np.float32)
+    Q2, R2 = qr_block_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(-U_b), jnp.asarray(W_b))
+    _assert_thin_qr_of(Q2, R2, A - U_b @ W_b.T, K)
+
+
+def test_qr_block_update_width_mismatch_raises(rng):
+    from repro.core import qr_block_update
+    m, K = 20, 4
+    Q, R = np.linalg.qr(rng.standard_normal((m, K)).astype(np.float32))
+    with pytest.raises(ValueError, match="matching update widths"):
+        qr_block_update(jnp.asarray(Q), jnp.asarray(R),
+                        jnp.zeros((m, 2)), jnp.zeros((K, 3)))
+
+
+def test_qr_mean_shift_update_folds_shift(rng):
+    """qr_mean_shift_update == rank-1 update with u = -(mu'-mu): the
+    paper's line-6 shift algebra applied incrementally."""
+    from repro.core import qr_mean_shift_update
+    m, K = 28, 6
+    A = rng.standard_normal((m, K)).astype(np.float32)
+    Q, R = np.linalg.qr(A)
+    mu_old = rng.standard_normal(m).astype(np.float32)
+    mu_new = rng.standard_normal(m).astype(np.float32)
+    Q2, R2 = qr_mean_shift_update(jnp.asarray(Q), jnp.asarray(R),
+                                  mu_old, mu_new)
+    d = mu_new - mu_old
+    Q3, R3 = qr_rank1_update(jnp.asarray(Q), jnp.asarray(R),
+                             jnp.asarray(-d), jnp.ones(K))
+    assert bool(jnp.all(Q2 == Q3)) and bool(jnp.all(R2 == R3))
+    _assert_thin_qr_of(Q2, R2, A - np.outer(d, np.ones(K)), K)
